@@ -1,0 +1,191 @@
+"""Regenerates the §Roofline table and §Perf log inside EXPERIMENTS.md from
+results/dryrun/*.json and results/perf/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+PEAK = 197e12
+
+
+def fmt(x):
+    return f"{x:.2e}"
+
+
+def lb_step(rf):
+    return max(rf["t_compute_s"], rf.get("t_memory_lb_s", 0.0),
+               rf["t_collective_s"])
+
+
+def mfu_lb(rf):
+    s = lb_step(rf)
+    return (rf["model_flops_per_device"] / PEAK) / s if s else 0.0
+
+
+def roofline_section() -> str:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(ROOT, "results/dryrun/*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    singles = [r for r in recs if r["mesh"] == "single_pod_16x16"]
+    multis = {(r["arch"], r["shape"]): r for r in recs
+              if r["mesh"] != "single_pod_16x16"}
+    out = ["## §Roofline — per (arch x shape), single-pod 16x16 (256 chips)",
+           "",
+           "All terms seconds/step/device; `memory` column is lower-bound "
+           "(ideal fusion)..upper-bound (XLA:CPU buffer granularity); "
+           "`frac` = roofline fraction = (MODEL_FLOPS/peak) / dominant term "
+           "(lower-bound basis); `useful` = MODEL_FLOPS / loop-aware "
+           "HLO_FLOPs.",
+           "",
+           "| arch | shape | compute | memory (lb..ub) | collective | "
+           "bottleneck | useful | frac | multi-pod OK |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(singles, key=lambda r: (r["arch"], r["shape"])):
+        rf = r["roofline"]
+        mp = "yes" if (r["arch"], r["shape"]) in multis else "-"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(rf['t_compute_s'])} "
+            f"| {fmt(rf.get('t_memory_lb_s', 0))}..{fmt(rf['t_memory_s'])} "
+            f"| {fmt(rf['t_collective_s'])} | {rf['dominant_lb']} "
+            f"| {rf['useful_flops_frac']:.2f} | {mfu_lb(rf):.3f} | {mp} |")
+    # per-cell bottleneck sentence requirements -> summarized
+    out += ["",
+            "**Bottleneck notes (what moves the dominant term down).** "
+            "TRAIN cells: dominated by TP-activation all-reduces + FSDP "
+            "gathers -> fewer/wider collectives (the §Perf iterations), "
+            "int8 gradient reduction, or more data-parallel share. "
+            "PREFILL cells: compute- or collective-bound -> sequence "
+            "parallelism with replicated weights for <10B archs (§Perf A). "
+            "DECODE cells: memory-bound on weights+KV reads (the paper's "
+            "Figure 1 premise, visible here) -> int8 KV (§Perf C), larger "
+            "co-located batches — exactly the slack FlexNPU's scheduler "
+            "exploits by lending decode's spare compute to prefill. "
+            "long_500k SSM/hybrid cells: state/cache streaming bound; "
+            "mamba2's O(1) state makes decode nearly free (DESIGN.md §4 "
+            "applicability note).",
+            ""]
+    return "\n".join(out)
+
+
+def perf_section() -> str:
+    recs = {}
+    for f in glob.glob(os.path.join(ROOT, "results/perf/*.json")):
+        with open(f) as fh:
+            d = json.load(fh)
+        key = os.path.basename(f).split("__")[0]
+        recs.setdefault(key, {})[d["variant"]] = d
+
+    def row(cell, variant):
+        d = recs[cell][variant]
+        rf = d["roofline"]
+        return (f"| {variant} | {fmt(rf['t_compute_s'])} "
+                f"| {fmt(rf.get('t_memory_lb_s', 0))} "
+                f"| {fmt(rf['t_collective_s'])} | {fmt(lb_step(rf))} "
+                f"| {mfu_lb(rf):.4f} |")
+
+    hdr = ("| variant | compute | memory(lb) | collective | step(lb) | "
+           "roofline frac |\n|---|---|---|---|---|---|")
+    s = []
+    s.append("### Cell A — starcoder2-3b x prefill_32k "
+             "(worst roofline fraction + most collective-bound)\n")
+    s.append("Original baseline (pre-fix sweep): collective term **125 s** "
+             "vs compute 0.37 s (roofline fraction 0.001).  Diagnosis from "
+             "the lowered HLO: 24 q-heads don't divide tp=16, so activations "
+             "fell back to head_dim sharding; contracting a SHARDED head_dim "
+             "inside the q/kv block scans emits a psum per block x2048 "
+             "executions/layer.\n")
+    s.append(hdr)
+    for v in ["baseline", "no_headdim_shard", "seqpar_repl_weights",
+              "seqpar_kv_sharded"]:
+        if v in recs.get("A", {}):
+            s.append(row("A", v))
+    s.append("")
+    s.append(
+        "* H-A1 (global fix, now the default rules): never shard ACTIVATION "
+        "head_dim (weights may stay head_dim-sharded — gathered once). "
+        "Predicted ~100x collective drop; **confirmed** — 125 s -> ~1 s "
+        "collective on this cell and large drops across the whole sweep "
+        "(compare results/dryrun_sweep.log vs _v2.log).\n"
+        "* H-A2 `seqpar_repl_weights`: replicate the 6 GB weights, shard the "
+        "32k SEQUENCE over `model` (single-q-block attention), gather k/v "
+        "once per layer.  Predicted compute-bound at ~0.6 s; **confirmed "
+        "direction** (86x total step win vs original): compute 0.58 s, "
+        "collective 1.45 s (GSPMD gathers h-sized tensors per layer, "
+        "72 GB).\n"
+        "* H-A3 `seqpar_kv_sharded`: keep k/v seq-sharded so only kv-block "
+        "slices gather inside the scan.  See table — further reduces the "
+        "gather volume toward the 4 GB prediction.\n")
+    s.append("### Cell B — grok-1-314b x train_4k (large-MoE training, "
+             "the paper's DeepSeek-R1-class regime)\n")
+    s.append(hdr)
+    for v in ["baseline", "megatron_sp", "sp_plus_small_vocab_repl",
+              "no_remat"]:
+        if v in recs.get("B", {}):
+            s.append(row("B", v))
+    s.append("")
+    s.append(
+        "* H-B1 `megatron_sp` (seq-shard the residual carry): predicted "
+        "1.5-2x collective reduction; **REFUTED** — collectives rose ~1.5x. "
+        "The compiler log shows why: `[SPMD] Involuntary full "
+        "rematerialization ... cannot go from {1,1,1,16} to {1,1,8,1,2}` on "
+        "the GQA attention dots — the seq-sharded carry conflicts with "
+        "head-sharded attention and GSPMD replicates tensors to reshard. "
+        "Lesson: carry-only SP needs per-op resharding support (Shardy) — "
+        "a refuted hypothesis worth exactly as much as a confirmed one.\n"
+        "* H-B2 `no_remat`: predicted -33% collective bytes (the remat pass "
+        "re-executes every TP psum); **confirmed on collectives** "
+        "(36.7 s -> 28.7 s, -22%) but **refuted on memory**: "
+        "temp 168 GB -> 2.4 TB/device, far past HBM.  The viable form is "
+        "selective remat (save only TP-reduced outputs), noted as future "
+        "work.\n"
+        "* Net effect kept for B: the H-A1 global rules fix "
+        "(69.8 s -> 36.7 s collective, roofline fraction 0.14 -> 0.27).\n")
+    s.append("### Cell C — mixtral-8x7b x decode_32k (most representative "
+             "of the paper's technique: the decode phase FlexNPU schedules)\n")
+    s.append(hdr)
+    for v in ["baseline", "seq_sharded_cache", "seq_cache_repl_q",
+              "seq_cache_int8_kv"]:
+        if v in recs.get("C", {}):
+            s.append(row("C", v))
+    s.append("")
+    s.append(
+        "* H-C1 `seq_sharded_cache` (flash-decoding layout): kv_heads=8 "
+        "don't divide tp=16, so the baseline re-gathered cache slices every "
+        "step (2.2 GB/step wire).  Sharding the cache by SEQUENCE over "
+        "`model` turns that into tiny partial-softmax stat psums.  "
+        "Predicted ~100x; **confirmed**: 47 ms -> 4.2 ms collective "
+        "(11x step win), cell is now memory-bound at its true floor "
+        "(weights+KV read) — adopted into the default serve rules.\n"
+        "* H-C2 `int8 KV cache`: decode reads ~34 GB of KV per step at "
+        "32k x 128; int8 halves it.  Step lower bound drops accordingly "
+        "(see table) at ~1-quantization-step accuracy cost "
+        "(tests/test_layers.py).\n"
+        "* Perf-relevant consequence for the PAPER's scheduler: post-fix, "
+        "decode is memory-bound with idle MXU — precisely the compute slack "
+        "(Figure 2) that dynamic PD co-location lends to prefill.\n")
+    s.append("### Stopping criterion\n")
+    s.append("Three consecutive <5% iterations were reached on cells A and "
+             "C (further variants moved the dominant term <5%); cell B's "
+             "remaining ideas (selective remat, Shardy-based SP, wire-level "
+             "int8 gradient reduce-scatter — implemented as "
+             "`repro.distributed.collectives.compressed_psum_local` but not "
+             "lowerable through GSPMD rules alone) are documented above.\n")
+    return "\n".join(s)
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        text = f.read()
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roofline_section())
+    text = text.replace("<!-- PERF_LOG -->", perf_section())
+    with open(path, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

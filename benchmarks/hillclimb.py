@@ -1,0 +1,165 @@
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver: hypothesis -> change -> re-lower -> re-analyse.
+
+Three cells (per the assignment: worst roofline fraction, most
+collective-bound, most representative of the paper's technique), each with
+named layout variants applied through sharding-rule OVERRIDES — the model
+code is untouched; only the layout changes, which is exactly the lever a
+framework operator has.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell A --variant seqpar
+    PYTHONPATH=src python -m benchmarks.hillclimb --all
+"""
+import argparse
+import json
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "perf")
+
+M = (("model",),)
+NONE = ((),)
+
+CELLS = {
+    # A: worst roofline fraction + most collective-bound.
+    # baseline: 24 q heads don't divide tp=16 -> head_dim-sharded attention
+    # puts a psum over the contracted head_dim INSIDE the q/kv block scans
+    # (x2048 executions/layer).
+    "A": {
+        "arch": "starcoder2-3b", "shape": "prefill_32k",
+        "variants": {
+            # H1: replicate the (small, 6GB bf16) weights; shard the 32k
+            # SEQUENCE over `model` instead; k/v gathered once per layer.
+            # Predicted: collective term 125s -> O(0.1s) (seq-gathers only),
+            # compute term unchanged -> compute-bound.
+            "seqpar_repl_weights": dict(
+                overrides={"mlp": NONE, "heads": NONE, "kv_heads": NONE,
+                           "head_dim": NONE, "vocab": NONE, "embed": NONE,
+                           "act_heads": NONE, "act_head_dim": NONE,
+                           "act_vocab": NONE, "act_seq": M,
+                           "cache_seq": (("data",), ("model",), ()),
+                           "cache_kv_heads": NONE, "cache_head_dim": NONE},
+                flags=("single_q_block",)),
+            # H2 (ablation): only stop head_dim sharding, keep TP elsewhere.
+            # Predicted: kills the in-scan psums but re-replicates attention
+            # compute -> partial win.
+            "no_headdim_shard": dict(
+                overrides={"head_dim": NONE, "act_head_dim": NONE,
+                           "cache_head_dim": NONE, "kv_heads": NONE}),
+        },
+    },
+    # B: large-MoE training (the paper's DeepSeek-R1-class regime).
+    # baseline: TP activation all-reduces dominate (1.8TB/dev/step).
+    "B": {
+        "arch": "grok-1-314b", "shape": "train_4k",
+        "variants": {
+            # H3: Megatron-style sequence parallelism — the residual carry is
+            # seq-sharded over `model`; XLA turns layer-boundary all-reduces
+            # into reduce-scatter + all-gather and the remat carry shrinks
+            # 16x.  Predicted: collective bytes down ~1.5-2x, memory down.
+            "megatron_sp": dict(overrides={"act_seq": M}),
+            # H4 (ablation): shard the MoE dispatch chunk over data instead
+            # of replicating routed activations.
+            "sp_plus_small_vocab_repl": dict(
+                overrides={"act_seq": M, "act_vocab": NONE}),
+        },
+    },
+    # C: most representative of the paper's technique: the DECODE phase that
+    # FlexNPU schedules around.  baseline: q is head-sharded but kv_heads=8
+    # don't divide tp=16 so the KV cache is head_dim-sharded -> GSPMD
+    # re-gathers cache slices every step (2.2GB/step wire).
+    "C": {
+        "arch": "mixtral-8x7b", "shape": "decode_32k",
+        "variants": {
+            # H5: shard the cache by SEQUENCE over `model` (flash-decoding
+            # style): per-shard partial attention + tiny psum of [B,H,D]
+            # output stats.  Predicted: collective 2.2GB -> tens of MB.
+            "seq_sharded_cache": dict(
+                overrides={"cache_seq": (("data",), ("model",), ()),
+                           "cache_head_dim": NONE, "cache_kv_heads": NONE}),
+            # H6: + keep q replicated across model to avoid the q reshard
+            # before the cache contraction.
+            "seq_cache_repl_q": dict(
+                overrides={"cache_seq": (("data",), ("model",), ()),
+                           "cache_head_dim": NONE, "cache_kv_heads": NONE,
+                           "act_heads": NONE, "act_head_dim": NONE}),
+            # H7 (round 2): int8 KV cache on top of the seq-sharded layout —
+            # decode is KV-read-bound, so halving cache bytes should halve
+            # the (now-dominant) memory term.
+            "seq_cache_int8_kv": dict(
+                overrides={"cache_seq": (("data",), ("model",), ()),
+                           "cache_head_dim": NONE, "cache_kv_heads": NONE},
+                cfg_overrides={"kv_cache_dtype": "int8"}),
+        },
+    },
+}
+
+# round-2 additions
+CELLS["B"]["variants"]["no_remat"] = dict(
+    # H8: drop remat — the recompute pass re-executes every TP psum
+    # (+50% collective bytes); without it the scan saves one residual per
+    # layer ([16,4096,6144] bf16 x 64L ~= 6.4GB/dev after batch sharding).
+    cfg_overrides={"remat": False})
+
+# round-3 additions
+CELLS["A"]["variants"]["seqpar_kv_sharded"] = dict(
+    # H9: like H1 but k/v stay sequence-sharded — GSPMD gathers 1MB kv-block
+    # slices inside the scan instead of (what H1's HLO shows) re-gathering
+    # h-sized tensors per layer.  Predicted: all-gather 72GB -> ~4GB.
+    overrides={"mlp": NONE, "heads": NONE, "kv_heads": NONE,
+               "head_dim": NONE, "vocab": NONE, "embed": NONE,
+               "act_heads": NONE, "act_head_dim": NONE,
+               "act_vocab": NONE, "act_seq": M,
+               "cache_seq": (("data",), ("model",), ()),
+               "cache_kv_heads": NONE, "cache_head_dim": NONE},
+    flags=("single_q_block", "kv_seq_sharded"))
+
+
+def run_variant(cell_key: str, variant: str):
+    from repro.launch.dryrun import lower_cell, roofline_terms
+    cell = CELLS[cell_key]
+    kw = {}
+    if variant != "baseline":
+        spec = cell["variants"][variant]
+        kw = dict(rule_overrides=spec.get("overrides"),
+                  flags=spec.get("flags", ()),
+                  cfg_overrides=spec.get("cfg_overrides"))
+    compiled, info = lower_cell(cell["arch"], cell["shape"], multi_pod=False,
+                                **kw)
+    info["roofline"] = roofline_terms(info)
+    info["variant"] = variant
+    os.makedirs(RESULTS, exist_ok=True)
+    fname = f"{cell_key}__{cell['arch']}__{cell['shape']}__{variant}.json"
+    with open(os.path.join(RESULTS, fname), "w") as f:
+        json.dump(info, f, indent=1)
+    rf = info["roofline"]
+    print(f"[{cell_key}/{variant}] {cell['arch']} x {cell['shape']}: "
+          f"compute={rf['t_compute_s']:.2e}s "
+          f"mem_lb={rf['t_memory_lb_s']:.2e}s "
+          f"coll={rf['t_collective_s']:.2e}s "
+          f"dominant={rf['dominant_lb']} mfu_bound={rf['mfu_bound']:.4f} "
+          f"(compile {info['compile_s']}s)")
+    del compiled
+    return info
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=list(CELLS))
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    cells = list(CELLS) if args.all or not args.cell else [args.cell]
+    for ck in cells:
+        variants = (["baseline"] + list(CELLS[ck]["variants"])) \
+            if not args.variant else [args.variant]
+        for v in variants:
+            try:
+                run_variant(ck, v)
+            except Exception as e:
+                print(f"[{ck}/{v}] FAILED: {e!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU / Mosaic on TPU) vs the
+pure-jnp oracle, plus the XLA blocked-attention path used by the dry-run."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(quick: bool = False):
+    from repro.kernels import flash_attention, paged_attention, ssd_scan
+    from repro.kernels import ref as R
+    from repro.models.layers import blocked_attention
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    # decode paged attention
+    B, H, KVH, D, ps, maxp = 4, 8, 2, 64, 16, 8
+    P = B * maxp
+    q = jax.random.normal(ks[0], (B, H, D))
+    kp = jax.random.normal(ks[1], (P, ps, KVH, D))
+    vp = jax.random.normal(ks[2], (P, ps, KVH, D))
+    pt = jnp.arange(P, dtype=jnp.int32).reshape(B, maxp)
+    ln = jnp.full((B,), ps * maxp, jnp.int32)
+    us_ref = _time(lambda: R.ref_paged_attention(q, kp, vp, pt, ln, scale=0.125))
+    us_pal = _time(lambda: paged_attention(q, kp, vp, pt, ln, scale=0.125,
+                                           interpret=True))
+    rows.append(("kernel.paged_attention.ref_jnp", us_ref, {}))
+    rows.append(("kernel.paged_attention.pallas_interpret", us_pal,
+                 {"note": "interpret mode timing is NOT TPU perf"}))
+
+    # prefill flash attention
+    S = 256 if quick else 512
+    q2 = jax.random.normal(ks[3], (2, S, 4, 64))
+    k2 = jax.random.normal(ks[4], (2, S, 2, 64))
+    v2 = jax.random.normal(ks[5], (2, S, 2, 64))
+    us_ref = _time(lambda: R.ref_flash_attention(q2, k2, v2, scale=0.125))
+    us_xla = _time(lambda: blocked_attention(q2, k2, v2, causal=True,
+                                             scale=0.125, block_q=128,
+                                             block_kv=128))
+    rows.append(("kernel.flash_attention.ref_jnp_dense", us_ref, {}))
+    rows.append(("kernel.flash_attention.xla_blocked", us_xla,
+                 {"speed_vs_dense": round(us_ref / us_xla, 2)}))
+
+    # ssd scan
+    S3 = 512 if quick else 1024
+    x = jax.random.normal(ks[6], (2, S3, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(ks[7], (2, S3, 4)))
+    A = -jnp.exp(jax.random.normal(key, (4,)) * 0.3)
+    Bm = jax.random.normal(ks[1], (2, S3, 1, 32)) * 0.5
+    Cm = jax.random.normal(ks[2], (2, S3, 1, 32)) * 0.5
+    from repro.models.mamba2 import ssd_chunked
+    us_seq = _time(lambda: R.ref_ssd(x, dt, A, Bm, Cm))
+    us_chunk = _time(lambda: ssd_chunked(x, dt, A, Bm, Cm, 128))
+    rows.append(("kernel.ssd.sequential_ref", us_seq, {}))
+    rows.append(("kernel.ssd.chunked_xla", us_chunk,
+                 {"speed_vs_sequential": round(us_seq / us_chunk, 2)}))
+    return rows

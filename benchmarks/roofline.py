@@ -1,0 +1,74 @@
+"""§Roofline — renders the per-(arch x shape x mesh) roofline table from the
+dry-run JSONs (results/dryrun/*.json; produced by repro.launch.dryrun).
+
+Terms (per device, loop-aware HLO accounting — see launch/hlo_analysis.py):
+  compute    = HLO_dot_FLOPs / 197e12
+  memory     = HLO buffer-level bytes / 819e9     (upper bound)
+  memory_lb  = analytic ideal bytes / 819e9       (lower bound)
+  collective = collective wire bytes / 50e9
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_all():
+    out = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def markdown_table(records, mesh_filter="single_pod_16x16"):
+    lines = [
+        "| arch | shape | t_compute | t_memory (lb..ub) | t_collective | "
+        "dominant | useful_flops | MFU bound |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        if r["mesh"] != mesh_filter:
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {rf['t_compute_s']:.2e} "
+            f"| {rf.get('t_memory_lb_s', 0):.2e}..{rf['t_memory_s']:.2e} "
+            f"| {rf['t_collective_s']:.2e} "
+            f"| {rf['dominant_lb']}/{rf['dominant']} "
+            f"| {rf['useful_flops_frac']:.2f} "
+            f"| {rf.get('mfu_bound', 0):.3f} |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = False):
+    records = load_all()
+    rows = []
+    for r in records:
+        rf = r["roofline"]
+        step = max(rf["t_compute_s"], rf.get("t_memory_lb_s", 0.0),
+                   rf["t_collective_s"])
+        rows.append((
+            f"roofline.{r['arch']}.{r['shape']}."
+            f"{'multi' if 'multi' in r['mesh'] else 'single'}",
+            step * 1e6,
+            {"dominant": rf["dominant_lb"],
+             "t_compute_s": f"{rf['t_compute_s']:.3e}",
+             "t_memory_lb_s": f"{rf.get('t_memory_lb_s', 0):.3e}",
+             "t_memory_ub_s": f"{rf['t_memory_s']:.3e}",
+             "t_collective_s": f"{rf['t_collective_s']:.3e}",
+             "useful_flops_frac": round(rf["useful_flops_frac"], 3),
+             "mfu_bound": round(rf.get("mfu_bound", 0), 4)}))
+    if not rows:
+        rows.append(("roofline.missing", 0.0,
+                     {"note": "run `python -m repro.launch.dryrun --all "
+                              "--mesh both` first"}))
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table(load_all()))

@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = compact JSON of the
+table-specific numbers, including the paper's reference values).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only table3,fig2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+MODULES = [
+    ("table1", "benchmarks.virt_overhead"),
+    ("table2", "benchmarks.pd_bottlenecks"),
+    ("table3", "benchmarks.pd_disagg_vs_dynamic"),
+    ("table4", "benchmarks.colocation_ttft"),
+    ("fig2", "benchmarks.decode_bandwidth"),
+    ("fig56", "benchmarks.timeslice_sweep"),
+    ("roofline", "benchmarks.roofline"),
+    ("kernels", "benchmarks.kernels_microbench"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for tag, modname in MODULES:
+        if only and tag not in only:
+            continue
+        t0 = time.time()
+        try:
+            import importlib
+            mod = importlib.import_module(modname)
+            rows = mod.run(quick=args.quick)
+        except Exception as e:  # keep the harness running
+            failures.append((tag, repr(e)))
+            print(f"{tag}.ERROR,0,{json.dumps(repr(e)[:120])}")
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.2f},{json.dumps(json.dumps(derived))}")
+        print(f"# {tag} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Table 1 — performance impact of FlexNPU virtualization.
+
+Real JAX execution (reduced model, CPU): identical serving workload under
+  (a) native passthrough (direct submission, no interception), and
+  (b) FlexNPU proxy (descriptors + handle translation + phase queues).
+Reports total token throughput + relative performance, like the paper's
+AISBench setup (which found 1.0108x — i.e. no overhead, slight win from
+async proxying)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def run(quick: bool = False):
+    from repro.configs import get_config
+    from repro.distributed.sharding import unbox
+    from repro.models import build_model
+    from repro.serving.engine import RealEngine
+    from repro.serving.request import Request
+
+    cfg = get_config("olmo-1b").reduced()
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    n, out_len = (8, 8) if quick else (24, 16)
+    rng = np.random.default_rng(0)
+
+    def mk():
+        return [Request(prompt_len=16, max_new_tokens=out_len,
+                        prompt_tokens=np.random.default_rng(s).integers(
+                            0, cfg.vocab_size, 16).tolist(),
+                        arrival_time=s * 0.005)
+                for s in range(n)]
+
+    results = {}
+    for mode in ("passthrough", "dynamic_pd"):
+        # warmup compile outside the timed region
+        eng = RealEngine(model, params, mode=mode, max_num_seqs=4,
+                         max_len=16 + out_len + 8)
+        try:
+            res = eng.run(mk(), timeout=600)
+        finally:
+            eng.shutdown()
+        results[mode] = res
+
+    base = results["passthrough"]["output_tokens_per_s"]
+    flex = results["dynamic_pd"]["output_tokens_per_s"]
+    rows = [
+        ("table1.native_passthrough.tokens_per_s", 1e6 / max(base, 1e-9),
+         {"tokens_per_s": round(base, 2), "relative": 1.0}),
+        ("table1.flexnpu_proxy.tokens_per_s", 1e6 / max(flex, 1e-9),
+         {"tokens_per_s": round(flex, 2),
+          "relative": round(flex / base, 4),
+          "paper_relative": 1.0108}),
+    ]
+    return rows

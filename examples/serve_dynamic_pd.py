@@ -1,0 +1,56 @@
+"""FlexNPU serving demo (real execution): the same engine code under
+(a) native passthrough, (b) static PD co-location (head-of-line blocking),
+(c) FlexNPU dynamic PD co-location — reproducing Table 1 and Table 4's
+mechanisms live on CPU.
+
+    PYTHONPATH=src python examples/serve_dynamic_pd.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.distributed.sharding import unbox
+from repro.models import build_model
+from repro.serving.engine import RealEngine
+from repro.serving.request import Request
+
+
+def mk_requests(cfg, n=6, prompt=8, out=24):
+    return [Request(prompt_len=prompt, max_new_tokens=out,
+                    prompt_tokens=np.random.default_rng(s).integers(
+                        0, cfg.vocab_size, prompt).tolist(),
+                    arrival_time=0.0)
+            for s in range(n)]
+
+
+def main():
+    cfg = get_config("olmo-1b").reduced()
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    print("burst of 6 requests, 2 decode slots (backlog scenario):\n")
+    outputs = {}
+    for mode in ("passthrough", "static_colocate", "dynamic_pd"):
+        eng = RealEngine(model, params, mode=mode, max_num_seqs=2, max_len=64)
+        reqs = mk_requests(cfg)
+        try:
+            res = eng.run(reqs, timeout=300)
+        finally:
+            eng.shutdown()
+        outputs[mode] = [r.output_tokens for r in reqs]
+        print(f"{mode:18s} tok/s={res['output_tokens_per_s']:7.1f}  "
+              f"TTFT mean={res['ttft_mean_s'] * 1e3:8.1f}ms  "
+              f"p99={res['ttft_p99_s'] * 1e3:8.1f}ms  "
+              f"TPOT={res['tpot_mean_s'] * 1e3:6.1f}ms")
+    same = (outputs["passthrough"] == outputs["static_colocate"]
+            == outputs["dynamic_pd"])
+    print(f"\noutputs bit-identical across all scheduling modes: {same}")
+    print("(transparency: scheduling changes WHEN work runs, never WHAT "
+          "it computes)")
+
+
+if __name__ == "__main__":
+    main()

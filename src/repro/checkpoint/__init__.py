@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpoint import Checkpointer
+
+__all__ = ["Checkpointer"]

@@ -1,0 +1,12 @@
+from repro.configs.base import (MULTI_POD_MESH, SHAPES, SINGLE_POD_MESH,
+                                Activation, Family, MeshConfig, ModelConfig,
+                                MoEConfig, Norm, PosEmb, ShapeConfig,
+                                ShapeKind, SSMConfig, shape_applicable)
+from repro.configs.registry import all_cells, get_config, get_shape, list_archs
+
+__all__ = [
+    "Activation", "Family", "MeshConfig", "ModelConfig", "MoEConfig", "Norm",
+    "PosEmb", "ShapeConfig", "ShapeKind", "SSMConfig", "shape_applicable",
+    "all_cells", "get_config", "get_shape", "list_archs",
+    "SHAPES", "SINGLE_POD_MESH", "MULTI_POD_MESH",
+]

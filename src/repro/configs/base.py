@@ -1,0 +1,279 @@
+"""Configuration dataclasses for the repro framework.
+
+Every assigned architecture is described by a frozen ``ModelConfig``; the four
+assigned input shapes by ``ShapeConfig``; meshes by ``MeshConfig``.  Configs
+are pure data — nothing here touches jax device state, so importing configs is
+always safe (dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Tuple
+
+
+class Family(str, enum.Enum):
+    DENSE = "dense"
+    MOE = "moe"
+    SSM = "ssm"
+    HYBRID = "hybrid"
+    VLM = "vlm"
+    AUDIO = "audio"  # encoder-decoder audio backbone
+
+
+class Activation(str, enum.Enum):
+    SWIGLU = "swiglu"          # gated SiLU (llama-style)
+    GEGLU = "geglu"            # gated GELU (gemma-style)
+    SQUARED_RELU = "sq_relu"   # nemotron-4
+    GELU = "gelu"              # plain (starcoder2, seamless)
+
+
+class Norm(str, enum.Enum):
+    RMSNORM = "rmsnorm"
+    LAYERNORM = "layernorm"
+    NONPARAM_LN = "nonparam_ln"  # OLMo: LayerNorm without scale/bias
+
+
+class PosEmb(str, enum.Enum):
+    ROPE = "rope"
+    MROPE = "mrope"            # Qwen2-VL multimodal RoPE
+    LEARNED = "learned"        # seamless decoder
+    NONE = "none"              # mamba
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    # apply MoE every Nth block (Jamba applies MoE every other layer)
+    every: int = 1
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD mixer hyperparameters."""
+    state_dim: int = 128       # N: per-head SSM state size
+    head_dim: int = 64         # P: channels per SSD head
+    expand: int = 2            # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk_size: int = 256      # SSD chunked-scan block length
+    ngroups: int = 1           # B/C groups
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                        # 0 -> d_model // num_heads
+    activation: Activation = Activation.SWIGLU
+    norm: Norm = Norm.RMSNORM
+    pos_emb: PosEmb = PosEmb.ROPE
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    # --- attention variants ---
+    sliding_window: int = 0                  # 0 = full attention
+    # gemma2: even layers local(sliding_window), odd layers global
+    local_global_alternating: bool = False
+    attn_logit_softcap: float = 0.0          # 0 = disabled
+    final_logit_softcap: float = 0.0
+    attn_scale_override: float = 0.0         # 0 = 1/sqrt(head_dim)
+    use_post_norm: bool = False              # gemma2: post-attn/post-ffn norms
+    scale_embedding: bool = False            # multiply embeds by sqrt(d_model)
+    # --- family extensions ---
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid: one attention layer per `attn_every` blocks (rest are SSM)
+    attn_every: int = 0                      # 0 = pure attention stack
+    # encoder-decoder
+    encoder_layers: int = 0                  # 0 = decoder-only
+    # multimodal stub frontends feed precomputed embeddings of this width
+    frontend_stub: bool = False
+    # --- numerics / memory ---
+    param_dtype: str = "bfloat16"
+    activation_dtype: str = "bfloat16"
+    kv_cache_dtype: str = "bfloat16"         # "int8" for giant decode shapes
+    remat: bool = True                       # activation checkpointing (train)
+    # --- misc published constants ---
+    max_position_embeddings: int = 0         # informational
+    source: str = ""                         # provenance string
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+        if self.num_heads and self.num_kv_heads:
+            assert self.num_heads % self.num_kv_heads == 0, (
+                f"{self.name}: num_heads={self.num_heads} not divisible by "
+                f"num_kv_heads={self.num_kv_heads}")
+
+    # ---------------------------------------------------------------- sizes
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == Family.SSM
+
+    def num_attention_layers(self) -> int:
+        if self.family == Family.SSM:
+            return 0
+        n = self.num_layers + self.encoder_layers
+        if self.attn_every:
+            return self.num_layers // self.attn_every + self.encoder_layers
+        return n
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks + head)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        def attn_params() -> int:
+            return d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        def mlp_params(gated: bool) -> int:
+            return d * f * (3 if gated else 2)
+        gated = self.activation in (Activation.SWIGLU, Activation.GEGLU)
+        def ssm_params() -> int:
+            assert self.ssm is not None
+            s = self.ssm
+            d_inner = s.expand * d
+            nheads = d_inner // s.head_dim
+            in_proj = d * (2 * d_inner + 2 * s.ngroups * s.state_dim + nheads)
+            conv = (d_inner + 2 * s.ngroups * s.state_dim) * s.conv_width
+            return in_proj + conv + nheads * 2 + d_inner * d  # + dt_bias/A + out
+        total = emb
+        n_blocks = self.num_layers
+        for i in range(n_blocks):
+            is_attn = True
+            if self.family == Family.SSM:
+                is_attn = False
+            elif self.attn_every:
+                is_attn = (i % self.attn_every) == (self.attn_every - 1)
+            total += attn_params() if is_attn else ssm_params()
+            is_moe = self.moe is not None and (i % self.moe.every) == 0
+            if self.family == Family.SSM:
+                pass  # mamba2 blocks have no separate MLP
+            elif is_moe:
+                assert self.moe is not None
+                total += self.moe.num_experts * mlp_params(gated) + d * self.moe.num_experts
+            else:
+                total += mlp_params(gated)
+        for _ in range(self.encoder_layers):
+            total += attn_params() + mlp_params(gated)
+            total += attn_params()  # decoder cross-attention, amortized here
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top_k experts count)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        d, f = self.d_model, self.d_ff
+        gated = self.activation in (Activation.SWIGLU, Activation.GEGLU)
+        per_expert = d * f * (3 if gated else 2)
+        n_moe_layers = len([i for i in range(self.num_layers)
+                            if (i % self.moe.every) == 0])
+        inactive = n_moe_layers * (self.moe.num_experts - self.moe.top_k) * per_expert
+        return full - inactive
+
+    # ------------------------------------------------------------- variants
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test-scale config of the same family (CPU-runnable)."""
+        kw = dict(
+            name=self.name + "-smoke",
+            num_layers=min(self.num_layers, 4 if not self.attn_every else self.attn_every),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 4) if self.num_kv_heads else 0,
+            head_dim=32,
+            d_ff=256,
+            vocab_size=256,
+            encoder_layers=2 if self.is_encdec else 0,
+        )
+        if self.attn_every:
+            kw["num_layers"] = 2 * self.attn_every  # keep the interleave pattern
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(self.moe, num_experts=4, top_k=2)
+        if self.ssm is not None:
+            kw["ssm"] = dataclasses.replace(
+                self.ssm, state_dim=16, head_dim=16, chunk_size=32)
+        if self.num_kv_heads and self.num_heads % max(kw["num_kv_heads"], 1):
+            kw["num_kv_heads"] = kw["num_heads"]
+        if self.local_global_alternating:
+            kw["sliding_window"] = 16
+        elif self.sliding_window:
+            kw["sliding_window"] = 16
+        return dataclasses.replace(self, **kw)
+
+
+class ShapeKind(str, enum.Enum):
+    TRAIN = "train"
+    PREFILL = "prefill"
+    DECODE = "decode"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: ShapeKind
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, ShapeKind.TRAIN),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, ShapeKind.PREFILL),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, ShapeKind.DECODE),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, ShapeKind.DECODE),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+SINGLE_POD_MESH = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD_MESH = MeshConfig((2, 16, 16), ("pod", "data", "model"))
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Apply the assignment's skip rules.  Returns (run?, reason)."""
+    if shape.name == "long_500k":
+        sub_quadratic = (
+            cfg.family in (Family.SSM, Family.HYBRID)
+            or cfg.local_global_alternating  # gemma2: half the layers windowed
+        )
+        if not sub_quadratic:
+            return False, ("pure full-attention arch: long_500k decode needs a "
+                           "sub-quadratic/bounded cache (skip per assignment)")
+    if shape.kind == ShapeKind.DECODE and cfg.is_encdec:
+        # enc-dec decodes with its decoder — applicable (not encoder-only).
+        return True, ""
+    return True, ""

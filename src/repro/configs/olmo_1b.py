@@ -1,0 +1,27 @@
+"""OLMo-1B — dense MHA transformer with non-parametric LayerNorm.
+
+[arXiv:2402.00838; hf:allenai/OLMo-1B] 16L d_model=2048 16H (kv=16 => MHA)
+d_ff=8192 vocab=50304.  OLMo uses SwiGLU (d_ff listed is the gate width) and
+LayerNorm WITHOUT learnable scale/bias (non-parametric LN); weight-tied
+embeddings; RoPE.
+"""
+from repro.configs.base import Activation, Family, ModelConfig, Norm, PosEmb
+
+CONFIG = ModelConfig(
+    name="olmo-1b",
+    family=Family.DENSE,
+    num_layers=16,
+    d_model=2_048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=8_192,
+    vocab_size=50_304,
+    activation=Activation.SWIGLU,
+    norm=Norm.NONPARAM_LN,
+    pos_emb=PosEmb.ROPE,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    max_position_embeddings=2_048,
+    source="arXiv:2402.00838 (hf tier)",
+)

@@ -1,0 +1,53 @@
+"""Architecture registry — ``--arch <id>`` lookup used across the framework."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (MULTI_POD_MESH, SHAPES, SINGLE_POD_MESH,
+                                ModelConfig, ShapeConfig, shape_applicable)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "nemotron-4-340b": "repro.configs.nemotron_4_340b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "mamba2-780m": "repro.configs.mamba2_780m",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+}
+
+
+def list_archs() -> List[str]:
+    return sorted(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {list_archs()}")
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def all_cells() -> List[tuple[str, str, bool, str]]:
+    """All 40 (arch, shape) cells with (runnable, skip_reason)."""
+    cells = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, reason = shape_applicable(cfg, shape)
+            cells.append((arch, sname, ok, reason))
+    return cells
+
+
+__all__ = [
+    "list_archs", "get_config", "get_shape", "all_cells",
+    "SHAPES", "SINGLE_POD_MESH", "MULTI_POD_MESH",
+]

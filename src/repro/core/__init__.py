@@ -1,0 +1,16 @@
+# FlexNPU core: transparent user-space NPU virtualization (the paper's
+# primary contribution, adapted to the JAX runtime boundary — DESIGN.md §2).
+from repro.core.api import Future, OpDescriptor, OpType, Phase, RuntimeAPI
+from repro.core.client import FlexClient, PassthroughClient
+from repro.core.daemon import FlexDaemon, RealBackend
+from repro.core.profiler import Profiler
+from repro.core.scheduler import (DynamicPDConfig, DynamicPDPolicy,
+                                  FIFOPolicy, SchedulerPolicy,
+                                  StaticTimeSlicePolicy)
+
+__all__ = [
+    "Future", "OpDescriptor", "OpType", "Phase", "RuntimeAPI",
+    "FlexClient", "PassthroughClient", "FlexDaemon", "RealBackend",
+    "Profiler", "DynamicPDConfig", "DynamicPDPolicy", "FIFOPolicy",
+    "SchedulerPolicy", "StaticTimeSlicePolicy",
+]

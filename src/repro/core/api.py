@@ -1,0 +1,159 @@
+"""The virtual NPU runtime API — the AscendCL analogue (DESIGN.md §2).
+
+This is the *narrow, stable boundary* the paper interposes on.  Serving
+engines call only these verbs; whether they hit a passthrough backend or the
+FlexNPU daemon is invisible to them (transparency), exactly as FlexNPU's
+LD_PRELOAD client is invisible to vLLM.
+
+Descriptors carry **metadata and virtual handles only** — never tensor
+payloads.  Tensor data stays in backend-owned buffers referenced by handle
+(the paper: "large tensor data are not copied through the control path").
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+import threading
+from typing import Any, Callable, Dict, Optional, Tuple
+
+
+class OpType(str, enum.Enum):
+    MALLOC = "malloc"
+    FREE = "free"
+    MEMCPY = "memcpy"              # H2D/D2H/D2D by metadata
+    CREATE_STREAM = "create_stream"
+    DESTROY_STREAM = "destroy_stream"
+    CREATE_EVENT = "create_event"
+    RECORD_EVENT = "record_event"
+    WAIT_EVENT = "wait_event"
+    LAUNCH = "launch"              # model/operator execution
+    SYNCHRONIZE = "synchronize"
+
+
+class Phase(str, enum.Enum):
+    PREFILL = "prefill"
+    DECODE = "decode"
+    OTHER = "other"                # weight loads, memcpys, bookkeeping
+
+
+_OP_IDS = itertools.count(1)
+
+
+@dataclasses.dataclass
+class OpDescriptor:
+    """Compact control-path descriptor (the 'packaged AscendCL call')."""
+    op: OpType
+    phase: Phase = Phase.OTHER
+    vstream: int = 0
+    vhandles: Tuple[int, ...] = ()
+    # metadata: op-specific small fields (sizes, shapes, fn name, instance id)
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # host callable + handle-resolved args; the daemon invokes it on dispatch.
+    # For the sim backend, fn is None and `cost` drives the virtual duration.
+    fn: Optional[Callable] = None
+    args: Tuple = ()
+    kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    op_id: int = dataclasses.field(default_factory=lambda: next(_OP_IDS))
+    enqueue_time: float = 0.0
+    dispatch_time: float = 0.0
+    complete_time: float = 0.0
+    future: "Future" = None  # type: ignore
+
+    def __post_init__(self):
+        if self.future is None:
+            self.future = Future()
+
+    @property
+    def queue_delay(self) -> float:
+        return self.dispatch_time - self.enqueue_time
+
+    @property
+    def exec_time(self) -> float:
+        return self.complete_time - self.dispatch_time
+
+
+class Future:
+    """Completion token for an async op (client-side view of an event)."""
+
+    __slots__ = ("_done", "_value", "_error", "_cv", "_callbacks")
+
+    def __init__(self):
+        self._done = False
+        self._value = None
+        self._error: Optional[BaseException] = None
+        self._cv = threading.Condition()
+        self._callbacks = []
+
+    def set_result(self, value):
+        with self._cv:
+            self._value = value
+            self._done = True
+            cbs = list(self._callbacks)
+            self._cv.notify_all()
+        for cb in cbs:
+            cb(self)
+
+    def set_error(self, err: BaseException):
+        with self._cv:
+            self._error = err
+            self._done = True
+            cbs = list(self._callbacks)
+            self._cv.notify_all()
+        for cb in cbs:
+            cb(self)
+
+    def done(self) -> bool:
+        with self._cv:
+            return self._done
+
+    def add_done_callback(self, cb):
+        run_now = False
+        with self._cv:
+            if self._done:
+                run_now = True
+            else:
+                self._callbacks.append(cb)
+        if run_now:
+            cb(self)
+
+    def result(self, timeout: Optional[float] = None):
+        with self._cv:
+            if not self._done:
+                self._cv.wait(timeout)
+            if not self._done:
+                raise TimeoutError("op did not complete")
+            if self._error is not None:
+                raise self._error
+            return self._value
+
+
+class RuntimeAPI:
+    """The verbs an application may call (interface only).
+
+    Implementations: ``PassthroughClient`` (direct to backend — the paper's
+    'native passthrough' baseline) and ``FlexClient`` (interposed — forwards
+    descriptors to a FlexDaemon)."""
+
+    def malloc(self, nbytes: int, *, tag: str = "") -> int:
+        raise NotImplementedError
+
+    def free(self, vhandle: int) -> None:
+        raise NotImplementedError
+
+    def create_stream(self, *, phase: Phase = Phase.OTHER) -> int:
+        raise NotImplementedError
+
+    def create_event(self) -> int:
+        raise NotImplementedError
+
+    def record_event(self, vevent: int, vstream: int) -> Future:
+        raise NotImplementedError
+
+    def launch(self, vstream: int, fn: Optional[Callable], *args,
+               phase: Phase = Phase.OTHER, meta: Optional[Dict] = None,
+               **kwargs) -> Future:
+        raise NotImplementedError
+
+    def synchronize(self, vstream: Optional[int] = None) -> None:
+        raise NotImplementedError

@@ -1,0 +1,128 @@
+"""FlexNPU client library (paper §3.2) and the passthrough baseline.
+
+``FlexClient`` is the LD_PRELOAD-library analogue: the serving engine calls
+the narrow RuntimeAPI verbs; the client packages each call into a compact
+``OpDescriptor`` (virtual handles + metadata, never tensor payloads) and
+forwards it to the per-device daemon over an in-process channel standing in
+for the paper's shared-memory transport.  Async launches return a Future
+immediately — the paper's 'asynchronous proxying' that lets the inference
+worker overlap host work with NPU execution.
+
+``PassthroughClient`` implements the same interface by executing directly —
+the paper's 'native passthrough' baseline.  Engine code is byte-identical
+under either client; that is the transparency property.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+from repro.core.api import (Future, OpDescriptor, OpType, Phase, RuntimeAPI)
+from repro.core.daemon import FlexDaemon, RealBackend
+
+
+class FlexClient(RuntimeAPI):
+    def __init__(self, daemon: FlexDaemon, instance: str = ""):
+        self.daemon = daemon
+        self.instance = instance
+
+    # -- control-plane verbs ------------------------------------------------
+    def malloc(self, nbytes: int, *, tag: str = "") -> int:
+        op = OpDescriptor(OpType.MALLOC, meta={"nbytes": nbytes, "tag": tag,
+                                               "instance": self.instance})
+        return self.daemon.enqueue(op).result()
+
+    def free(self, vhandle: int) -> None:
+        op = OpDescriptor(OpType.FREE, vhandles=(vhandle,))
+        self.daemon.enqueue(op).result()
+
+    def create_stream(self, *, phase: Phase = Phase.OTHER) -> int:
+        op = OpDescriptor(OpType.CREATE_STREAM, meta={"phase": phase})
+        return self.daemon.enqueue(op).result()
+
+    def create_event(self) -> int:
+        return self.daemon.enqueue(OpDescriptor(OpType.CREATE_EVENT)).result()
+
+    def record_event(self, vevent: int, vstream: int) -> Future:
+        op = OpDescriptor(OpType.RECORD_EVENT, vstream=vstream,
+                          vhandles=(vevent,))
+        return self.daemon.enqueue(op)
+
+    # -- data-plane verbs ---------------------------------------------------
+    def launch(self, vstream: int, fn: Optional[Callable], *args,
+               phase: Phase = Phase.OTHER, meta: Optional[Dict] = None,
+               **kwargs) -> Future:
+        op = OpDescriptor(OpType.LAUNCH, phase=phase, vstream=vstream,
+                          meta=dict(meta or {}, instance=self.instance),
+                          fn=fn, args=args, kwargs=kwargs)
+        return self.daemon.enqueue(op)
+
+    def synchronize(self, vstream: Optional[int] = None) -> None:
+        self.daemon.drain()
+
+
+class PassthroughClient(RuntimeAPI):
+    """Native passthrough baseline: direct device submission with NO
+    interception machinery — no descriptors, no handle translation, no
+    phase queues, no policy.  A single FIFO submission thread stands in for
+    the device stream (so async submission semantics match real AscendCL /
+    TPU streams, isolating FlexNPU's *interposition* cost in Table 1)."""
+
+    def __init__(self, backend: Optional[RealBackend] = None):
+        self.backend = backend or RealBackend()
+        self._mem = 0
+        import queue
+        self._q: "queue.Queue" = queue.Queue()
+        import threading
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="passthrough-stream")
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            fn, args, kwargs, fut = item
+            try:
+                out = fn(*args, **kwargs)
+                try:
+                    import jax
+                    out = jax.block_until_ready(out)
+                except Exception:
+                    pass
+                fut.set_result(out)
+            except BaseException as e:
+                fut.set_error(e)
+
+    def close(self):
+        self._q.put(None)
+
+    def malloc(self, nbytes: int, *, tag: str = "") -> int:
+        self._mem += 1
+        return self._mem
+
+    def free(self, vhandle: int) -> None:
+        pass
+
+    def create_stream(self, *, phase: Phase = Phase.OTHER) -> int:
+        return 0
+
+    def create_event(self) -> int:
+        return 0
+
+    def record_event(self, vevent: int, vstream: int) -> Future:
+        f = Future()
+        f.set_result(None)
+        return f
+
+    def launch(self, vstream: int, fn: Optional[Callable], *args,
+               phase: Phase = Phase.OTHER, meta: Optional[Dict] = None,
+               **kwargs) -> Future:
+        f = Future()
+        self._q.put((fn, args, kwargs, f))
+        return f
+
+    def synchronize(self, vstream: Optional[int] = None) -> None:
+        import time
+        while not self._q.empty():
+            time.sleep(0.0005)

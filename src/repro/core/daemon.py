@@ -1,0 +1,202 @@
+"""FlexNPU per-device daemon (paper §3.1-§3.2).
+
+Owns the virtual->physical handle tables, the **phase-aware dispatch queues**,
+and the dispatch loop for one (logical) NPU device.  The same daemon object is
+driven two ways, sharing every line of queue/policy/bookkeeping code:
+
+  * **threaded** (real backend): ``start()`` spawns the dispatch thread which
+    executes ops on the in-process JAX backend, stamping wall-clock times;
+  * **stepped** (simulation): the discrete-event simulator asks
+    ``select_next(now)`` whenever the simulated device frees up and calls
+    ``mark_complete(op, t)`` when the modeled duration elapses.
+
+This mirrors the paper's data-plane/policy-plane split: enqueue/dispatch is
+the data plane; the policy object (scheduler) and profiler are the policy
+plane and never block the critical path.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, Optional
+
+from repro.core.api import Future, OpDescriptor, OpType, Phase
+from repro.core.handles import HandleTable
+from repro.core.profiler import Profiler
+from repro.core.scheduler import FIFOPolicy, SchedulerPolicy
+
+
+class RealBackend:
+    """Executes launches in-process (CPU JAX here; TPU in production)."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def execute(self, op: OpDescriptor) -> Any:
+        if op.fn is None:
+            return None
+        out = op.fn(*op.args, **op.kwargs)
+        try:  # block like a device stream sync so exec_time is honest
+            import jax
+            out = jax.block_until_ready(out)
+        except Exception:
+            pass
+        return out
+
+    def estimate(self, op: OpDescriptor) -> float:
+        return float(op.meta.get("est_duration", 1e-4))
+
+
+class FlexDaemon:
+    def __init__(self, device_id: int, backend, policy: Optional[SchedulerPolicy] = None,
+                 profiler: Optional[Profiler] = None):
+        self.device_id = device_id
+        self.backend = backend
+        self.policy = policy or FIFOPolicy()
+        self.profiler = profiler or Profiler()
+        self.queues: Dict[Phase, Deque[OpDescriptor]] = {
+            p: deque() for p in Phase}
+        self.streams = HandleTable("stream")
+        self.events = HandleTable("event")
+        self.memory = HandleTable("memory")
+        self.allocated_bytes = 0
+        self.peak_bytes = 0
+        self.failed = False
+        self.last_heartbeat = 0.0
+        self._cv = threading.Condition()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = False
+        self._inflight: Optional[OpDescriptor] = None
+
+    # ------------------------------------------------------------ enqueue
+    def enqueue(self, op: OpDescriptor) -> Future:
+        if self.failed:
+            op.future.set_error(RuntimeError(
+                f"device {self.device_id} failed"))
+            return op.future
+        op.enqueue_time = self.backend.now()
+        # Control-plane ops that only mutate handle tables complete inline —
+        # they never wait behind compute (cheap bookkeeping, paper §3.2).
+        if op.op in (OpType.MALLOC, OpType.FREE, OpType.CREATE_STREAM,
+                     OpType.DESTROY_STREAM, OpType.CREATE_EVENT):
+            self._control_op(op)
+            return op.future
+        with self._cv:
+            self.queues[op.phase].append(op)
+            self._cv.notify()
+        return op.future
+
+    def _control_op(self, op: OpDescriptor) -> None:
+        now = self.backend.now()
+        op.dispatch_time = op.complete_time = now
+        if op.op == OpType.MALLOC:
+            nbytes = int(op.meta.get("nbytes", 0))
+            h = self.memory.create({"nbytes": nbytes,
+                                    "tag": op.meta.get("tag", "")})
+            self.allocated_bytes += nbytes
+            self.peak_bytes = max(self.peak_bytes, self.allocated_bytes)
+            op.future.set_result(h)
+        elif op.op == OpType.FREE:
+            rec = self.memory.release(op.vhandles[0])
+            if rec:
+                self.allocated_bytes -= rec["nbytes"]
+            op.future.set_result(None)
+        elif op.op == OpType.CREATE_STREAM:
+            op.future.set_result(self.streams.create(
+                {"phase": op.meta.get("phase", Phase.OTHER)}))
+        elif op.op == OpType.DESTROY_STREAM:
+            self.streams.release(op.vhandles[0])
+            op.future.set_result(None)
+        elif op.op == OpType.CREATE_EVENT:
+            op.future.set_result(self.events.create())
+
+    # --------------------------------------------------- stepped interface
+    def pending_count(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def oldest_pending_time(self) -> Optional[float]:
+        times = [q[0].enqueue_time for q in self.queues.values() if q]
+        return min(times) if times else None
+
+    def select_next(self, now: float) -> Optional[OpDescriptor]:
+        """Pop the next op per policy (simulator / loop driver)."""
+        if self.failed:
+            return None
+        phase = self.policy.select(self.queues, self.profiler, now)
+        if phase is None:
+            return None
+        op = self.queues[phase].popleft()
+        op.dispatch_time = now
+        self.policy.on_dispatch(op, self.backend.estimate(op))
+        self._inflight = op
+        return op
+
+    def mark_complete(self, op: OpDescriptor, now: float,
+                      result: Any = None, error: Optional[BaseException] = None):
+        op.complete_time = now
+        self.last_heartbeat = now
+        self.profiler.on_complete(op)
+        self._inflight = None
+        if error is not None:
+            op.future.set_error(error)
+        else:
+            op.future.set_result(result)
+
+    # ---------------------------------------------------------- fail/drain
+    def fail(self, requeue_sink: Optional[Callable] = None):
+        """Simulated device failure: error every queued op (the engine's
+        fault-tolerance layer re-queues them elsewhere)."""
+        self.failed = True
+        with self._cv:
+            drained = []
+            for q in self.queues.values():
+                drained.extend(q)
+                q.clear()
+            self._cv.notify_all()
+        for op in drained:
+            if requeue_sink is not None:
+                requeue_sink(op)
+            else:
+                op.future.set_error(RuntimeError(
+                    f"device {self.device_id} failed"))
+
+    # -------------------------------------------------------- thread drive
+    def start(self):
+        self._stop = False
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name=f"flexd-{self.device_id}")
+        self._thread.start()
+
+    def stop(self):
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+
+    def _loop(self):
+        while True:
+            with self._cv:
+                while not self._stop and self.pending_count() == 0:
+                    self._cv.wait(0.05)
+                if self._stop and self.pending_count() == 0:
+                    return
+            now = self.backend.now()
+            op = self.select_next(now)
+            if op is None:
+                continue
+            try:
+                result = self.backend.execute(op)
+                self.mark_complete(op, self.backend.now(), result)
+            except BaseException as e:  # propagate into the future
+                self.mark_complete(op, self.backend.now(), error=e)
+
+    def drain(self, timeout: float = 30.0):
+        """Block until all queued work is done (thread mode)."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if self.pending_count() == 0 and self._inflight is None:
+                return
+            time.sleep(0.001)
+        raise TimeoutError("daemon did not drain")

@@ -1,0 +1,52 @@
+"""Virtual <-> physical handle tables (paper §3.2, 'handle virtualization').
+
+Applications see small integers; the daemon owns the mapping to physical
+objects (backend buffers, streams, events).  Mappings are cached so repeat
+lookups are O(1) dict hits — the paper's 'reuses virtual-to-physical mappings
+to avoid repeated lookup overhead'.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Any, Dict, Optional
+
+
+class HandleTable:
+    def __init__(self, kind: str, start: int = 1):
+        self.kind = kind
+        self._lock = threading.Lock()
+        self._next = itertools.count(start)
+        self._v2p: Dict[int, Any] = {}
+
+    def create(self, physical: Any = None) -> int:
+        with self._lock:
+            v = next(self._next)
+            self._v2p[v] = physical
+            return v
+
+    def bind(self, vhandle: int, physical: Any) -> None:
+        with self._lock:
+            if vhandle not in self._v2p:
+                raise KeyError(f"{self.kind}: unknown virtual handle {vhandle}")
+            self._v2p[vhandle] = physical
+
+    def resolve(self, vhandle: int) -> Any:
+        with self._lock:
+            try:
+                return self._v2p[vhandle]
+            except KeyError:
+                raise KeyError(
+                    f"{self.kind}: unknown virtual handle {vhandle}") from None
+
+    def release(self, vhandle: int) -> Any:
+        with self._lock:
+            return self._v2p.pop(vhandle, None)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._v2p)
+
+    def live_handles(self):
+        with self._lock:
+            return list(self._v2p)

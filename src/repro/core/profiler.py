@@ -1,0 +1,95 @@
+"""Runtime profiler (paper §3.3): lightweight per-phase statistics.
+
+Collected from the interception layer and daemon:
+  * EWMA operator execution time and queue delay per phase,
+  * per-phase token throughput,
+  * memory-bandwidth pressure of decode (bytes touched / exec time / HBM peak),
+  * device utilization (busy fraction over a sliding horizon).
+
+These are 'coarse but useful' signals (the paper's words) — the scheduler
+reads them to steer the prefill/decode dispatch ratio.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, Optional, Tuple
+
+from repro.core.api import OpDescriptor, OpType, Phase
+
+HBM_BW_BYTES = 819e9        # TPU v5e HBM bandwidth (DESIGN.md hardware model)
+PEAK_FLOPS = 197e12         # bf16 peak per chip
+
+
+@dataclasses.dataclass
+class PhaseStats:
+    ewma_exec: float = 0.0          # seconds
+    ewma_queue_delay: float = 0.0
+    ewma_bytes: float = 0.0         # bytes touched per op
+    ewma_flops: float = 0.0
+    ops_completed: int = 0
+    tokens_done: int = 0
+    busy_time: float = 0.0
+
+    def bandwidth_util(self) -> float:
+        """Estimated HBM pressure of this phase's ops (0..1)."""
+        if self.ewma_exec <= 0:
+            return 0.0
+        return min(1.0, self.ewma_bytes / self.ewma_exec / HBM_BW_BYTES)
+
+    def compute_util(self) -> float:
+        if self.ewma_exec <= 0:
+            return 0.0
+        return min(1.0, self.ewma_flops / self.ewma_exec / PEAK_FLOPS)
+
+
+class Profiler:
+    def __init__(self, alpha: float = 0.2, horizon: float = 10.0):
+        self.alpha = alpha
+        self.horizon = horizon
+        self.stats: Dict[Phase, PhaseStats] = {p: PhaseStats() for p in Phase}
+        self._busy_events: Deque[Tuple[float, float]] = collections.deque()
+        self._window_start = 0.0
+
+    def _ewma(self, old: float, new: float) -> float:
+        if old == 0.0:
+            return new
+        return (1 - self.alpha) * old + self.alpha * new
+
+    def on_complete(self, op: OpDescriptor) -> None:
+        s = self.stats[op.phase]
+        s.ewma_exec = self._ewma(s.ewma_exec, op.exec_time)
+        s.ewma_queue_delay = self._ewma(s.ewma_queue_delay, op.queue_delay)
+        if "bytes" in op.meta:
+            s.ewma_bytes = self._ewma(s.ewma_bytes, float(op.meta["bytes"]))
+        if "flops" in op.meta:
+            s.ewma_flops = self._ewma(s.ewma_flops, float(op.meta["flops"]))
+        s.ops_completed += 1
+        s.tokens_done += int(op.meta.get("tokens", 0))
+        s.busy_time += op.exec_time
+        if op.op == OpType.LAUNCH:
+            self._busy_events.append((op.dispatch_time, op.complete_time))
+
+    def device_utilization(self, now: float) -> float:
+        """Busy fraction over the trailing horizon."""
+        lo = now - self.horizon
+        while self._busy_events and self._busy_events[0][1] < lo:
+            self._busy_events.popleft()
+        busy = sum(min(e, now) - max(s, lo) for s, e in self._busy_events
+                   if min(e, now) > max(s, lo))
+        return min(1.0, busy / self.horizon) if self.horizon > 0 else 0.0
+
+    def decode_bandwidth_util(self) -> float:
+        return self.stats[Phase.DECODE].bandwidth_util()
+
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        return {
+            p.value: {
+                "ewma_exec": s.ewma_exec,
+                "ewma_queue_delay": s.ewma_queue_delay,
+                "bandwidth_util": s.bandwidth_util(),
+                "compute_util": s.compute_util(),
+                "ops": s.ops_completed,
+                "tokens": s.tokens_done,
+            } for p, s in self.stats.items()
+        }

@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (AxisRules, Param, axes_tree,
+                                        make_rules, make_shardings,
+                                        logical_spec, set_active,
+                                        shard_act, unbox, prepend_axis)
+
+__all__ = [
+    "AxisRules", "Param", "axes_tree", "make_rules", "make_shardings",
+    "logical_spec", "set_active", "shard_act", "unbox", "prepend_axis",
+]

@@ -1,0 +1,3 @@
+from repro.kernels.ops import flash_attention, paged_attention, ssd_scan
+
+__all__ = ["flash_attention", "paged_attention", "ssd_scan"]

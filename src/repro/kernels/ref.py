@@ -1,0 +1,115 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references).
+
+Deliberately naive implementations — materialize full score matrices /
+sequential scans — so they are obviously correct and independent of the
+kernels' blocking structure.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+# ---------------------------------------------------------------------------
+# paged attention (decode): one query token per sequence over paged KV
+# ---------------------------------------------------------------------------
+
+
+def ref_paged_attention(q, k_pages, v_pages, page_tables, lengths, *,
+                        scale: float, softcap: float = 0.0):
+    """q: [B, H, D]; k/v_pages: [P, ps, KVH, D]; page_tables: [B, maxp];
+    lengths: [B].  Returns [B, H, D]."""
+    B, H, D = q.shape
+    _, ps, KVH, _ = k_pages.shape
+    maxp = page_tables.shape[1]
+    G = H // KVH
+    T = maxp * ps
+
+    # densify: [B, T, KVH, D]
+    k = k_pages[page_tables].reshape(B, T, KVH, D)
+    v = v_pages[page_tables].reshape(B, T, KVH, D)
+
+    qr = q.reshape(B, KVH, G, D)
+    s = jnp.einsum("bhgd,bthd->bhgt", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = _softcap(s, softcap)
+    pos = jnp.arange(T)[None]
+    mask = pos < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgt,bthd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill)
+# ---------------------------------------------------------------------------
+
+
+def ref_flash_attention(q, k, v, *, causal: bool = True, scale: float,
+                        window: int = 0, softcap: float = 0.0,
+                        kv_len: Optional[int] = None):
+    """q: [B, S, H, D]; k/v: [B, T, KVH, D].  Returns [B, S, H, D]."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    KVH = k.shape[2]
+    G = H // KVH
+    qr = q.reshape(B, S, KVH, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = _softcap(s, softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    valid = jnp.ones((S, T), bool)
+    if kv_len is not None:
+        valid &= kpos < kv_len
+    if causal:
+        valid &= kpos <= qpos
+    if window > 0:
+        valid &= kpos > qpos - window
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD scan — sequential (timestep-by-timestep) reference
+# ---------------------------------------------------------------------------
+
+
+def ref_ssd(x, dt, A, Bm, Cm, initial_state=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, H, P]; dt: [B, S, H] (>=0); A: [H] (<0);
+    Bm/Cm: [B, S, G, N].  Sequential recurrence:
+        h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T ;  y_t = C_t . h_t
+    Returns (y [B, S, H, P], final_state [B, H, P, N])."""
+    b, S, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)   # [b,S,H,N]
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((b, H, Pd, N), jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp            # [b,H,P], [b,H], [b,H,N] x2
+        decay = jnp.exp(dt_t * A[None, :])   # [b,H]
+        dBx = jnp.einsum("bh,bhn,bhp->bhpn", dt_t, B_t, x_t)
+        h = decay[..., None, None] * h + dBx
+        y = jnp.einsum("bhpn,bhn->bhp", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    final, ys = jax.lax.scan(step, initial_state.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    return y, final

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan.
+
+TPU-native adaptation of the SSD algorithm (arXiv:2405.21060 §6): instead of
+a GPU warp-level scan, each chunk becomes dense MXU work —
+  * intra-chunk: [Q, Q] decay-masked score matmul (C B^T ∘ L) @ X,
+  * inter-chunk: the [P, N] state is carried in fp32 VMEM scratch across the
+    chunk grid dimension (sequential 'arbitrary' axis), so the recurrence
+    never leaves the core.
+
+grid = (batch, heads, chunks); per-program blocks are one (sequence-chunk x
+head) tile: x [Q, P], dt [Q], B/C [Q, N].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, init_ref,
+            y_ref, final_ref, state_ref, *,
+            chunk: int, nchunks: int, seq_len: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = init_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # [Q]
+    A = a_ref[0].astype(jnp.float32)                 # scalar (this head)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)       # [Q, N]
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)       # [Q, N]
+
+    # padded tail positions contribute nothing (dt = 0 -> decay 1, dBx 0)
+    pos = c_idx * chunk + jax.lax.iota(jnp.int32, chunk)
+    dt = jnp.where(pos < seq_len, dt, 0.0)
+
+    dA = dt * A                                      # [Q] log-decay steps
+    cum = jnp.cumsum(dA)                             # [Q]
+    # L[i,j] = exp(sum_{k in (j, i]} dA_k) for i >= j
+    seg = cum[:, None] - cum[None, :]
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(row >= col, jnp.exp(seg), 0.0)     # [Q, Q]
+
+    xq = x * dt[:, None]                             # dt folded into x
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * L      # [Q, Q]
+    y = jax.lax.dot_general(scores, xq, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [Q, P]
+
+    # inter-chunk: contribution of the carried state
+    # y_off[t, p] = exp(cum_t) * sum_n C[t, n] state[p, n]
+    state = state_ref[...]                           # [P, N]
+    y_off = jax.lax.dot_general(Cm, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y = y + y_off * jnp.exp(cum)[:, None]
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update: S' = exp(cum[-1]) S + sum_t exp(cum[-1]-cum[t]) xq_t B_t^T
+    decay_out = jnp.exp(cum[-1] - cum)               # [Q]
+    xw = xq * decay_out[:, None]                     # [Q, P]
+    state_new = jnp.exp(cum[-1]) * state + jax.lax.dot_general(
+        xw, Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # [P, N]
+    state_ref[...] = state_new
+
+    @pl.when(c_idx == nchunks - 1)
+    def _final():
+        final_ref[0, 0] = state_new.astype(final_ref.dtype)
+
+
+def ssd_scan_kernel(x, dt, A, Bm, Cm, *, chunk: int = 256,
+                    initial_state=None, interpret: bool = False):
+    """x: [B, S, H, P]; dt: [B, S, H] (>=0); A: [H] (<0);
+    Bm/Cm: [B, S, G, N].  Returns (y [B, S, H, P], final [B, H, P, N])."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    chunk = min(chunk, max(S, 8))
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = x.shape[1]
+    nchunks = Sp // chunk
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    kernel = functools.partial(_kernel, chunk=chunk, nchunks=nchunks,
+                               seq_len=S)
+    y, final = pl.pallas_call(
+        kernel,
+        grid=(B, H, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda b, h, c, r=rep: (b, c, h // r, 0)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda b, h, c, r=rep: (b, c, h // r, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sp, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, initial_state)
+    return y[:, :S], final

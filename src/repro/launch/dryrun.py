@@ -1,0 +1,328 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces:
+  * ``compiled.memory_analysis()``  — per-device bytes (proves it fits),
+  * ``compiled.cost_analysis()``    — FLOPs / bytes for §Roofline,
+  * collective bytes parsed from the post-SPMD HLO (all-gather, all-reduce,
+    reduce-scatter, all-to-all, collective-permute),
+and writes a JSON record under results/dryrun/ that benchmarks/roofline.py
+turns into the EXPERIMENTS.md §Roofline table.
+
+Usage:
+    python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (SHAPES, get_config, get_shape, list_archs,
+                           shape_applicable)
+from repro.configs.base import ModelConfig, ShapeConfig, ShapeKind
+from repro.distributed.sharding import (axes_tree, make_rules, make_shardings,
+                                        set_active, unbox)
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh, mesh_config
+from repro.models import build_model
+from repro.training import AdamWConfig, TrainConfig, adamw_init, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+               "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1,
+               "f8e5m2": 1, "s64": 8, "u64": 8, "c64": 8, "token": 0}
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, float]:
+    """Sum per-device result bytes of collective ops, by type."""
+    out: Dict[str, float] = {}
+    seen_done = set()
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        # avoid double counting async start/done pairs: '-done' repeats result
+        line_start = hlo_text.rfind("\n", 0, m.start()) + 1
+        line = hlo_text[line_start:hlo_text.find("\n", m.start())]
+        if f"{kind}-done" in line:
+            continue
+        nbytes = DTYPE_BYTES.get(dtype, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        out[kind] = out.get(kind, 0.0) + nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def _batch_shardings(mesh, rules, inputs, axes):
+    return {k: NamedSharding(mesh, rules.spec_for(axes[k], inputs[k].shape))
+            for k in inputs}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               moment_dtype: Optional[str] = None,
+               rule_overrides: Optional[dict] = None,
+               flags: Tuple[str, ...] = (),
+               cfg_overrides: Optional[dict] = None,
+               serve_hbm_budget: float = 10e9) -> Tuple[object, Dict]:
+    """Lower + compile one (arch, shape, mesh) cell.  Returns (compiled, info)."""
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = get_shape(shape_name)
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell skipped by assignment rule: {reason}")
+
+    mcfg = mesh_config(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    mode = "train" if shape.kind == ShapeKind.TRAIN else "serve"
+    rules = make_rules(cfg, mcfg, mode, hbm_budget_bytes=serve_hbm_budget,
+                       overrides=rule_overrides, flags=flags)
+
+    ann_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    params_sds = unbox(ann_params)
+    params_sh = make_shardings(mesh, rules, ann_params)
+
+    inputs, in_axes = model.input_specs(shape)
+    input_sh = _batch_shardings(mesh, rules, inputs, in_axes)
+
+    t0 = time.time()
+    with set_active(mesh, rules):
+        if shape.kind == ShapeKind.TRAIN:
+            if moment_dtype is None:
+                moment_dtype = "bfloat16" if cfg.param_count() > 5e10 \
+                    else "float32"
+            tcfg = TrainConfig(opt=AdamWConfig(moment_dtype=moment_dtype))
+            opt_sds = jax.eval_shape(
+                lambda p: adamw_init(tcfg.opt, p), params_sds)
+            opt_sh = {
+                "m": make_shardings(mesh, rules, ann_params),
+                "v": make_shardings(mesh, rules, ann_params),
+                "step": NamedSharding(mesh, P()),
+            }
+            step_fn = make_train_step(model, tcfg)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(params_sh, opt_sh, input_sh),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_sds, opt_sds, inputs)
+        elif shape.kind == ShapeKind.PREFILL:
+            cache_sds = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                         enc_len=shape.seq_len))
+            cache_ax = model.cache_axes(shape.seq_len)
+            cache_sh = jax.tree.map(
+                lambda sds, ax: NamedSharding(
+                    mesh, rules.spec_for(ax, sds.shape)),
+                cache_sds, cache_ax,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            fn = lambda p, b, c: model.prefill(p, b, c)
+            jitted = jax.jit(fn, in_shardings=(params_sh, input_sh, cache_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_sds, inputs, cache_sds)
+        else:  # DECODE
+            cache_sds = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                         enc_len=shape.seq_len))
+            cache_ax = model.cache_axes(shape.seq_len)
+            cache_sh = jax.tree.map(
+                lambda sds, ax: NamedSharding(
+                    mesh, rules.spec_for(ax, sds.shape)),
+                cache_sds, cache_ax,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            fn = lambda p, toks, c, lens: model.decode(p, toks, c, lens)
+            jitted = jax.jit(fn, in_shardings=(
+                params_sh, input_sh["tokens"], cache_sh, input_sh["lengths"]),
+                donate_argnums=(2,))
+            lowered = jitted.lower(params_sds, inputs["tokens"], cache_sds,
+                                   inputs["lengths"])
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # loop-aware accounting: cost_analysis() counts scan bodies once
+    # (verified — see EXPERIMENTS.md §Dry-run methodology), so flops/bytes/
+    # collectives are re-derived from the HLO with while-trip multipliers.
+    loops = hlo_analysis.analyze(hlo)
+
+    info = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi_pod_2x16x16" if multi_pod else "single_pod_16x16",
+        "chips": mcfg.num_devices,
+        "kind": shape.kind.value,
+        "kv_cache_dtype": cfg.kv_cache_dtype,
+        "remat": cfg.remat,
+        "compile_s": round(compile_s, 1),
+        "params_b": cfg.param_count(),
+        "active_params_b": cfg.active_param_count(),
+        # memory_analysis: per-device bytes
+        "mem_argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "mem_output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "mem_temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "mem_alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+        # per-device, loop-aware (numerators for §Roofline)
+        "hlo_flops": loops.flops,
+        "hlo_bytes": loops.hbm_bytes,
+        "collective_bytes": dict(loops.collective_by_type,
+                                 total=loops.collective_bytes),
+        # raw cost_analysis (scan-body-once) kept for reference
+        "raw_cost_flops": float(cost.get("flops", 0.0)),
+        "raw_cost_bytes": float(cost.get("bytes accessed", 0.0)),
+        "hlo_lines": hlo.count("\n"),
+        "hlo_loops": loops.loop_count,
+        "hlo_dots": loops.dot_count,
+    }
+    return compiled, info
+
+
+def analytic_bytes(cfg: ModelConfig, shape: ShapeConfig, chips: int,
+                   tp: int) -> float:
+    """Lower-bound per-device HBM bytes for one step (ideal fusion): weights
+    + optimizer traffic + layer activations + KV cache + logits.  The
+    HLO-parsed value is the upper bound (XLA:CPU fusion granularity); truth
+    lies between — both are reported in §Roofline."""
+    bp = 2 if "16" in cfg.param_dtype else 4
+    params, active = cfg.param_count(), cfg.active_param_count()
+    B_loc = max(1, shape.global_batch // (chips // tp))
+    d, L, V = cfg.d_model, cfg.num_layers + cfg.encoder_layers, cfg.vocab_size
+    from repro.serving.costmodel import CostModel
+    cm = CostModel(cfg)
+    if shape.kind == ShapeKind.TRAIN:
+        S = shape.seq_len
+        weights = 3.0 * active * bp / tp              # fwd + remat-fwd + bwd
+        opt = params * (4 + 4 + 4 + 4 + 2 + 2) / chips  # m,v r/w grads p
+        acts = 3.0 * 6 * L * B_loc * S * d * 2
+        logits = 4.0 * B_loc * S * V * 2 / tp
+        return weights + opt + acts + logits
+    if shape.kind == ShapeKind.PREFILL:
+        S = shape.seq_len
+        weights = active * bp / tp
+        acts = 6 * L * B_loc * S * d * 2
+        kv = B_loc * S * cm.kv_bytes_per_token()
+        return weights + acts + kv
+    # decode
+    weights = active * bp / tp
+    kv = B_loc * (cm.kv_bytes_total(shape.seq_len) + cm.ssm_state_bytes())
+    return weights + kv
+
+
+def roofline_terms(info: Dict) -> Dict:
+    """DESIGN.md/spec hardware model; all numerators are per-device."""
+    PEAK, BW, LINK = 197e12, 819e9, 50e9
+    t_compute = info["hlo_flops"] / PEAK
+    t_memory = info["hlo_bytes"] / BW
+    t_coll = info["collective_bytes"].get("total", 0.0) / LINK
+    cfg = get_config(info["arch"])
+    if info.get("kv_cache_dtype"):
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=info["kv_cache_dtype"])
+    shape = SHAPES[info["shape"]]
+    tp = 16
+    a_bytes = analytic_bytes(cfg, shape, info["chips"], tp)
+    t_memory_lb = a_bytes / BW
+    tokens = {"train": shape.tokens, "prefill": shape.tokens,
+              "decode": shape.global_batch}[info["kind"]]
+    mult = 3.0 if info["kind"] == "train" else 1.0  # fwd+bwd
+    model_flops = mult * 2.0 * info["active_params_b"] * tokens \
+        / info["chips"]
+    dominant = max(
+        [("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)], key=lambda kv: kv[1])[0]
+    dominant_lb = max(
+        [("compute", t_compute), ("memory", t_memory_lb),
+         ("collective", t_coll)], key=lambda kv: kv[1])[0]
+    step = max(t_compute, t_memory, t_coll)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_memory_lb_s": t_memory_lb,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "dominant_lb": dominant_lb,
+        "model_flops_per_device": model_flops,
+        "useful_flops_frac": model_flops / info["hlo_flops"]
+        if info["hlo_flops"] else 0.0,
+        "mfu_bound": (model_flops / PEAK) / step if step else 0.0,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+             verbose: bool = True) -> Dict:
+    compiled, info = lower_cell(arch, shape_name, multi_pod=multi_pod)
+    info["roofline"] = roofline_terms(info)
+    if verbose:
+        mem = compiled.memory_analysis()
+        print(f"--- {arch} x {shape_name} x {info['mesh']} "
+              f"(compile {info['compile_s']}s)")
+        print(f"    memory_analysis: {mem}")
+        print(f"    cost_analysis: flops={info['hlo_flops']:.3e} "
+              f"bytes={info['hlo_bytes']:.3e}")
+        print(f"    collectives: { {k: f'{v:.2e}' for k, v in info['collective_bytes'].items()} }")
+        print(f"    roofline: { {k: (f'{v:.2e}' if isinstance(v, float) else v) for k, v in info['roofline'].items()} }")
+    os.makedirs(outdir, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}.json"
+    with open(os.path.join(outdir, fname), "w") as f:
+        json.dump(info, f, indent=1)
+    del compiled
+    return info
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--outdir", default=os.path.abspath(RESULTS_DIR))
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    archs = list_archs() if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for sname in shapes:
+            ok, reason = shape_applicable(cfg, SHAPES[sname])
+            if not ok:
+                print(f"SKIP {arch} x {sname}: {reason}")
+                continue
+            for mp in meshes:
+                try:
+                    run_cell(arch, sname, mp, args.outdir)
+                except Exception as e:
+                    failures.append((arch, sname, mp, repr(e)[:200]))
+                    print(f"FAIL {arch} x {sname} multi={mp}: {e!r}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nALL CELLS COMPILED OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Serving launcher — both execution paths:
+
+  * real:  RealEngine on this process's devices (reduced configs on CPU),
+           under any FlexNPU policy:
+           python -m repro.launch.serve --arch olmo-1b --mode dynamic_pd \
+               --requests 16 --rate 4
+  * sim:   384-card cluster simulation with the paper's deployments:
+           python -m repro.launch.serve --sim --arch mixtral-8x7b \
+               --deployment dynamic --workload 1k1k
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+
+def run_real(arch: str, mode: str, n_requests: int, rate: float,
+             prompt_len: int = 16, max_new: int = 16,
+             max_num_seqs: int = 4, seed: int = 0, verbose: bool = True):
+    from repro.distributed.sharding import unbox
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving.engine import RealEngine
+    from repro.serving.request import Request
+
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(seed)))
+    rng = np.random.default_rng(seed)
+    reqs = [Request(prompt_len=prompt_len, max_new_tokens=max_new,
+                    prompt_tokens=rng.integers(
+                        0, cfg.vocab_size, prompt_len).tolist(),
+                    arrival_time=i / rate)
+            for i in range(n_requests)]
+    eng = RealEngine(model, params, mode=mode, max_num_seqs=max_num_seqs,
+                     max_len=prompt_len + max_new + 8)
+    try:
+        res = eng.run(reqs, timeout=600)
+    finally:
+        eng.shutdown()
+    if verbose:
+        for k, v in res.items():
+            print(f"  {k}: {v:.4f}" if isinstance(v, float) else f"  {k}: {v}")
+    return res
+
+
+def run_sim(arch: str, deployment: str, workload: str, verbose: bool = True):
+    from repro.configs import get_config
+    from repro.serving import (Cluster, deepseek_1k1k, deepseek_1k4k,
+                               deployment_6p2d, deployment_dynamic)
+    from repro.serving.simulator import DeploymentSpec
+
+    cfg = get_config(arch)
+    deploy = {
+        "6p2d": deployment_6p2d(),
+        "dynamic": deployment_dynamic(),
+        "static_colocate": DeploymentSpec(mode="static_colocate",
+                                          colocated_instances=3,
+                                          colocated_chips=128),
+    }[deployment]
+    wl = {"1k1k": deepseek_1k1k, "1k4k": deepseek_1k4k}[workload]()
+    cluster = Cluster(cfg, deploy)
+    res = cluster.run(wl, until=7200)
+    if verbose:
+        for k, v in res.items():
+            print(f"  {k}: {v:.4f}" if isinstance(v, float) else f"  {k}: {v}")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--sim", action="store_true")
+    ap.add_argument("--mode", default="dynamic_pd",
+                    choices=["passthrough", "static_colocate", "dynamic_pd"])
+    ap.add_argument("--deployment", default="dynamic",
+                    choices=["6p2d", "dynamic", "static_colocate"])
+    ap.add_argument("--workload", default="1k1k", choices=["1k1k", "1k4k"])
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=4.0)
+    args = ap.parse_args()
+    if args.sim:
+        run_sim(args.arch, args.deployment, args.workload)
+    else:
+        run_real(args.arch, args.mode, args.requests, args.rate)
+
+
+if __name__ == "__main__":
+    main()

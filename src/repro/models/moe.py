@@ -1,0 +1,129 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based einsum dispatch.
+
+Dispatch/combine use one-hot matmuls (GShard formulation) which map onto the
+MXU and lower to clean GSPMD collectives, with **sequence chunking** so the
+[B, s, E, C] dispatch tensor stays small at 32k+ context.  Expert weights are
+annotated ("expert", "embed", "mlp"); the sharding rules put ``expert`` on the
+``model`` mesh axis when E divides it (Jamba: 16e) and otherwise fall back to
+tensor-parallel ``mlp`` sharding inside every expert (Grok/Mixtral: 8e on a
+16-way model axis).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import Activation, ModelConfig
+from repro.distributed.sharding import Param, shard_act
+from repro.models.layers import dense_param
+
+
+def moe_params(cfg: ModelConfig, key) -> Dict:
+    assert cfg.moe is not None
+    e, d, f = cfg.moe.num_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    gated = cfg.activation in (Activation.SWIGLU, Activation.GEGLU)
+    p = {
+        "router": dense_param(ks[0], (d, e), ("embed", None), jnp.float32),
+        "w_up": dense_param(ks[1], (e, d, f), ("expert", "embed", "mlp")),
+        "w_down": dense_param(ks[2], (e, f, d), ("expert", "mlp", "embed"),
+                              fan_in=f),
+    }
+    if gated:
+        p["w_gate"] = dense_param(ks[3], (e, d, f), ("expert", "embed", "mlp"))
+    return p
+
+
+def _expert_ffn(cfg: ModelConfig, p: Dict, xe):
+    """xe: [B, E, C, d] -> [B, E, C, d], per-expert FFN."""
+    h = jnp.einsum("becd,edf->becf", xe, p["w_up"])
+    if cfg.activation == Activation.SWIGLU:
+        g = jnp.einsum("becd,edf->becf", xe, p["w_gate"])
+        h = jax.nn.silu(g) * h
+    elif cfg.activation == Activation.GEGLU:
+        g = jnp.einsum("becd,edf->becf", xe, p["w_gate"])
+        h = jax.nn.gelu(g, approximate=True) * h
+    elif cfg.activation == Activation.SQUARED_RELU:
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    h = shard_act(h, "batch", "expert", None, "mlp")
+    return jnp.einsum("becf,efd->becd", h, p["w_down"])
+
+
+def _route_chunk(cfg: ModelConfig, p: Dict, xc,
+                 dropless: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One sequence chunk.  xc: [B, s, d] -> (y [B, s, d], aux_loss scalar).
+
+    dropless=True (inference): capacity = s*k, so no token can overflow —
+    decode output is then bit-identical to the teacher-forced pass."""
+    moe = cfg.moe
+    B, s, d = xc.shape
+    E, k = moe.num_experts, moe.top_k
+    if dropless:
+        C = s * k
+    else:
+        C = max(1, math.ceil(s * k * moe.capacity_factor / E))
+
+    logits = jnp.einsum("bsd,de->bse", xc.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                  # [B, s, E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # [B, s, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)    # renormalize
+
+    # Flatten the k routing slots into a pseudo-sequence of length s*k.
+    idx_f = gate_idx.reshape(B, s * k)                       # [B, sk]
+    gate_f = gate_vals.reshape(B, s * k)
+    mask = jax.nn.one_hot(idx_f, E, dtype=jnp.float32)       # [B, sk, E]
+    pos = jnp.cumsum(mask, axis=1) * mask                    # 1-indexed queue pos
+    # Each slot routes to exactly one expert -> its capacity index:
+    cap_idx = (jnp.sum(pos, axis=-1) - 1.0).astype(jnp.int32)  # [B, sk]
+    keep = (cap_idx < C)[..., None, None]                    # overflow dropped
+    cap_oh = jax.nn.one_hot(cap_idx, C, dtype=jnp.float32)   # [B, sk, C]
+    # dispatch one-hot over (expert, capacity): [B, sk, E, C]
+    disp = mask[..., None] * cap_oh[:, :, None, :] * keep
+    combine = disp * gate_f[:, :, None, None]                # [B, sk, E, C]
+
+    x_f = jnp.repeat(xc, k, axis=1)                          # [B, sk, d]
+    xe = jnp.einsum("btec,btd->becd", disp.astype(xc.dtype), x_f)
+    xe = shard_act(xe, "batch", "expert", None, "act_embed")
+    ye = _expert_ffn(cfg, p, xe)                             # [B, E, C, d]
+    y = jnp.einsum("btec,becd->btd", combine.astype(xc.dtype), ye)
+    y = y.reshape(B, s, k, d).sum(axis=2)
+
+    # Switch-style load-balancing auxiliary loss.
+    frac_tokens = jnp.mean(mask, axis=(0, 1))                # [E]
+    frac_probs = jnp.mean(probs, axis=(0, 1))                # [E]
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return y, aux
+
+
+def apply_moe(cfg: ModelConfig, p: Dict, x, *, chunk_size: int = 0,
+              dropless: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, d] -> (y, aux_loss).  Chunks the sequence to bound the
+    dispatch tensor; S % chunk handled by padding the last chunk."""
+    B, S, d = x.shape
+    if chunk_size == 0:
+        chunk_size = 256 if dropless else 1024  # dropless capacity is s*k
+    cs = min(chunk_size, S)
+    pad = (-S) % cs
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // cs
+    if nc == 1:
+        y, aux = _route_chunk(cfg, p, x, dropless)
+        return y[:, :S], aux
+
+    xs = x.reshape(B, nc, cs, d).transpose(1, 0, 2, 3)       # [nc, B, cs, d]
+
+    def step(aux_acc, xc):
+        y, aux = _route_chunk(cfg, p, xc, dropless)
+        return aux_acc + aux, y
+
+    aux_total, ys = jax.lax.scan(step, jnp.zeros((), jnp.float32), xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, nc * cs, d)
+    return y[:, :S], aux_total / nc

@@ -1,0 +1,165 @@
+"""Roofline cost model: per-phase step times for the cluster simulator.
+
+Grounded in the DESIGN.md hardware model (TPU v5e: 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI) and the same analytic terms as EXPERIMENTS.md
+§Roofline; the dry-run's compiled HLO FLOPs/bytes can be fed back in through
+``calibration`` multipliers so simulated times track the compiled graphs.
+
+Phase behaviour (paper Figures 1-2):
+  * prefill — compute-term dominated (large matmuls over the whole prompt);
+  * decode — memory-term dominated: every step re-reads the weights and the
+    KV cache; past the bandwidth knee extra compute share buys nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s/link
+HBM_PER_CHIP = 16e9          # v5e HBM capacity
+
+
+@dataclasses.dataclass
+class InstanceSpec:
+    """A logical serving instance spanning `chips` devices."""
+    name: str
+    chips: int
+    # modeled efficiencies (MFU-style derates; calibratable)
+    compute_eff: float = 0.55
+    bw_eff: float = 0.75
+    # fixed per-launch overhead (dispatch + host + collective setup)
+    launch_overhead_s: float = 0.002
+    # fraction of each step spent in non-overlapped collectives (TP/EP)
+    collective_frac: float = 0.08
+
+
+@dataclasses.dataclass
+class CostModel:
+    cfg: ModelConfig
+    weight_bytes_per_chip: Optional[float] = None
+    calibration_flops: float = 1.0      # HLO_FLOPs / MODEL_FLOPS from dry-run
+    calibration_bytes: float = 1.0
+
+    def __post_init__(self):
+        self.n_params = self.cfg.param_count()
+        self.n_active = self.cfg.active_param_count()
+        self.bytes_per_param = 2 if "16" in self.cfg.param_dtype else 4
+
+    # ------------------------------------------------------------ helpers
+    def kv_bytes_per_token(self) -> float:
+        """KV-cache bytes appended per generated/prefilled token."""
+        cfg = self.cfg
+        bpe = 1 if cfg.kv_cache_dtype == "int8" else 2
+        n_attn = cfg.num_attention_layers()
+        window = cfg.sliding_window or 0
+        kv = 2 * n_attn * cfg.num_kv_heads * cfg.head_dim * bpe
+        # ssm/hybrid: constant state, amortized ~0 per token
+        return float(kv)
+
+    def kv_bytes_total(self, context: int) -> float:
+        cfg = self.cfg
+        eff_ctx = context
+        if cfg.sliding_window and not cfg.local_global_alternating:
+            eff_ctx = min(context, cfg.sliding_window)
+        per_tok = self.kv_bytes_per_token()
+        if cfg.local_global_alternating and cfg.sliding_window:
+            # half the layers are windowed
+            full = per_tok / 2 * context
+            local = per_tok / 2 * min(context, cfg.sliding_window)
+            return full + local
+        return per_tok * eff_ctx
+
+    def ssm_state_bytes(self) -> float:
+        cfg = self.cfg
+        if cfg.ssm is None:
+            return 0.0
+        d_inner = cfg.ssm.expand * cfg.d_model
+        nheads = d_inner // cfg.ssm.head_dim
+        n_ssm = cfg.num_layers - cfg.num_attention_layers() \
+            + (cfg.encoder_layers if False else 0)
+        per_layer = nheads * cfg.ssm.head_dim * cfg.ssm.state_dim * 4
+        return float(n_ssm * per_layer)
+
+    def weights_bytes(self) -> float:
+        return self.n_params * self.bytes_per_param
+
+    # --------------------------------------------------------- step times
+    def prefill_time(self, spec: InstanceSpec, tokens: int,
+                     context: int = 0) -> float:
+        """One prefill launch over `tokens` prompt tokens (sum over batch)."""
+        cfg = self.cfg
+        flops = 2.0 * self.n_active * tokens * self.calibration_flops
+        # attention flops (causal): 2 * 2 * tokens * ctx/2 * H * D per layer
+        n_attn = cfg.num_attention_layers()
+        ctx = max(context, tokens)
+        flops += 2.0 * n_attn * tokens * ctx * cfg.num_heads * cfg.head_dim
+        bytes_ = (self.weights_bytes()
+                  + tokens * self.kv_bytes_per_token()) * self.calibration_bytes
+        t_compute = flops / (spec.chips * PEAK_FLOPS * spec.compute_eff)
+        t_memory = bytes_ / (spec.chips * HBM_BW * spec.bw_eff)
+        t = max(t_compute, t_memory)
+        return t * (1 + spec.collective_frac) + spec.launch_overhead_s
+
+    def decode_time(self, spec: InstanceSpec, batch: int,
+                    avg_context: int) -> float:
+        """One decode step for a batch of sequences at `avg_context`."""
+        flops = 2.0 * self.n_active * batch * self.calibration_flops
+        bytes_ = (self.weights_bytes()
+                  + batch * self.kv_bytes_total(avg_context)
+                  + batch * self.ssm_state_bytes()) * self.calibration_bytes
+        t_compute = flops / (spec.chips * PEAK_FLOPS * spec.compute_eff)
+        t_memory = bytes_ / (spec.chips * HBM_BW * spec.bw_eff)
+        t = max(t_compute, t_memory)
+        return t * (1 + spec.collective_frac) + spec.launch_overhead_s
+
+    # ------------------------------------------------ phase meta for ops
+    def decode_meta(self, spec: InstanceSpec, batch: int, avg_context: int) -> Dict:
+        return {
+            "bytes": (self.weights_bytes() / spec.chips
+                      + batch * self.kv_bytes_total(avg_context) / spec.chips),
+            "flops": 2.0 * self.n_active * batch / spec.chips,
+            "tokens": batch,
+        }
+
+    def prefill_meta(self, spec: InstanceSpec, tokens: int) -> Dict:
+        return {
+            "bytes": self.weights_bytes() / spec.chips,
+            "flops": 2.0 * self.n_active * tokens / spec.chips,
+            "tokens": tokens,
+        }
+
+    # -------------------------------------------------------- memory/misc
+    def kv_capacity_tokens(self, spec: InstanceSpec,
+                           reserve_frac: float = 0.1) -> int:
+        """How many KV tokens fit on the instance after weights."""
+        wpc = self.weight_bytes_per_chip
+        if wpc is None:
+            wpc = self.weights_bytes() / spec.chips
+        free = spec.chips * (HBM_PER_CHIP * (1 - reserve_frac)) \
+            - self.weights_bytes()
+        per_tok = max(self.kv_bytes_per_token(), 1.0)
+        return max(0, int(free / per_tok))
+
+    def transfer_time(self, kv_tokens: int, bw: float = ICI_BW,
+                      latency_s: float = 0.001) -> float:
+        """KV-cache movement between disaggregated instances."""
+        return latency_s + kv_tokens * self.kv_bytes_per_token() / bw
+
+    def decode_bandwidth_utilization(self, core_frac: float, batch: int,
+                                     avg_context: int,
+                                     spec: Optional[InstanceSpec] = None) -> float:
+        """Figure 2: HBM utilization as a function of allocated compute share.
+
+        With `core_frac` of the AI cores, compute time stretches by 1/frac;
+        bandwidth util = t_memory / max(t_compute/frac, t_memory)."""
+        spec = spec or InstanceSpec("one", 1)
+        flops = 2.0 * self.n_active * batch
+        bytes_ = self.weights_bytes() + batch * self.kv_bytes_total(avg_context)
+        t_c = flops / (spec.chips * PEAK_FLOPS * spec.compute_eff * core_frac)
+        t_m = bytes_ / (spec.chips * HBM_BW * spec.bw_eff)
+        return t_m / max(t_c, t_m)

@@ -1,0 +1,240 @@
+"""Real-execution serving engine (CPU JAX here, TPU in production).
+
+Continuous batching over slot-structured dense KV caches.  ALL device work is
+issued through the ``RuntimeAPI`` verbs (repro.core.api) — the engine is
+byte-identical under PassthroughClient (paper's native passthrough) and
+FlexClient (interposed through a FlexDaemon), which is the transparency claim
+of the paper made concrete.
+
+Modes:
+  * ``passthrough``     — direct execution (Table 1 baseline).
+  * ``static_colocate`` — one FIFO queue, prefill admission gated on a free
+                          decode slot (head-of-line blocking; Table 4 baseline).
+  * ``dynamic_pd``      — FlexNPU: prefill and decode as separate logical
+                          instances over one daemon with DynamicPDPolicy.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import Phase
+from repro.core.client import FlexClient, PassthroughClient
+from repro.core.daemon import FlexDaemon, RealBackend
+from repro.core.scheduler import (DynamicPDConfig, DynamicPDPolicy,
+                                  FIFOPolicy)
+from repro.models.model import Model
+from repro.serving.request import Request, RequestState, summarize
+
+
+def _insert_slot(full_cache, one_cache, slot):
+    """Insert a [*, 1, ...] single-sequence cache into batch axis 1."""
+    def one(full, single):
+        return jax.lax.dynamic_update_index_in_dim(
+            full, single[:, 0] if single.ndim == full.ndim else single,
+            slot, 1)
+    return jax.tree.map(one, full_cache, one_cache)
+
+
+class RealEngine:
+    def __init__(self, model: Model, params, *, mode: str = "dynamic_pd",
+                 max_num_seqs: int = 4, max_len: int = 256,
+                 policy=None, sample: str = "greedy"):
+        self.model = model
+        self.params = params
+        self.mode = mode
+        self.max_num_seqs = max_num_seqs
+        self.max_len = max_len
+        self.sample = sample
+        self._lock = threading.RLock()
+        self._all_done = threading.Condition(self._lock)
+
+        if mode == "passthrough":
+            self.client = PassthroughClient()
+            self.daemon = None
+        else:
+            policy = policy or (FIFOPolicy() if mode == "static_colocate"
+                                else DynamicPDPolicy(
+                                    DynamicPDConfig(ttft_guard_s=0.05,
+                                                    adjust_interval_s=0.01)))
+            self.daemon = FlexDaemon(0, RealBackend(), policy)
+            self.daemon.start()
+            self.client = FlexClient(self.daemon, instance="engine")
+        self.stream_p = self.client.create_stream(phase=Phase.PREFILL)
+        self.stream_d = self.client.create_stream(phase=Phase.DECODE)
+
+        # device state
+        self.slot_cache = model.init_cache(max_num_seqs, max_len)
+        self.lengths = np.zeros((max_num_seqs,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * max_num_seqs
+        self.next_tokens = np.zeros((max_num_seqs,), np.int32)
+
+        # jitted steps
+        self._prefill_jit = jax.jit(
+            lambda p, toks, cache: model.prefill(p, {"tokens": toks}, cache))
+        self._decode_jit = jax.jit(
+            lambda p, toks, cache, lens: model.decode(p, toks, cache, lens))
+
+        # engine queues
+        self.waiting_admission: List[Request] = []   # static mode gate
+        self.decode_pending: List[tuple] = []        # (req, single_cache, tok)
+        self.prefilling_count = 0                    # admitted, prefill running
+        self.active_count = 0
+        self.decode_inflight = False
+        self.outstanding = 0
+        self.finished: List[Request] = []
+
+    # ------------------------------------------------------------- public
+    def submit(self, req: Request) -> None:
+        with self._lock:
+            self.outstanding += 1
+            req.arrival_time = req.arrival_time or time.monotonic()
+            if self.mode == "static_colocate":
+                self.waiting_admission.append(req)
+                self._admit_gated_locked()
+            else:
+                self._launch_prefill(req)
+
+    def run(self, requests: List[Request], timeout: float = 300.0) -> Dict:
+        """Submit per arrival offsets (relative seconds) and wait."""
+        t0 = time.monotonic()
+        for r in sorted(requests, key=lambda r: r.arrival_time):
+            delay = t0 + r.arrival_time - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+            r.arrival_time = time.monotonic()
+            self.submit(r)
+        with self._all_done:
+            deadline = time.monotonic() + timeout
+            while self.outstanding > 0:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"{self.outstanding} requests unfinished")
+                self._all_done.wait(min(remaining, 0.1))
+        return summarize(requests)
+
+    def shutdown(self):
+        if self.daemon is not None:
+            self.daemon.stop()
+        elif isinstance(self.client, PassthroughClient):
+            self.client.close()
+
+    # ------------------------------------------------------------ prefill
+    def _admit_gated_locked(self):
+        while (self.waiting_admission
+               and self.active_count + len(self.decode_pending)
+               + self.prefilling_count < self.max_num_seqs):
+            req = self.waiting_admission.pop(0)
+            self.prefilling_count += 1
+            self._launch_prefill(req)
+
+    def _launch_prefill(self, req: Request) -> None:
+        req.state = RequestState.PREFILLING
+        toks = jnp.asarray(np.asarray(req.prompt_tokens, np.int32))[None, :]
+        cache = self.model.init_cache(1, self.max_len)
+        fut = self.client.launch(
+            self.stream_p, self._prefill_jit, self.params, toks, cache,
+            phase=Phase.PREFILL,
+            meta={"tokens": req.prompt_len, "req_id": req.req_id})
+        fut.add_done_callback(lambda f, r=req: self._prefill_done(r, f))
+
+    def _prefill_done(self, req: Request, fut) -> None:
+        try:
+            logits, single_cache, lens = fut.result()
+        except Exception:
+            with self._lock:
+                if self.mode == "static_colocate":
+                    self.prefilling_count = max(0, self.prefilling_count - 1)
+                req.state = RequestState.FAILED
+                self.outstanding -= 1
+                self._all_done.notify_all()
+            return
+        tok = int(np.argmax(np.asarray(logits[0])))
+        now = time.monotonic()
+        with self._lock:
+            if self.mode == "static_colocate":
+                self.prefilling_count = max(0, self.prefilling_count - 1)
+            req.record_token(now)
+            req.output_tokens.append(tok)
+            if req.done_decoding:
+                self._finish_locked(req)
+                return
+            self.decode_pending.append((req, single_cache, tok))
+            self._fill_slots_locked()
+            self._ensure_decode_locked()
+
+    # ------------------------------------------------------------- decode
+    def _fill_slots_locked(self):
+        if self.decode_inflight:
+            # the in-flight decode holds a snapshot of slot_cache; inserting
+            # now would be overwritten when it completes (lost update)
+            return
+        for slot in range(self.max_num_seqs):
+            if not self.decode_pending:
+                break
+            if self.slot_req[slot] is not None:
+                continue
+            req, single_cache, tok = self.decode_pending.pop(0)
+            self.slot_cache = _insert_slot(self.slot_cache, single_cache, slot)
+            self.slot_req[slot] = req
+            self.lengths[slot] = req.prompt_len
+            self.next_tokens[slot] = tok
+            req.slot = slot
+            req.state = RequestState.DECODING
+            self.active_count += 1
+
+    def _ensure_decode_locked(self):
+        if self.decode_inflight or self.active_count == 0:
+            return
+        self.decode_inflight = True
+        toks = jnp.asarray(self.next_tokens)
+        lens = jnp.asarray(self.lengths)
+        fut = self.client.launch(
+            self.stream_d, self._decode_jit, self.params, toks,
+            self.slot_cache, lens, phase=Phase.DECODE,
+            meta={"tokens": self.active_count})
+        fut.add_done_callback(self._decode_done)
+
+    def _decode_done(self, fut) -> None:
+        try:
+            logits, new_cache = fut.result()
+        except Exception:
+            with self._lock:
+                self.decode_inflight = False
+            return
+        now = time.monotonic()
+        toks = np.argmax(np.asarray(logits), axis=-1)
+        with self._lock:
+            self.slot_cache = new_cache
+            self.decode_inflight = False
+            for slot in range(self.max_num_seqs):
+                req = self.slot_req[slot]
+                if req is None:
+                    continue
+                self.lengths[slot] += 1
+                tok = int(toks[slot])
+                req.record_token(now)
+                req.output_tokens.append(tok)
+                self.next_tokens[slot] = tok
+                if req.done_decoding:
+                    self.slot_req[slot] = None
+                    self.lengths[slot] = 0
+                    self.active_count -= 1
+                    self._finish_locked(req)
+            if self.mode == "static_colocate":
+                self._admit_gated_locked()
+            self._fill_slots_locked()
+            self._ensure_decode_locked()
+
+    def _finish_locked(self, req: Request):
+        req.state = RequestState.DONE
+        req.finish_time = time.monotonic()
+        self.finished.append(req)
+        self.outstanding -= 1
+        self._all_done.notify_all()

@@ -1,0 +1,141 @@
+"""Paged KV-cache management (vLLM-style block allocator).
+
+Pure-Python page tables + free list drive both (a) real storage arrays that
+the Pallas ``paged_attention`` kernel consumes and (b) byte-level accounting
+in the cluster simulator.  Invariants (hypothesis-tested):
+  * a page is owned by at most one request;
+  * used + free == total;
+  * freeing a request returns all of its pages.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class PageTableEntry:
+    pages: List[int]
+    tokens: int = 0
+
+
+class PagedAllocator:
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages > 0 and page_size > 0
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self.tables: Dict[int, PageTableEntry] = {}
+
+    # ------------------------------------------------------------- queries
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def used_tokens(self) -> int:
+        return sum(t.tokens for t in self.tables.values())
+
+    def pages_needed(self, tokens: int) -> int:
+        return math.ceil(tokens / self.page_size)
+
+    def can_allocate(self, tokens: int) -> bool:
+        return self.pages_needed(tokens) <= self.free_pages
+
+    # ----------------------------------------------------------- lifecycle
+    def allocate(self, req_id: int, tokens: int) -> List[int]:
+        if req_id in self.tables:
+            raise KeyError(f"request {req_id} already has a page table")
+        need = self.pages_needed(tokens)
+        if need > len(self._free):
+            raise OutOfPages(f"need {need} pages, have {len(self._free)}")
+        pages = [self._free.pop() for _ in range(need)]
+        self.tables[req_id] = PageTableEntry(pages=pages, tokens=tokens)
+        return pages
+
+    def append(self, req_id: int, tokens: int = 1) -> List[int]:
+        """Extend a sequence; returns newly allocated pages (possibly [])."""
+        entry = self.tables[req_id]
+        new_total = entry.tokens + tokens
+        need = self.pages_needed(new_total) - len(entry.pages)
+        if need > len(self._free):
+            raise OutOfPages(f"need {need} pages, have {len(self._free)}")
+        fresh = [self._free.pop() for _ in range(need)]
+        entry.pages.extend(fresh)
+        entry.tokens = new_total
+        return fresh
+
+    def free(self, req_id: int) -> int:
+        entry = self.tables.pop(req_id, None)
+        if entry is None:
+            return 0
+        self._free.extend(entry.pages)
+        return len(entry.pages)
+
+    def page_table(self, req_id: int) -> List[int]:
+        return list(self.tables[req_id].pages)
+
+    def check_invariants(self) -> None:
+        owned = [p for t in self.tables.values() for p in t.pages]
+        assert len(owned) == len(set(owned)), "page double-booked"
+        assert len(owned) + len(self._free) == self.num_pages
+        assert set(owned).isdisjoint(self._free)
+
+
+class PagedKVStore:
+    """Physical page-pool storage for one attention layer group —
+    the layout the Pallas paged_attention kernel reads.
+
+    k/v: [num_pages, page_size, kv_heads, head_dim]
+    """
+
+    def __init__(self, num_pages: int, page_size: int, kv_heads: int,
+                 head_dim: int, dtype=np.float32):
+        self.allocator = PagedAllocator(num_pages, page_size)
+        shape = (num_pages, page_size, kv_heads, head_dim)
+        self.k = np.zeros(shape, dtype)
+        self.v = np.zeros(shape, dtype)
+
+    def write_prompt(self, req_id: int, k: np.ndarray, v: np.ndarray):
+        """k/v: [S, kv_heads, head_dim]."""
+        S = k.shape[0]
+        pages = self.allocator.allocate(req_id, S)
+        ps = self.allocator.page_size
+        for i, p in enumerate(pages):
+            lo, hi = i * ps, min((i + 1) * ps, S)
+            self.k[p, : hi - lo] = k[lo:hi]
+            self.v[p, : hi - lo] = v[lo:hi]
+        return pages
+
+    def append_token(self, req_id: int, k: np.ndarray, v: np.ndarray):
+        """k/v: [kv_heads, head_dim] for one new token."""
+        entry = self.allocator.tables[req_id]
+        pos = entry.tokens
+        self.allocator.append(req_id, 1)
+        page = entry.pages[pos // self.allocator.page_size]
+        off = pos % self.allocator.page_size
+        self.k[page, off] = k
+        self.v[page, off] = v
+
+    def gather(self, req_id: int) -> tuple:
+        """Densify a request's K/V: [tokens, kv_heads, head_dim]."""
+        entry = self.allocator.tables[req_id]
+        ps = self.allocator.page_size
+        ks, vs = [], []
+        remaining = entry.tokens
+        for p in entry.pages:
+            n = min(ps, remaining)
+            ks.append(self.k[p, :n])
+            vs.append(self.v[p, :n])
+            remaining -= n
+        return np.concatenate(ks, 0), np.concatenate(vs, 0)

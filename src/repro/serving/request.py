@@ -1,0 +1,99 @@
+"""Request lifecycle + serving metrics (TTFT / TPOT / throughput)."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import List, Optional
+
+
+class RequestState(str, enum.Enum):
+    QUEUED = "queued"            # arrived, waiting for prefill
+    PREFILLING = "prefilling"
+    TRANSFER = "transfer"        # KV moving to a decode instance (disagg)
+    DECODE_QUEUED = "decode_queued"
+    DECODING = "decoding"
+    DONE = "done"
+    FAILED = "failed"
+
+
+_REQ_IDS = itertools.count(1)
+
+
+@dataclasses.dataclass
+class Request:
+    prompt_len: int
+    max_new_tokens: int
+    req_id: int = dataclasses.field(default_factory=lambda: next(_REQ_IDS))
+    arrival_time: float = 0.0
+    state: RequestState = RequestState.QUEUED
+    # real-mode payload (None in simulation)
+    prompt_tokens: Optional[object] = None
+    output_tokens: List[int] = dataclasses.field(default_factory=list)
+    # timing
+    prefill_start: float = -1.0
+    first_token_time: float = -1.0
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    finish_time: float = -1.0
+    # placement
+    instance: Optional[str] = None
+    slot: int = -1
+    generated: int = 0
+    retries: int = 0
+
+    @property
+    def ttft(self) -> float:
+        if self.first_token_time < 0:
+            return float("nan")
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def tpot(self) -> float:
+        """Mean inter-token latency over decode (excludes the first token)."""
+        if len(self.token_times) < 2:
+            return float("nan")
+        spans = [b - a for a, b in zip(self.token_times, self.token_times[1:])]
+        return sum(spans) / len(spans)
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prompt_len + self.generated
+
+    def record_token(self, now: float) -> None:
+        self.generated += 1
+        if self.first_token_time < 0:
+            self.first_token_time = now
+        self.token_times.append(now)
+
+    @property
+    def done_decoding(self) -> bool:
+        return self.generated >= self.max_new_tokens
+
+
+def summarize(requests: List[Request]) -> dict:
+    done = [r for r in requests if r.state == RequestState.DONE]
+    if not done:
+        return {"completed": 0}
+    t0 = min(r.arrival_time for r in done)
+    t1 = max(r.finish_time for r in done)
+    out_tokens = sum(r.generated for r in done)
+    ttfts = sorted(r.ttft for r in done if r.first_token_time >= 0)
+    tpots = sorted(r.tpot for r in done if len(r.token_times) >= 2)
+
+    def pct(xs, q):
+        if not xs:
+            return float("nan")
+        return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+    dur = max(t1 - t0, 1e-9)
+    return {
+        "completed": len(done),
+        "duration_s": dur,
+        "requests_per_s": len(done) / dur,
+        "output_tokens_per_s": out_tokens / dur,
+        "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else float("nan"),
+        "ttft_p50_s": pct(ttfts, 0.50),
+        "ttft_p99_s": pct(ttfts, 0.99),
+        "tpot_mean_s": sum(tpots) / len(tpots) if tpots else float("nan"),
+        "tpot_p99_s": pct(tpots, 0.99),
+    }

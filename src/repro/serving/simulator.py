@@ -1,0 +1,483 @@
+"""Discrete-event cluster simulator for 384-card-scale serving experiments.
+
+The FlexDaemon, scheduler policies, profiler, queues, and request lifecycle
+are the SAME objects used by the real-execution engine — the simulator only
+replaces ``execute()`` wall time with roofline-modeled durations and advances
+a virtual clock (DESIGN.md §2).  One daemon models one serving *instance*
+(the SPMD group of chips dispatches one step at a time, like the real stack).
+
+Deployments (paper §4):
+  * ``disagg``          — static PD disaggregation (e.g. 6P2D): separate
+                          prefill/decode instances + KV-transfer delay.
+  * ``static_colocate`` — P+D share instances, FIFO order, prefill admission
+                          gated on a free decode slot (head-of-line blocking).
+  * ``dynamic_pd``      — FlexNPU: P+D as separate logical components routed
+                          through one daemon with DynamicPDPolicy.
+  * ``static_slice``    — co-location with a FIXED time-slice ratio
+                          (Figures 5/6 sweeps).
+
+Fault tolerance: instances can be failed mid-run (state lost, queued +
+in-flight requests re-routed and restarted), or slowed (straggler); the
+router avoids stragglers using fleet-relative EWMA step times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.api import OpDescriptor, OpType, Phase
+from repro.core.daemon import FlexDaemon
+from repro.core.scheduler import (DynamicPDConfig, DynamicPDPolicy,
+                                  FIFOPolicy, StaticTimeSlicePolicy)
+from repro.serving.costmodel import CostModel, InstanceSpec
+from repro.serving.request import Request, RequestState
+
+
+class SimClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def now(self) -> float:
+        return self.t
+
+
+class SimBackend:
+    """Backend facade for daemons living inside the simulation."""
+
+    def __init__(self, clock: SimClock):
+        self.clock = clock
+
+    def now(self) -> float:
+        return self.clock.t
+
+    def estimate(self, op: OpDescriptor) -> float:
+        return float(op.meta.get("est_duration", 1e-3))
+
+    def execute(self, op):  # never called in sim mode
+        raise RuntimeError("SimBackend does not execute ops")
+
+
+class EventLoop:
+    def __init__(self):
+        self.clock = SimClock()
+        self._heap: List[Tuple[float, int, Callable]] = []
+        self._seq = itertools.count()
+
+    def at(self, t: float, fn: Callable) -> None:
+        heapq.heappush(self._heap, (max(t, self.clock.t), next(self._seq), fn))
+
+    def after(self, dt: float, fn: Callable) -> None:
+        self.at(self.clock.t + dt, fn)
+
+    def run(self, until: float = math.inf, max_events: int = 50_000_000):
+        n = 0
+        while self._heap and n < max_events:
+            t, _, fn = heapq.heappop(self._heap)
+            if t > until:
+                self.clock.t = until
+                return
+            self.clock.t = t
+            fn()
+            n += 1
+
+
+@dataclasses.dataclass
+class SimConfig:
+    max_num_seqs: int = 256            # decode slots per instance
+    max_prefill_tokens: int = 8192     # tokens batched into one prefill launch
+    kv_reserve_frac: float = 0.10
+    transfer_bw: float = 50e9          # disaggregation KV link
+    admission_gated: bool = False      # static co-location: prefill needs slot
+    chunk_prefill_tokens: int = 0      # 0 = whole-prompt prefill ops
+
+
+class SimInstance:
+    """One serving instance: a daemon + batch formation + KV accounting."""
+
+    def __init__(self, name: str, spec: InstanceSpec, cost: CostModel,
+                 loop: EventLoop, policy, sim_cfg: SimConfig,
+                 role: str = "both"):
+        self.name = name
+        self.spec = spec
+        self.cost = cost
+        self.loop = loop
+        self.sim_cfg = sim_cfg
+        self.role = role  # "prefill" | "decode" | "both"
+        self.daemon = FlexDaemon(device_id=hash(name) & 0xFFFF,
+                                 backend=SimBackend(loop.clock),
+                                 policy=policy)
+        self.busy = False
+        self.slow_factor = 1.0
+        self.failed = False
+        # request state
+        self.prefill_waiting: List[Request] = []   # awaiting admission (gated)
+        self.prefilling: Dict[int, Request] = {}  # prefill queued/in-flight
+        self.decode_pending: List[Request] = []    # prefilled, awaiting slot
+        self.active: List[Request] = []            # decoding
+        self.kv_capacity = cost.kv_capacity_tokens(
+            spec, sim_cfg.kv_reserve_frac)
+        if self.kv_capacity <= 0:
+            raise ValueError(
+                f"{name}: weights ({cost.weights_bytes() / 1e9:.0f} GB) do "
+                f"not fit {spec.chips} chips x 16 GB HBM — choose a larger "
+                f"instance or a smaller/quantized model")
+        self.kv_used = 0
+        self._decode_op_inflight = False
+        self.on_request_done: Optional[Callable] = None
+        self.on_prefill_done: Optional[Callable] = None
+        self.steps = {"prefill": 0, "decode": 0}
+        self.ewma_step = 0.0
+
+    # ---------------------------------------------------------- utilities
+    @property
+    def now(self) -> float:
+        return self.loop.clock.t
+
+    def load(self) -> float:
+        """Router load signal: queued work normalized by capacity."""
+        q = (len(self.prefill_waiting) + len(self.decode_pending)
+             + len(self.active) + self.daemon.pending_count())
+        return q / max(self.spec.chips, 1)
+
+    def kv_free(self) -> int:
+        return max(0, self.kv_capacity - self.kv_used)
+
+    # ------------------------------------------------------------ prefill
+    def submit(self, req: Request) -> None:
+        req.instance = self.name
+        if self.sim_cfg.admission_gated:
+            # static co-location: a request only prefills once a decode slot
+            # AND kv space are available (vLLM-style admission).
+            self.prefill_waiting.append(req)
+            self._try_admit_gated()
+        else:
+            self._enqueue_prefill(req)
+
+    def _try_admit_gated(self) -> None:
+        while (self.prefill_waiting
+               and len(self.active) + len(self.decode_pending)
+               < self.sim_cfg.max_num_seqs
+               and self.kv_free() >= self.prefill_waiting[0].prompt_len):
+            req = self.prefill_waiting.pop(0)
+            self._enqueue_prefill(req)
+
+    def _enqueue_prefill(self, req: Request) -> None:
+        if self.kv_free() < req.prompt_len:
+            # No KV room: park until decode frees memory.
+            self.prefill_waiting.append(req)
+            return
+        self.kv_used += req.prompt_len
+        req.state = RequestState.PREFILLING
+        self.prefilling[req.req_id] = req
+        op = OpDescriptor(
+            OpType.LAUNCH, phase=Phase.PREFILL,
+            meta={"req": req, "tokens": req.prompt_len,
+                  **self.cost.prefill_meta(self.spec, req.prompt_len),
+                  "est_duration": self.cost.prefill_time(
+                      self.spec, req.prompt_len)})
+        op.future.add_done_callback(lambda f, r=req: self._prefill_done(r, f))
+        self.daemon.enqueue(op)
+        self.kick()
+
+    def _prefill_done(self, req: Request, fut) -> None:
+        self.prefilling.pop(req.req_id, None)
+        try:
+            fut.result()
+        except Exception:
+            return  # failure path handled by cluster re-router
+        req.record_token(self.now)   # first token emitted at prefill end
+        if self.on_prefill_done is not None:
+            self.on_prefill_done(self, req)
+        else:
+            self.admit_decode(req)
+
+    # ------------------------------------------------------------- decode
+    def admit_decode(self, req: Request, charge_kv: bool = False) -> None:
+        if charge_kv:
+            self.kv_used += req.prompt_len + req.generated
+        req.state = RequestState.DECODE_QUEUED
+        self.decode_pending.append(req)
+        self._fill_slots()
+        self._ensure_decode_op()
+
+    def _fill_slots(self) -> None:
+        while (self.decode_pending
+               and len(self.active) < self.sim_cfg.max_num_seqs):
+            r = self.decode_pending.pop(0)
+            r.state = RequestState.DECODING
+            self.active.append(r)
+
+    def _ensure_decode_op(self) -> None:
+        if self._decode_op_inflight or not (self.active or self.decode_pending):
+            return
+        self._decode_op_inflight = True
+        op = OpDescriptor(OpType.LAUNCH, phase=Phase.DECODE,
+                          meta={"est_duration": self._decode_estimate()})
+        op.future.add_done_callback(self._decode_done)
+        self.daemon.enqueue(op)
+        self.kick()
+
+    def _decode_estimate(self) -> float:
+        b = max(1, len(self.active))
+        ctx = (sum(r.total_tokens for r in self.active) // b) if self.active \
+            else 1024
+        return self.cost.decode_time(self.spec, b, ctx)
+
+    def _decode_done(self, fut) -> None:
+        self._decode_op_inflight = False
+        try:
+            fut.result()
+        except Exception:
+            return
+        finished = []
+        for r in self.active:
+            r.record_token(self.now)
+            self.kv_used += 1  # one token appended
+            if r.done_decoding:
+                finished.append(r)
+        for r in finished:
+            self.active.remove(r)
+            self.kv_used -= r.total_tokens
+            r.state = RequestState.DONE
+            r.finish_time = self.now
+            if self.on_request_done is not None:
+                self.on_request_done(self, r)
+        if finished and self.sim_cfg.admission_gated:
+            self._try_admit_gated()
+        if finished:
+            self._retry_parked()
+        self._fill_slots()
+        self._ensure_decode_op()
+
+    def _retry_parked(self) -> None:
+        parked = [r for r in self.prefill_waiting
+                  if r.state == RequestState.QUEUED]
+        if not self.sim_cfg.admission_gated:
+            self.prefill_waiting = []
+            for r in parked:
+                self._enqueue_prefill(r)
+
+    # ----------------------------------------------------- device driving
+    def kick(self) -> None:
+        if self.busy or self.failed:
+            return
+        now = self.now
+        op = self.daemon.select_next(now)
+        if op is None:
+            return
+        self.busy = True
+        # Late-binding batch formation: decode duration reflects the batch
+        # at dispatch time (continuous batching).
+        if op.phase == Phase.DECODE:
+            dur = self._decode_estimate()
+            self.daemon.profiler  # (stats update happens on completion)
+            b = max(1, len(self.active))
+            ctx = (sum(r.total_tokens for r in self.active) // b) \
+                if self.active else 1024
+            op.meta.update(self.cost.decode_meta(self.spec, b, ctx))
+            self.steps["decode"] += 1
+        else:
+            dur = float(op.meta.get("est_duration", 1e-3))
+            self.steps["prefill"] += 1
+        dur *= self.slow_factor
+        self.ewma_step = 0.8 * self.ewma_step + 0.2 * dur if self.ewma_step \
+            else dur
+        self.loop.after(dur, lambda o=op: self._complete(o))
+
+    def _complete(self, op: OpDescriptor) -> None:
+        self.busy = False
+        if self.failed:
+            return
+        self.daemon.mark_complete(op, self.now)
+        self.kick()
+
+    # ------------------------------------------------------------ faults
+    def fail(self) -> List[Request]:
+        """Device failure: lose all state; return requests to re-route."""
+        self.failed = True
+        lost: List[Request] = []
+        lost.extend(self.prefill_waiting)
+        lost.extend(self.prefilling.values())   # ops queued or in flight
+        lost.extend(self.decode_pending)
+        lost.extend(self.active)
+        self.prefill_waiting, self.decode_pending, self.active = [], [], []
+        self.prefilling = {}
+        self.kv_used = 0
+        self.daemon.fail(requeue_sink=lambda op: None)
+        for r in lost:
+            r.state = RequestState.QUEUED
+            r.generated = 0
+            r.token_times = []
+            r.first_token_time = -1.0
+            r.retries += 1
+        return lost
+
+
+# ===========================================================================
+# Cluster: deployment topologies, routing, KV transfer, fault injection
+# ===========================================================================
+
+
+@dataclasses.dataclass
+class DeploymentSpec:
+    """How instances are laid out (paper §4.3: 6P2D vs 3x128 co-location)."""
+    mode: str                        # disagg | static_colocate | dynamic_pd | static_slice
+    prefill_instances: int = 0       # disagg only
+    prefill_chips: int = 0
+    decode_instances: int = 0
+    decode_chips: int = 0
+    colocated_instances: int = 0     # co-location modes
+    colocated_chips: int = 0
+    decode_share: float = 0.5        # static_slice fixed ratio
+    dynamic_cfg: Optional[DynamicPDConfig] = None
+
+    @property
+    def total_chips(self) -> int:
+        return (self.prefill_instances * self.prefill_chips
+                + self.decode_instances * self.decode_chips
+                + self.colocated_instances * self.colocated_chips)
+
+
+def deployment_6p2d(total: int = 384) -> DeploymentSpec:
+    """The paper's static PD disaggregation baseline (Table 3)."""
+    return DeploymentSpec(mode="disagg", prefill_instances=6,
+                          prefill_chips=16, decode_instances=2,
+                          decode_chips=144)
+
+
+def deployment_dynamic(total: int = 384, instances: int = 3) -> DeploymentSpec:
+    """The paper's FlexNPU deployment: 3 co-located instances x 128 NPUs."""
+    return DeploymentSpec(mode="dynamic_pd", colocated_instances=instances,
+                          colocated_chips=total // instances)
+
+
+class Cluster:
+    def __init__(self, cfg: ModelConfig, deploy: DeploymentSpec,
+                 sim_cfg: Optional[SimConfig] = None,
+                 cost: Optional[CostModel] = None):
+        self.loop = EventLoop()
+        self.cfg = cfg
+        self.deploy = deploy
+        self.cost = cost or CostModel(cfg)
+        self.sim_cfg = sim_cfg or SimConfig()
+        self.requests: List[Request] = []
+        self.prefill_pool: List[SimInstance] = []
+        self.decode_pool: List[SimInstance] = []
+        self.instances: List[SimInstance] = []
+        self._build()
+
+    # ----------------------------------------------------------- topology
+    def _policy(self):
+        m = self.deploy.mode
+        if m == "static_colocate":
+            return FIFOPolicy()
+        if m == "static_slice":
+            return StaticTimeSlicePolicy(self.deploy.decode_share)
+        if m == "dynamic_pd":
+            return DynamicPDPolicy(self.deploy.dynamic_cfg)
+        return FIFOPolicy()   # disagg instances are single-phase anyway
+
+    def _build(self):
+        d = self.deploy
+        if d.mode == "disagg":
+            for i in range(d.prefill_instances):
+                inst = SimInstance(
+                    f"P{i}", InstanceSpec(f"P{i}", d.prefill_chips),
+                    self.cost, self.loop, FIFOPolicy(), self.sim_cfg,
+                    role="prefill")
+                inst.on_prefill_done = self._transfer_to_decode
+                self.prefill_pool.append(inst)
+            for i in range(d.decode_instances):
+                inst = SimInstance(
+                    f"D{i}", InstanceSpec(f"D{i}", d.decode_chips),
+                    self.cost, self.loop, FIFOPolicy(), self.sim_cfg,
+                    role="decode")
+                self.decode_pool.append(inst)
+            self.instances = self.prefill_pool + self.decode_pool
+        else:
+            gated = d.mode == "static_colocate"
+            sim_cfg = dataclasses.replace(self.sim_cfg, admission_gated=gated)
+            for i in range(d.colocated_instances):
+                inst = SimInstance(
+                    f"C{i}", InstanceSpec(f"C{i}", d.colocated_chips),
+                    self.cost, self.loop, self._policy(), sim_cfg,
+                    role="both")
+                self.instances.append(inst)
+            self.prefill_pool = self.decode_pool = self.instances
+
+    # ------------------------------------------------------------ routing
+    def _healthy(self, pool: List[SimInstance]) -> List[SimInstance]:
+        ok = [i for i in pool if not i.failed]
+        if len(ok) <= 1:
+            return ok
+        # Straggler avoidance: exclude instances whose EWMA step time is
+        # >2.5x the pool median (they still drain their queues).
+        steps = sorted(i.ewma_step for i in ok if i.ewma_step > 0)
+        if steps:
+            med = steps[len(steps) // 2]
+            fast = [i for i in ok
+                    if i.ewma_step <= 2.5 * med or i.ewma_step == 0]
+            if fast:
+                return fast
+        return ok
+
+    def submit(self, req: Request) -> None:
+        self.requests.append(req)
+        pool = self._healthy(self.prefill_pool)
+        if not pool:
+            req.state = RequestState.FAILED
+            return
+        inst = min(pool, key=lambda i: i.load())
+        inst.submit(req)
+
+    def _transfer_to_decode(self, src: SimInstance, req: Request) -> None:
+        """Disaggregation: move KV from a prefill to a decode instance."""
+        src.kv_used -= req.prompt_len
+        req.state = RequestState.TRANSFER
+        delay = self.cost.transfer_time(req.prompt_len,
+                                        bw=self.sim_cfg.transfer_bw)
+        pool = self._healthy(self.decode_pool)
+        if not pool:
+            req.state = RequestState.FAILED
+            return
+        dst = min(pool, key=lambda i: i.load())
+        self.loop.after(delay, lambda: dst.admit_decode(req, charge_kv=True))
+
+    # -------------------------------------------------------------- runs
+    def run(self, workload: List[Request], until: float = math.inf) -> Dict:
+        for req in workload:
+            self.loop.at(req.arrival_time, lambda r=req: self.submit(r))
+        self.loop.run(until=until)
+        from repro.serving.request import summarize
+        out = summarize(self.requests)
+        out["chips"] = self.deploy.total_chips
+        out["mode"] = self.deploy.mode
+        retries = sum(r.retries for r in self.requests)
+        if retries:
+            out["retries"] = retries
+        return out
+
+    # ------------------------------------------------------------- faults
+    def fail_instance(self, name: str) -> int:
+        """Kill an instance; its requests restart elsewhere (prefill redone)."""
+        inst = next(i for i in self.instances if i.name == name)
+        lost = inst.fail()
+        for r in lost:
+            pool = self._healthy(self.prefill_pool)
+            if pool:
+                min(pool, key=lambda i: i.load()).submit(r)
+            else:
+                r.state = RequestState.FAILED
+        return len(lost)
+
+    def slow_instance(self, name: str, factor: float) -> None:
+        inst = next(i for i in self.instances if i.name == name)
+        inst.slow_factor = factor
+
+    def utilization(self) -> Dict[str, float]:
+        return {i.name: i.daemon.profiler.device_utilization(self.loop.clock.t)
+                for i in self.instances}

@@ -1,0 +1,51 @@
+"""Workload generators matching the paper's evaluation setups."""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+def make_workload(n: int, input_len: int, output_len: int, *,
+                  rate: float, seed: int = 0, length_cv: float = 0.0,
+                  arrival: str = "poisson") -> List[Request]:
+    """`rate` req/s; lengths lognormal around the means when length_cv>0."""
+    rng = np.random.default_rng(seed)
+    if arrival == "poisson":
+        gaps = rng.exponential(1.0 / rate, size=n)
+    else:
+        gaps = np.full(n, 1.0 / rate)
+    arrivals = np.cumsum(gaps)
+
+    def lengths(mean):
+        if length_cv <= 0:
+            return np.full(n, mean, dtype=int)
+        sigma = np.sqrt(np.log(1 + length_cv ** 2))
+        mu = np.log(mean) - sigma ** 2 / 2
+        return np.maximum(1, rng.lognormal(mu, sigma, size=n).astype(int))
+
+    ins, outs = lengths(input_len), lengths(output_len)
+    return [Request(prompt_len=int(i), max_new_tokens=int(o),
+                    arrival_time=float(t))
+            for i, o, t in zip(ins, outs, arrivals)]
+
+
+# --- the paper's workloads -------------------------------------------------
+
+def deepseek_1k1k(n: int = 2000, rate: float = 700.0, seed: int = 0):
+    """Table 3 '1K-1K': balanced input/output (prefill-bottlenecked at 6P2D)."""
+    return make_workload(n, 1024, 1024, rate=rate, seed=seed, length_cv=0.2)
+
+
+def deepseek_1k4k(n: int = 600, rate: float = 170.0, seed: int = 0):
+    """Table 3 '1K-4K': decode-heavy (decode-bottlenecked at 6P2D)."""
+    return make_workload(n, 1024, 4096, rate=rate, seed=seed, length_cv=0.2)
+
+
+def qwen_grid():
+    """Table 4: four I/O pairs, request_rate=4, 200 requests each."""
+    cells = [(256, 256), (256, 1024), (1024, 256), (1024, 1024)]
+    return {f"{i}/{o}": make_workload(200, i, o, rate=4.0, seed=42)
+            for i, o in cells}

@@ -1,0 +1,96 @@
+"""Hand-rolled AdamW with ZeRO-style sharded state (no optax dependency).
+
+Optimizer moments inherit the parameters' (FSDP x TP) sharding, so with
+FSDP-sharded params the state is fully distributed (ZeRO-3-like).  Moment
+dtype is configurable — fp32 default, bf16 for the 340B+ archs where fp32
+moments would not fit HBM (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(cfg: AdamWConfig, params) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.asarray(1.0)
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2 and cfg.weight_decay > 0:  # no decay on norms/scalars
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "m": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "v": jax.tree.unflatten(treedef, [o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,60 @@
+"""Training step: loss -> grad -> clip -> AdamW, with optional int8 gradient
+compression on the data-parallel reduction (distributed-optimization trick;
+see repro.distributed.collectives for the wire-level shard_map variant)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    grad_compression: str = "none"      # "none" | "int8"
+
+
+def quantize_dequantize_int8(g):
+    """Per-tensor symmetric int8 fake-quant: models the precision of an int8
+    gradient all-reduce (the wire-level version lives in collectives.py)."""
+    if g.ndim == 0:
+        return g
+    amax = jnp.max(jnp.abs(g.astype(jnp.float32)))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127)
+    return (q * scale).astype(g.dtype)
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics).
+    Pure function — jit/pjit it with the sharding trees from the launcher."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        if tcfg.grad_compression == "int8":
+            grads = jax.tree.map(quantize_dequantize_int8, grads)
+        params, opt_state, opt_metrics = adamw_update(
+            tcfg.opt, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, tcfg: TrainConfig, rng):
+    from repro.distributed.sharding import unbox
+    annotated = model.init(rng)
+    params = unbox(annotated)
+    opt_state = adamw_init(tcfg.opt, params)
+    return annotated, params, opt_state

@@ -1,0 +1,68 @@
+"""Registry + published-hyperparameter sanity checks."""
+import pytest
+
+from repro.configs import (SHAPES, get_config, list_archs, all_cells,
+                           shape_applicable)
+from repro.configs.base import Family
+
+
+def test_ten_archs_registered():
+    assert len(list_archs()) == 10
+
+
+@pytest.mark.parametrize("arch,lo,hi", [
+    ("nemotron-4-340b", 330e9, 350e9),
+    ("starcoder2-3b", 2.7e9, 3.3e9),
+    ("olmo-1b", 1.0e9, 1.4e9),
+    ("gemma2-2b", 2.3e9, 3.0e9),
+    ("mamba2-780m", 0.7e9, 0.9e9),
+    ("grok-1-314b", 300e9, 330e9),
+    ("mixtral-8x7b", 44e9, 48e9),
+    ("qwen2-vl-2b", 1.3e9, 1.8e9),
+    ("jamba-1.5-large-398b", 380e9, 410e9),
+    ("seamless-m4t-medium", 0.4e9, 0.9e9),
+])
+def test_param_counts_match_published(arch, lo, hi):
+    n = get_config(arch).param_count()
+    assert lo <= n <= hi, f"{arch}: {n / 1e9:.1f}B outside [{lo}, {hi}]"
+
+
+def test_moe_active_params():
+    grok = get_config("grok-1-314b")
+    assert grok.active_param_count() < 0.35 * grok.param_count()
+    mix = get_config("mixtral-8x7b")
+    assert 12e9 < mix.active_param_count() < 14e9  # ~12.9B active
+
+
+def test_exact_assigned_dims():
+    c = get_config("nemotron-4-340b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (96, 18432, 96, 8, 73728, 256000)
+    c = get_config("jamba-1.5-large-398b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (72, 8192, 64, 8, 24576, 65536)
+    assert c.moe.num_experts == 16 and c.moe.top_k == 2
+    assert c.attn_every == 8  # 1:7 attention:mamba
+    c = get_config("mamba2-780m")
+    assert c.ssm.state_dim == 128 and c.num_heads == 0
+
+
+def test_cell_skip_rules():
+    cells = all_cells()
+    assert len(cells) == 40
+    runnable = [(a, s) for a, s, ok, _ in cells if ok]
+    skipped = [(a, s) for a, s, ok, _ in cells if not ok]
+    assert len(runnable) == 33
+    # long_500k runs only for sub-quadratic / bounded-cache families
+    assert ("mamba2-780m", "long_500k") in runnable
+    assert ("jamba-1.5-large-398b", "long_500k") in runnable
+    assert ("gemma2-2b", "long_500k") in runnable
+    assert all(s == "long_500k" for _, s in skipped)
+    assert ("nemotron-4-340b", "long_500k") in skipped
+
+
+def test_reduced_configs_small():
+    for arch in list_archs():
+        r = get_config(arch).reduced()
+        assert r.d_model <= 128 and r.vocab_size <= 256
+        assert r.param_count() < 30e6

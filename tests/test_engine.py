@@ -1,0 +1,89 @@
+"""RealEngine integration: determinism across scheduling modes + Table-4
+behaviour (dynamic PD slashes TTFT under backlog, same outputs)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.distributed.sharding import unbox
+from repro.models import build_model
+from repro.serving.engine import RealEngine
+from repro.serving.request import Request
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("olmo-1b").reduced()
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    return cfg, model, params
+
+
+def mk_requests(cfg, n=6, prompt=12, out=8, gap=0.01):
+    return [Request(prompt_len=prompt, max_new_tokens=out,
+                    prompt_tokens=np.random.default_rng(s).integers(
+                        0, cfg.vocab_size, prompt).tolist(),
+                    arrival_time=s * gap)
+            for s in range(n)]
+
+
+def reference_outputs(cfg, model, params, reqs, max_len=64):
+    import jax.numpy as jnp
+    outs = []
+    for r in reqs:
+        cache = model.init_cache(1, max_len)
+        toks = np.asarray(r.prompt_tokens, np.int32)[None]
+        lg, cache, _ = model.prefill(params, {"tokens": toks}, cache)
+        seq = [int(np.argmax(np.asarray(lg[0])))]
+        L = r.prompt_len
+        for _ in range(r.max_new_tokens - 1):
+            lg, cache = model.decode(params, jnp.asarray([seq[-1]], jnp.int32),
+                                     cache, jnp.asarray([L], jnp.int32))
+            seq.append(int(np.argmax(np.asarray(lg[0]))))
+            L += 1
+        outs.append(seq)
+    return outs
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["passthrough", "static_colocate",
+                                  "dynamic_pd"])
+def test_engine_matches_reference(setup, mode):
+    cfg, model, params = setup
+    reqs = mk_requests(cfg)
+    ref = reference_outputs(cfg, model, params, reqs)
+    eng = RealEngine(model, params, mode=mode, max_num_seqs=2, max_len=64)
+    try:
+        res = eng.run(reqs, timeout=300)
+    finally:
+        eng.shutdown()
+    assert res["completed"] == len(reqs)
+    assert [r.output_tokens for r in reqs] == ref
+    # metrics sanity
+    assert res["ttft_mean_s"] > 0 and res["tpot_mean_s"] > 0
+
+
+@pytest.mark.slow
+def test_dynamic_pd_improves_ttft_under_backlog(setup):
+    """Table 4's qualitative claim on the REAL engine: with a deep backlog,
+    dynamic PD co-location yields far lower TTFT than static co-location at
+    similar throughput."""
+    cfg, model, params = setup
+    results = {}
+    # short prompts + long outputs: decode occupancy (not prefill cost) is
+    # what blocks waiting requests under static admission gating
+    for mode in ["static_colocate", "dynamic_pd"]:
+        reqs = mk_requests(cfg, n=6, prompt=8, out=32, gap=0.0)  # burst
+        eng = RealEngine(model, params, mode=mode, max_num_seqs=2, max_len=64)
+        try:
+            results[mode] = (eng.run(reqs, timeout=300),
+                             [r.ttft for r in reqs])
+        finally:
+            eng.shutdown()
+    static_ttft = results["static_colocate"][0]["ttft_mean_s"]
+    dyn_ttft = results["dynamic_pd"][0]["ttft_mean_s"]
+    assert dyn_ttft < static_ttft * 0.8, (dyn_ttft, static_ttft)
+    # throughput comparable (within 40% on noisy CPU timing)
+    st_tp = results["static_colocate"][0]["output_tokens_per_s"]
+    dy_tp = results["dynamic_pd"][0]["output_tokens_per_s"]
+    assert dy_tp > 0.6 * st_tp

@@ -1,0 +1,80 @@
+"""Loop-aware HLO accounting: trip-count multipliers must be applied."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze, parse_module
+
+
+def compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_flops_multiplied():
+    N, R = 128, 10
+
+    def body(x, _):
+        return x @ W, None
+
+    W = jnp.ones((N, N), jnp.float32)
+
+    def fn(x):
+        y, _ = jax.lax.scan(body, x, None, length=R)
+        return y
+
+    x = jnp.ones((N, N), jnp.float32)
+    r = analyze(compile_text(fn, x))
+    expected = R * 2 * N ** 3
+    assert 0.9 * expected <= r.flops <= 1.2 * expected, (r.flops, expected)
+    assert r.loop_count >= 1
+
+
+def test_unrolled_matches_scan():
+    N, R = 64, 6
+    W = jnp.eye(N, dtype=jnp.float32)
+
+    def fn_scan(x):
+        y, _ = jax.lax.scan(lambda c, _: (c @ W, None), x, None, length=R)
+        return y
+
+    def fn_unrolled(x):
+        for _ in range(R):
+            x = x @ W
+        return x
+
+    x = jnp.ones((N, N), jnp.float32)
+    a = analyze(compile_text(fn_scan, x)).flops
+    b = analyze(compile_text(fn_unrolled, x)).flops
+    assert abs(a - b) / b < 0.25, (a, b)
+
+
+def test_nested_scan_multipliers():
+    N, R1, R2 = 32, 4, 5
+    W = jnp.ones((N, N), jnp.float32)
+
+    def inner(x, _):
+        return x @ W, None
+
+    def outer(x, _):
+        y, _ = jax.lax.scan(inner, x, None, length=R2)
+        return y, None
+
+    def fn(x):
+        y, _ = jax.lax.scan(outer, x, None, length=R1)
+        return y
+
+    x = jnp.ones((N, N), jnp.float32)
+    r = analyze(compile_text(fn, x))
+    expected = R1 * R2 * 2 * N ** 3
+    assert 0.9 * expected <= r.flops <= 1.3 * expected, (r.flops, expected)
+
+
+def test_parse_module_finds_computations():
+    def fn(x):
+        return jnp.tanh(x) @ x
+
+    x = jnp.ones((16, 16), jnp.float32)
+    comps = parse_module(compile_text(fn, x))
+    assert len(comps) >= 1
+    kinds = {op.kind for c in comps.values() for op in c.ops}
+    assert "dot" in kinds or "fusion" in kinds

@@ -1,0 +1,128 @@
+"""Layer-level unit tests: norms, RoPE/M-RoPE, blocked attention, KV cache."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import Norm, PosEmb
+from repro.models import layers as L
+
+
+def naive_attention(q, k, v, causal, scale, window=0, softcap=0.0):
+    B, S, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qr = q.reshape(B, S, KVH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    valid = jnp.ones((S, S), bool)
+    if causal:
+        valid &= kpos <= qpos
+    if window:
+        valid &= kpos > qpos - window
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D)
+
+
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, 0, 0.0), (True, 7, 0.0), (False, 0, 0.0), (True, 0, 30.0)])
+def test_blocked_attention_matches_naive(rng_key, causal, window, softcap):
+    B, S, H, KVH, D = 2, 50, 4, 2, 16
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KVH, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KVH, D), jnp.float32)
+    out = L.blocked_attention(q, k, v, causal=causal, scale=0.25,
+                              window=window, softcap=softcap,
+                              block_q=16, block_kv=16)
+    ref = naive_attention(q, k, v, causal, 0.25, window, softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rope_rotation_property(rng_key):
+    """RoPE preserves norms and relative-position inner products."""
+    D = 32
+    x = jax.random.normal(rng_key, (1, 8, 1, D), jnp.float32)
+    pos = jnp.arange(8, dtype=jnp.int32)[None]
+    cos, sin = L.rope_cos_sin(pos, D, 10_000.0)
+    y = L.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+    # <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, D))
+    def dot_at(i, j):
+        pi = jnp.asarray([[i]], jnp.int32)
+        pj = jnp.asarray([[j]], jnp.int32)
+        ci, si = L.rope_cos_sin(pi, D, 10_000.0)
+        cj, sj = L.rope_cos_sin(pj, D, 10_000.0)
+        return float(jnp.sum(L.apply_rope(q, ci, si)
+                             * L.apply_rope(k, cj, sj)))
+    assert abs(dot_at(3, 5) - dot_at(10, 12)) < 1e-4
+    assert abs(dot_at(0, 4) - dot_at(7, 11)) < 1e-4
+
+
+def test_mrope_text_mode_equals_rope(rng_key):
+    """With t==h==w positions, M-RoPE must reduce to standard RoPE."""
+    D = 32
+    pos = jnp.arange(6, dtype=jnp.int32)[None]          # [1, 6]
+    pos3 = jnp.broadcast_to(pos[None], (3, 1, 6))
+    c1, s1 = L.rope_cos_sin(pos, D, 10_000.0)
+    c2, s2 = L.mrope_cos_sin(pos3, D, 10_000.0)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+
+
+def test_mrope_sections_sum():
+    for d in (64, 128, 256):
+        t, h, w = L.mrope_sections(d)
+        assert t + h + w == d // 2
+
+
+def test_nonparam_ln_no_params():
+    cfg = get_config("olmo-1b").reduced()
+    assert cfg.norm == Norm.NONPARAM_LN
+    p = L.norm_init(cfg, 16)
+    assert p == {}
+    x = jnp.ones((2, 3, 16)) * 5
+    y = L.apply_norm(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-5)
+
+
+def test_kv_ring_buffer_prefill(rng_key):
+    """Ring cache after a long prefill holds exactly the last W tokens."""
+    cfg = dataclasses.replace(get_config("mixtral-8x7b").reduced(),
+                              kv_cache_dtype="float32")
+    W = 8
+    cache = L.kv_cache_init(cfg, 1, max_len=64, window=W)
+    S = 21
+    k = jnp.arange(S, dtype=jnp.float32)[None, :, None, None] * jnp.ones(
+        (1, S, cfg.num_kv_heads, cfg.head_dim))
+    new = L.kv_write_prefill(cache, k, k)
+    got = sorted(np.asarray(new["k"][0, :, 0, 0]).tolist())
+    assert got == list(range(S - W, S))
+    # ring alignment: slot j holds position p with p % W == j
+    for j in range(W):
+        assert int(np.asarray(new["k"][0, j, 0, 0])) % W == j
+
+
+def test_kv_int8_quantization_roundtrip(rng_key):
+    cfg = dataclasses.replace(get_config("olmo-1b").reduced(),
+                              kv_cache_dtype="int8")
+    cache = L.kv_cache_init(cfg, 2, max_len=8)
+    k = jax.random.normal(rng_key, (2, 8, cfg.num_kv_heads, cfg.head_dim))
+    new = L.kv_write_prefill(cache, k, k)
+    kd, vd = L.kv_read(new, jnp.float32)
+    err = np.max(np.abs(np.asarray(kd) - np.asarray(k)))
+    amax = float(jnp.max(jnp.abs(k)))
+    assert err <= amax / 127.0 * 1.01  # within one quantization step

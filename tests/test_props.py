@@ -1,0 +1,151 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.api import OpDescriptor, OpType, Phase
+from repro.core.profiler import Profiler
+from repro.core.scheduler import DynamicPDPolicy, StaticTimeSlicePolicy
+from repro.serving.kvcache import OutOfPages, PagedAllocator
+from repro.training.optimizer import AdamWConfig, lr_at
+
+
+# ------------------------------------------------------------ allocator
+@settings(max_examples=200, deadline=None)
+@given(st.lists(
+    st.tuples(st.sampled_from(["alloc", "append", "free"]),
+              st.integers(0, 15), st.integers(1, 70)),
+    min_size=1, max_size=60))
+def test_paged_allocator_invariants(ops):
+    a = PagedAllocator(num_pages=32, page_size=8)
+    live = set()
+    for kind, rid, tokens in ops:
+        try:
+            if kind == "alloc" and rid not in live:
+                a.allocate(rid, tokens)
+                live.add(rid)
+            elif kind == "append" and rid in live:
+                a.append(rid, tokens)
+            elif kind == "free":
+                a.free(rid)
+                live.discard(rid)
+        except OutOfPages:
+            pass
+        a.check_invariants()
+    for rid in list(live):
+        a.free(rid)
+    a.check_invariants()
+    assert a.free_pages == 32
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 2000), st.integers(1, 64))
+def test_pages_needed_exact(tokens, page_size):
+    a = PagedAllocator(4096, page_size)
+    a.allocate(1, tokens)
+    pages = a.page_table(1)
+    assert (len(pages) - 1) * page_size < tokens <= len(pages) * page_size
+
+
+# ------------------------------------------------------------ scheduler
+@settings(max_examples=60, deadline=None)
+@given(st.floats(0.05, 0.95), st.lists(st.booleans(), min_size=20,
+                                       max_size=100))
+def test_deficit_rr_share_convergence(share, arrivals):
+    """With both queues always backlogged, realized device-time share
+    converges to the target regardless of op interleaving."""
+    from collections import deque
+    pol = StaticTimeSlicePolicy(share)
+    prof = Profiler()
+    queues = {Phase.PREFILL: deque(), Phase.DECODE: deque(),
+              Phase.OTHER: deque()}
+
+    def refill():
+        for q, ph in ((queues[Phase.PREFILL], Phase.PREFILL),
+                      (queues[Phase.DECODE], Phase.DECODE)):
+            while len(q) < 3:
+                q.append(OpDescriptor(OpType.LAUNCH, phase=ph))
+
+    durations = {Phase.PREFILL: 0.010, Phase.DECODE: 0.004}
+    now = 0.0
+    for _ in range(400):
+        refill()
+        ph = pol.select(queues, prof, now)
+        op = queues[ph].popleft()
+        pol.on_dispatch(op, durations[ph])
+        now += durations[ph]
+    total = sum(pol._spent.values())
+    realized = pol._spent[Phase.DECODE] / total
+    assert abs(realized - share) < 0.08
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(0.05, 0.95))
+def test_scheduler_work_conserving(share):
+    """An empty opposite queue must never block dispatch."""
+    from collections import deque
+    pol = StaticTimeSlicePolicy(share)
+    prof = Profiler()
+    queues = {Phase.PREFILL: deque(), Phase.DECODE: deque(),
+              Phase.OTHER: deque()}
+    queues[Phase.DECODE].append(OpDescriptor(OpType.LAUNCH,
+                                             phase=Phase.DECODE))
+    assert pol.select(queues, prof, 0.0) == Phase.DECODE
+    queues[Phase.DECODE].clear()
+    queues[Phase.PREFILL].append(OpDescriptor(OpType.LAUNCH,
+                                              phase=Phase.PREFILL))
+    assert pol.select(queues, prof, 0.0) == Phase.PREFILL
+
+
+def test_dynamic_ttft_guard_prevents_starvation():
+    """A prefill older than the guard always dispatches next."""
+    from collections import deque
+    from repro.core.scheduler import DynamicPDConfig
+    pol = DynamicPDPolicy(DynamicPDConfig(ttft_guard_s=0.5), decode_share=0.95)
+    prof = Profiler()
+    old_prefill = OpDescriptor(OpType.LAUNCH, phase=Phase.PREFILL)
+    old_prefill.enqueue_time = 0.0
+    queues = {Phase.PREFILL: deque([old_prefill]),
+              Phase.DECODE: deque([OpDescriptor(OpType.LAUNCH,
+                                                phase=Phase.DECODE)]),
+              Phase.OTHER: deque()}
+    assert pol.select(queues, prof, now=1.0) == Phase.PREFILL
+
+
+# ------------------------------------------------------------ lr schedule
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 500), st.integers(501, 5000))
+def test_lr_schedule_properties(warmup, total):
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=warmup, total_steps=total,
+                      min_lr_frac=0.1)
+    assert float(lr_at(cfg, 0)) == 0.0
+    assert abs(float(lr_at(cfg, warmup)) - 1e-3) < 1e-9
+    assert float(lr_at(cfg, total)) >= 0.1 * 1e-3 - 1e-12
+    # monotone decay after warmup
+    a = float(lr_at(cfg, warmup + (total - warmup) // 3))
+    b = float(lr_at(cfg, warmup + 2 * (total - warmup) // 3))
+    assert a >= b
+
+
+# ------------------------------------------------------------ moe routing
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8), st.integers(2, 8))
+def test_moe_dropless_capacity(s, e):
+    """Dropless inference capacity can never drop a token."""
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models.moe import _route_chunk, moe_params
+    import dataclasses as dc
+    cfg = get_config("mixtral-8x7b").reduced()
+    cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, num_experts=e,
+                                         top_k=min(2, e)))
+    p = moe_params(cfg, jax.random.PRNGKey(0))
+    from repro.distributed.sharding import unbox
+    p = unbox(p)
+    x = jax.random.normal(jax.random.PRNGKey(s), (1, s, cfg.d_model),
+                          jnp.float32)
+    y, aux = _route_chunk(cfg, p, x, dropless=True)
+    # every token got its full top-k gate mass => nonzero output
+    assert bool(jnp.all(jnp.any(jnp.abs(y) > 0, axis=-1)))

@@ -1,0 +1,78 @@
+"""End-to-end behaviour tests for the paper's system (FlexNPU on JAX)."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving import (Cluster, PagedKVStore, deployment_6p2d,
+                           deployment_dynamic, make_workload)
+from repro.serving.simulator import DeploymentSpec
+
+
+def test_paper_headline_direction_1k1k():
+    """Table 3, 1K-1K row: dynamic PD co-location > static 6P2D
+    disaggregation under a saturating balanced workload (paper: +26.33%)."""
+    cfg = get_config("mixtral-8x7b")
+    wl = make_workload(1200, 1024, 1024, rate=1e5, seed=11)
+    r_disagg = Cluster(cfg, deployment_6p2d()).run(copy.deepcopy(wl),
+                                                   until=36000)
+    r_dyn = Cluster(cfg, deployment_dynamic()).run(copy.deepcopy(wl),
+                                                   until=36000)
+    gain = r_dyn["requests_per_s"] / r_disagg["requests_per_s"] - 1
+    assert gain > 0.05, f"expected >5% gain, got {gain:.1%}"
+
+
+def test_paper_headline_direction_ttft():
+    """Table 4: dynamic vs static co-location — TTFT reduced by >90% under
+    backlog, TPOT approximately unchanged."""
+    cfg = get_config("qwen2-vl-2b")  # closest assigned dense small arch
+    wl = make_workload(200, 1024, 1024, rate=4.0, seed=42)
+    static = DeploymentSpec(mode="static_colocate", colocated_instances=1,
+                            colocated_chips=4)
+    dynamic = DeploymentSpec(mode="dynamic_pd", colocated_instances=1,
+                             colocated_chips=4)
+    from repro.serving.simulator import SimConfig
+    sim = SimConfig(max_num_seqs=4)  # paper: max_num_seqs=4, rate=4
+    r_s = Cluster(cfg, static, sim_cfg=sim).run(copy.deepcopy(wl),
+                                                until=360000)
+    r_d = Cluster(cfg, dynamic, sim_cfg=sim).run(copy.deepcopy(wl),
+                                                 until=360000)
+    assert r_d["ttft_mean_s"] < 0.1 * r_s["ttft_mean_s"]
+    # TPOT approximately unchanged; the simulator's prefill interleaving is
+    # coarser than the paper's AI-core share control, so tolerance is wider
+    # than the paper's +-3% (benchmarks report the exact numbers)
+    assert abs(r_d["tpot_mean_s"] - r_s["tpot_mean_s"]) \
+        < 0.5 * r_s["tpot_mean_s"]
+
+
+def test_paged_store_roundtrip():
+    st = PagedKVStore(num_pages=16, page_size=4, kv_heads=2, head_dim=8)
+    rng = np.random.default_rng(0)
+    k1 = rng.standard_normal((10, 2, 8)).astype(np.float32)
+    v1 = rng.standard_normal((10, 2, 8)).astype(np.float32)
+    st.write_prompt(1, k1, v1)
+    for t in range(3):
+        st.append_token(1, k1[0] * (t + 2), v1[0] * (t + 2))
+    k_out, v_out = st.gather(1)
+    assert k_out.shape == (13, 2, 8)
+    np.testing.assert_array_equal(k_out[:10], k1)
+    np.testing.assert_array_equal(k_out[10], k1[0] * 2)
+    st.allocator.check_invariants()
+    st.allocator.free(1)
+    assert st.allocator.free_pages == 16
+
+
+def test_virtualization_zero_copy_contract():
+    """Descriptors must carry handles/metadata only — launching through the
+    daemon must not copy or serialize the tensor payload (identity check)."""
+    from repro.core import FlexClient, FlexDaemon, Phase, RealBackend
+    big = np.ones((1 << 20,), np.float32)
+    seen = {}
+    d = FlexDaemon(0, RealBackend())
+    d.start()
+    c = FlexClient(d)
+    c.launch(0, lambda arr: seen.setdefault("id", id(arr)),
+             big, phase=Phase.OTHER).result()
+    d.stop()
+    assert seen["id"] == id(big)  # same object end-to-end: zero copies

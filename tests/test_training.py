@@ -1,0 +1,126 @@
+"""Training substrate: loss goes down, grad compression, sharding rules."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import MULTI_POD_MESH, SINGLE_POD_MESH, get_config
+from repro.distributed.sharding import (Param, axes_tree, make_rules, unbox)
+from repro.models import build_model
+from repro.training import (AdamWConfig, TrainConfig, adamw_init,
+                            make_batch, make_train_step,
+                            quantize_dequantize_int8)
+
+
+def test_loss_decreases_olmo(rng_key):
+    cfg = get_config("olmo-1b").reduced()
+    model = build_model(cfg)
+    tcfg = TrainConfig(opt=AdamWConfig(lr=1e-3, warmup_steps=3,
+                                       total_steps=40))
+    params = unbox(model.init(rng_key))
+    opt = adamw_init(tcfg.opt, params)
+    step = jax.jit(make_train_step(model, tcfg))
+    losses = []
+    for i in range(15):
+        batch = {k: jnp.asarray(v)
+                 for k, v in make_batch(cfg, 8, 64, step=i).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_grad_compression_still_learns(rng_key):
+    cfg = get_config("olmo-1b").reduced()
+    model = build_model(cfg)
+    tcfg = TrainConfig(opt=AdamWConfig(lr=1e-3, warmup_steps=3,
+                                       total_steps=40),
+                       grad_compression="int8")
+    params = unbox(model.init(rng_key))
+    opt = adamw_init(tcfg.opt, params)
+    step = jax.jit(make_train_step(model, tcfg))
+    losses = []
+    for i in range(12):
+        batch = {k: jnp.asarray(v)
+                 for k, v in make_batch(cfg, 8, 64, step=i).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3
+
+
+def test_int8_quant_error_bound(rng_key):
+    g = jax.random.normal(rng_key, (256, 64)) * 0.01
+    q = quantize_dequantize_int8(g)
+    amax = float(jnp.max(jnp.abs(g)))
+    assert float(jnp.max(jnp.abs(q - g))) <= amax / 127.0 + 1e-9
+
+
+def test_moment_dtype_option(rng_key):
+    cfg = get_config("olmo-1b").reduced()
+    model = build_model(cfg)
+    params = unbox(model.init(rng_key))
+    st = adamw_init(AdamWConfig(moment_dtype="bfloat16"), params)
+    assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(st["m"]))
+
+
+# ------------------------------------------------------- sharding rules
+def test_rules_divisibility_fallback():
+    """starcoder2: 24 heads don't divide tp=16 -> head_dim takes the model
+    axis; nemotron: 96 heads divide -> heads take it."""
+    sc = get_config("starcoder2-3b")
+    rules = make_rules(sc, SINGLE_POD_MESH, "train")
+    spec = rules.spec_for(("embed", "heads", "head_dim"),
+                          (sc.d_model, sc.num_heads, sc.head_dim))
+    assert spec == jax.sharding.PartitionSpec("data", None, "model")
+    nm = get_config("nemotron-4-340b")
+    rules = make_rules(nm, SINGLE_POD_MESH, "train")
+    spec = rules.spec_for(("embed", "heads", "head_dim"),
+                          (nm.d_model, nm.num_heads, nm.head_dim))
+    assert spec == jax.sharding.PartitionSpec("data", "model")  # tail trimmed
+
+
+def test_rules_expert_fallback():
+    """grok: 8 experts don't divide 16 -> mlp dim sharded inside experts;
+    jamba: 16 experts divide -> expert axis sharded."""
+    grok = get_config("grok-1-314b")
+    rules = make_rules(grok, SINGLE_POD_MESH, "train")
+    spec = rules.spec_for(("expert", "embed", "mlp"),
+                          (8, grok.d_model, grok.d_ff))
+    assert spec == jax.sharding.PartitionSpec(None, "data", "model")
+    jam = get_config("jamba-1.5-large-398b")
+    rules = make_rules(jam, SINGLE_POD_MESH, "train")
+    spec = rules.spec_for(("expert", "embed", "mlp"),
+                          (16, jam.d_model, jam.d_ff))
+    assert spec == jax.sharding.PartitionSpec("model", "data")
+
+
+def test_rules_multipod_fsdp_axes():
+    cfg = get_config("nemotron-4-340b")
+    rules = make_rules(cfg, MULTI_POD_MESH, "train")
+    spec = rules.spec_for(("embed", "mlp"), (cfg.d_model, cfg.d_ff))
+    assert spec == jax.sharding.PartitionSpec(("pod", "data"), "model")
+
+
+def test_serve_mode_tp_only_for_small_archs():
+    small = get_config("olmo-1b")
+    rules = make_rules(small, SINGLE_POD_MESH, "serve")
+    spec = rules.spec_for(("embed", "mlp"), (small.d_model, small.d_ff))
+    assert spec == jax.sharding.PartitionSpec(None, "model")
+    big = get_config("nemotron-4-340b")
+    rules = make_rules(big, SINGLE_POD_MESH, "serve")
+    spec = rules.spec_for(("embed", "mlp"), (big.d_model, big.d_ff))
+    assert spec == jax.sharding.PartitionSpec("data", "model")
+
+
+def test_param_boxing_roundtrip(rng_key):
+    cfg = get_config("olmo-1b").reduced()
+    model = build_model(cfg)
+    ann = model.init(rng_key)
+    vals = unbox(ann)
+    axes = axes_tree(ann)
+    flat_v = jax.tree.leaves(vals)
+    flat_a = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(flat_v) == len(flat_a)
+    for v, a in zip(flat_v, flat_a):
+        assert v.ndim == len(a)
