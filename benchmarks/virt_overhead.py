@@ -5,13 +5,29 @@ Real JAX execution (reduced model, CPU): identical serving workload under
   (b) FlexNPU proxy (descriptors + handle translation + phase queues).
 Reports total token throughput + relative performance, like the paper's
 AISBench setup (which found 1.0108x — i.e. no overhead, slight win from
-async proxying)."""
+async proxying), plus the per-verb interposition latency of the v2 session
+API (descriptor packaging + handle translation + queueing, no compute)."""
 from __future__ import annotations
 
 import time
 
 import jax
 import numpy as np
+
+
+def _verb_latency(mode: str, n: int = 2000) -> float:
+    """Mean per-op round-trip of an empty launch through a session."""
+    from repro.core import Phase, connect
+    with connect(mode=mode) as sess:
+        stream = sess.create_stream(phase=Phase.OTHER)
+        sess.launch(stream, lambda: None).result()  # warm the path
+        t0 = time.perf_counter()
+        for _ in range(n):
+            sess.launch(stream, lambda: None)
+        sess.synchronize(stream if mode != "passthrough" else None)
+        dt = time.perf_counter() - t0
+        sess.destroy_stream(stream)
+    return dt / n
 
 
 def run(quick: bool = False):
@@ -45,9 +61,16 @@ def run(quick: bool = False):
             eng.shutdown()
         results[mode] = res
 
+    lat_pass = _verb_latency("passthrough")
+    lat_flex = _verb_latency("flex")
     base = results["passthrough"]["output_tokens_per_s"]
     flex = results["dynamic_pd"]["output_tokens_per_s"]
     rows = [
+        ("table1.verb_latency_us.passthrough", lat_pass * 1e6,
+         {"per_op_us": round(lat_pass * 1e6, 2)}),
+        ("table1.verb_latency_us.flex_proxy", lat_flex * 1e6,
+         {"per_op_us": round(lat_flex * 1e6, 2),
+          "overhead_us": round((lat_flex - lat_pass) * 1e6, 2)}),
         ("table1.native_passthrough.tokens_per_s", 1e6 / max(base, 1e-9),
          {"tokens_per_s": round(base, 2), "relative": 1.0}),
         ("table1.flexnpu_proxy.tokens_per_s", 1e6 / max(flex, 1e-9),

@@ -1,5 +1,6 @@
-"""Quickstart: build an assigned architecture, train it briefly, then serve
-requests through FlexNPU's dynamic PD co-location — all on CPU.
+"""Quickstart: build an assigned architecture, train it briefly, tour the
+v2 session API, then serve requests through FlexNPU's dynamic PD
+co-location — all on CPU.
 
     PYTHONPATH=src python examples/quickstart.py [--arch gemma2-2b]
 """
@@ -46,11 +47,29 @@ def main():
         if i % 2 == 0:
             print(f"  train step {i}: loss={float(m['loss']):.3f}")
 
+    # --- 2. the virtual-device session API in five lines
+    from repro.core import Phase, connect
+    with connect(mode="flex", devices=1) as sess:
+        stream = sess.create_stream(phase=Phase.OTHER)
+        buf = sess.malloc(1 << 16, tag="demo")
+        sess.memcpy(buf, np.arange(64, dtype=np.float32), vstream=stream)
+        ev = sess.create_event()
+        sess.record_event(ev, stream)          # happens-before edge source
+        sess.wait_event(ev, stream).result()
+        back = sess.memcpy(None, buf, vstream=stream).result()
+        sess.synchronize(stream)
+        sess.destroy_event(ev)
+        sess.destroy_stream(stream)
+        sess.free(buf)
+        print(f"  session round-trip through a device buffer: "
+              f"sum={float(back.sum()):.0f} (expect 2016), "
+              f"leak-free={sess.stats()[0]['buffers'] == 0}")
+
     if cfg.is_encdec or cfg.frontend_stub:
         print("  (serving demo uses token-input archs; done)")
         return
 
-    # --- 2. serve through FlexNPU dynamic PD co-location
+    # --- 3. serve through FlexNPU dynamic PD co-location
     rng = np.random.default_rng(0)
     reqs = [Request(prompt_len=12, max_new_tokens=8,
                     prompt_tokens=rng.integers(0, cfg.vocab_size, 12).tolist(),

@@ -1,7 +1,9 @@
 """FlexNPU serving demo (real execution): the same engine code under
 (a) native passthrough, (b) static PD co-location (head-of-line blocking),
 (c) FlexNPU dynamic PD co-location — reproducing Table 1 and Table 4's
-mechanisms live on CPU.
+mechanisms live on CPU.  The engine speaks only the v2 session API
+(repro.core.connect); swapping modes swaps the session backend, never the
+engine code — that is the transparency property.
 
     PYTHONPATH=src python examples/serve_dynamic_pd.py
 """
@@ -41,6 +43,8 @@ def main():
         finally:
             eng.shutdown()
         outputs[mode] = [r.output_tokens for r in reqs]
+        assert eng.session.stats()[0]["streams"] == 0, \
+            "engine shutdown must release its stream handles"
         print(f"{mode:18s} tok/s={res['output_tokens_per_s']:7.1f}  "
               f"TTFT mean={res['ttft_mean_s'] * 1e3:8.1f}ms  "
               f"p99={res['ttft_p99_s'] * 1e3:8.1f}ms  "

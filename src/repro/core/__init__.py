@@ -1,16 +1,23 @@
 # FlexNPU core: transparent user-space NPU virtualization (the paper's
 # primary contribution, adapted to the JAX runtime boundary — DESIGN.md §2).
-from repro.core.api import Future, OpDescriptor, OpType, Phase, RuntimeAPI
+#
+# v2 entry point: ``connect(mode=..., devices=N) -> Session`` (session.py).
+# The v1 constructors (FlexDaemon / FlexClient / PassthroughClient) remain
+# public for single-device and test use; Session wraps them.
+from repro.core.api import (Future, MemcpyKind, OpDescriptor, OpType, Phase,
+                            RuntimeAPI, memcpy_model_time)
 from repro.core.client import FlexClient, PassthroughClient
 from repro.core.daemon import FlexDaemon, RealBackend
 from repro.core.profiler import Profiler
 from repro.core.scheduler import (DynamicPDConfig, DynamicPDPolicy,
                                   FIFOPolicy, SchedulerPolicy,
                                   StaticTimeSlicePolicy)
+from repro.core.session import Session, connect
 
 __all__ = [
-    "Future", "OpDescriptor", "OpType", "Phase", "RuntimeAPI",
-    "FlexClient", "PassthroughClient", "FlexDaemon", "RealBackend",
-    "Profiler", "DynamicPDConfig", "DynamicPDPolicy", "FIFOPolicy",
-    "SchedulerPolicy", "StaticTimeSlicePolicy",
+    "Future", "MemcpyKind", "OpDescriptor", "OpType", "Phase", "RuntimeAPI",
+    "memcpy_model_time", "FlexClient", "PassthroughClient", "FlexDaemon",
+    "RealBackend", "Profiler", "DynamicPDConfig", "DynamicPDPolicy",
+    "FIFOPolicy", "SchedulerPolicy", "StaticTimeSlicePolicy", "Session",
+    "connect",
 ]

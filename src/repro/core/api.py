@@ -1,13 +1,37 @@
 """The virtual NPU runtime API — the AscendCL analogue (DESIGN.md §2).
 
-This is the *narrow, stable boundary* the paper interposes on.  Serving
-engines call only these verbs; whether they hit a passthrough backend or the
-FlexNPU daemon is invisible to them (transparency), exactly as FlexNPU's
-LD_PRELOAD client is invisible to vLLM.
+This is the *narrow, stable boundary* the paper interposes on (FlexNPU
+§3.1-§3.2).  Applications obtain a :class:`~repro.core.session.Session` via
+``repro.core.connect(mode=..., devices=N)`` and speak only these verbs::
+
+    malloc / free / memcpy
+    create_stream / destroy_stream
+    create_event / destroy_event / record_event / wait_event
+    launch / synchronize
+
+Whether the verbs hit a passthrough backend, a threaded FlexDaemon, or the
+discrete-event simulator is invisible to the caller (transparency), exactly
+as FlexNPU's LD_PRELOAD client is invisible to vLLM.
+
+Ordering semantics (the contract every backend honours):
+
+  * ops enqueued on the same virtual stream dispatch in FIFO order and never
+    overlap (a virtual stream is a serial queue, like an AscendCL stream);
+  * ``record_event(ev, s)`` marks a point in stream ``s``;
+    ``wait_event(ev, s')`` holds stream ``s'`` until every record of ``ev``
+    issued before the wait has completed — a cross-stream happens-before
+    edge.  Waiting on a never-recorded event completes immediately
+    (CUDA/ACL semantics);
+  * ``synchronize(vstream)`` blocks the caller until everything previously
+    enqueued on that stream finished; ``synchronize(None)`` drains the whole
+    device.
 
 Descriptors carry **metadata and virtual handles only** — never tensor
 payloads.  Tensor data stays in backend-owned buffers referenced by handle
 (the paper: "large tensor data are not copied through the control path").
+``memcpy`` is the one explicit data-path verb: it moves a payload into/out of
+a backend-owned buffer and is billed at the modeled link bandwidth for its
+direction (H2D/D2H cross the host link; D2D stays on HBM).
 """
 from __future__ import annotations
 
@@ -25,10 +49,39 @@ class OpType(str, enum.Enum):
     CREATE_STREAM = "create_stream"
     DESTROY_STREAM = "destroy_stream"
     CREATE_EVENT = "create_event"
+    DESTROY_EVENT = "destroy_event"
     RECORD_EVENT = "record_event"
     WAIT_EVENT = "wait_event"
     LAUNCH = "launch"              # model/operator execution
-    SYNCHRONIZE = "synchronize"
+    SYNCHRONIZE = "synchronize"    # stream-ordered completion marker
+
+
+# Verbs that only mutate handle tables: they complete inline at enqueue and
+# never wait behind compute (cheap bookkeeping, paper §3.2).
+CONTROL_OPS = (OpType.MALLOC, OpType.FREE, OpType.CREATE_STREAM,
+               OpType.DESTROY_STREAM, OpType.CREATE_EVENT,
+               OpType.DESTROY_EVENT)
+
+
+class MemcpyKind(str, enum.Enum):
+    H2D = "h2d"
+    D2H = "d2h"
+    D2D = "d2d"
+
+
+# Modeled copy-engine bandwidths (DESIGN.md hardware model): H2D/D2H cross
+# the host interconnect; D2D is an on-device HBM-to-HBM move.
+MEMCPY_BW_BYTES = {
+    MemcpyKind.H2D: 32e9,
+    MemcpyKind.D2H: 32e9,
+    MemcpyKind.D2D: 600e9,
+}
+MEMCPY_LATENCY_S = 2e-6
+
+
+def memcpy_model_time(kind: MemcpyKind, nbytes: int) -> float:
+    """Modeled duration of a copy: fixed launch latency + size / link BW."""
+    return MEMCPY_LATENCY_S + nbytes / MEMCPY_BW_BYTES[MemcpyKind(kind)]
 
 
 class Phase(str, enum.Enum):
@@ -40,9 +93,12 @@ class Phase(str, enum.Enum):
 _OP_IDS = itertools.count(1)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class OpDescriptor:
-    """Compact control-path descriptor (the 'packaged AscendCL call')."""
+    """Compact control-path descriptor (the 'packaged AscendCL call').
+
+    Identity equality (``eq=False``): descriptors are unique in-flight
+    objects — queue removal must compare by identity, not field-by-field."""
     op: OpType
     phase: Phase = Phase.OTHER
     vstream: int = 0
@@ -133,23 +189,50 @@ class RuntimeAPI:
 
     Implementations: ``PassthroughClient`` (direct to backend — the paper's
     'native passthrough' baseline) and ``FlexClient`` (interposed — forwards
-    descriptors to a FlexDaemon)."""
+    descriptors to a FlexDaemon).  Both are normally obtained through
+    ``repro.core.connect(...)`` which wraps them in a :class:`Session`."""
 
+    # -- memory -------------------------------------------------------------
     def malloc(self, nbytes: int, *, tag: str = "") -> int:
         raise NotImplementedError
 
     def free(self, vhandle: int) -> None:
         raise NotImplementedError
 
+    def memcpy(self, dst, src, nbytes: Optional[int] = None, *,
+               kind: Optional[MemcpyKind] = None, vstream: int = 0,
+               meta: Optional[Dict] = None) -> Future:
+        """Stream-ordered copy through backend-owned buffers.
+
+        * H2D: ``dst`` is a vhandle, ``src`` a host array/bytes object.
+        * D2H: ``dst`` is None, ``src`` a vhandle; the Future resolves to the
+          payload.
+        * D2D: both are vhandles.
+
+        ``kind`` is inferred from the operand types when omitted."""
+        raise NotImplementedError
+
+    # -- streams ------------------------------------------------------------
     def create_stream(self, *, phase: Phase = Phase.OTHER) -> int:
         raise NotImplementedError
 
+    def destroy_stream(self, vstream: int) -> None:
+        raise NotImplementedError
+
+    # -- events -------------------------------------------------------------
     def create_event(self) -> int:
+        raise NotImplementedError
+
+    def destroy_event(self, vevent: int) -> None:
         raise NotImplementedError
 
     def record_event(self, vevent: int, vstream: int) -> Future:
         raise NotImplementedError
 
+    def wait_event(self, vevent: int, vstream: int) -> Future:
+        raise NotImplementedError
+
+    # -- execution ----------------------------------------------------------
     def launch(self, vstream: int, fn: Optional[Callable], *args,
                phase: Phase = Phase.OTHER, meta: Optional[Dict] = None,
                **kwargs) -> Future:
@@ -157,3 +240,12 @@ class RuntimeAPI:
 
     def synchronize(self, vstream: Optional[int] = None) -> None:
         raise NotImplementedError
+
+
+def infer_memcpy_kind(dst, src) -> MemcpyKind:
+    """H2D when src is host data, D2H when dst is None, else D2D."""
+    if dst is None:
+        return MemcpyKind.D2H
+    if not isinstance(src, int):
+        return MemcpyKind.H2D
+    return MemcpyKind.D2D

@@ -11,13 +11,22 @@ worker overlap host work with NPU execution.
 ``PassthroughClient`` implements the same interface by executing directly —
 the paper's 'native passthrough' baseline.  Engine code is byte-identical
 under either client; that is the transparency property.
+
+Both clients implement the **complete v2 verb vocabulary** (see api.py):
+memory (malloc/free/memcpy), streams (create/destroy), events
+(create/destroy/record/wait), launch, and per-stream synchronize.  Clients
+are normally obtained from ``repro.core.connect(...)`` — constructing them
+directly remains supported for single-device use.
 """
 from __future__ import annotations
 
+import threading
 from typing import Any, Callable, Dict, Optional
 
-from repro.core.api import (Future, OpDescriptor, OpType, Phase, RuntimeAPI)
-from repro.core.daemon import FlexDaemon, RealBackend
+from repro.core.api import (Future, MemcpyKind, OpDescriptor, OpType, Phase,
+                            RuntimeAPI, infer_memcpy_kind, memcpy_model_time)
+from repro.core.daemon import (FlexDaemon, RealBackend, _payload_copy,
+                               _payload_nbytes)
 
 
 class FlexClient(RuntimeAPI):
@@ -25,29 +34,70 @@ class FlexClient(RuntimeAPI):
         self.daemon = daemon
         self.instance = instance
 
-    # -- control-plane verbs ------------------------------------------------
+    # -- memory -------------------------------------------------------------
     def malloc(self, nbytes: int, *, tag: str = "") -> int:
         op = OpDescriptor(OpType.MALLOC, meta={"nbytes": nbytes, "tag": tag,
                                                "instance": self.instance})
         return self.daemon.enqueue(op).result()
 
     def free(self, vhandle: int) -> None:
-        op = OpDescriptor(OpType.FREE, vhandles=(vhandle,))
+        op = OpDescriptor(OpType.FREE, vhandles=(vhandle,),
+                          meta={"instance": self.instance})
         self.daemon.enqueue(op).result()
 
+    def memcpy(self, dst, src, nbytes: Optional[int] = None, *,
+               kind: Optional[MemcpyKind] = None, vstream: int = 0,
+               meta: Optional[Dict] = None) -> Future:
+        kind = MemcpyKind(kind) if kind is not None \
+            else infer_memcpy_kind(dst, src)
+        args = ()
+        if kind == MemcpyKind.H2D:
+            vhandles = (dst,)
+            args = (src,)
+            nbytes = nbytes if nbytes is not None else _payload_nbytes(src)
+        elif kind == MemcpyKind.D2H:
+            vhandles = (src,)
+            nbytes = nbytes or 0
+        else:
+            vhandles = (dst, src) if dst is not None else ()
+            nbytes = nbytes or 0
+        m = dict(meta or {}, kind=kind, nbytes=nbytes, bytes=nbytes,
+                 instance=self.instance,
+                 est_duration=memcpy_model_time(kind, nbytes))
+        op = OpDescriptor(OpType.MEMCPY, vstream=vstream, vhandles=vhandles,
+                          meta=m, args=args)
+        return self.daemon.enqueue(op)
+
+    # -- streams ------------------------------------------------------------
     def create_stream(self, *, phase: Phase = Phase.OTHER) -> int:
-        op = OpDescriptor(OpType.CREATE_STREAM, meta={"phase": phase})
+        op = OpDescriptor(OpType.CREATE_STREAM,
+                          meta={"phase": phase, "instance": self.instance})
         return self.daemon.enqueue(op).result()
 
+    def destroy_stream(self, vstream: int) -> None:
+        op = OpDescriptor(OpType.DESTROY_STREAM, vhandles=(vstream,),
+                          meta={"instance": self.instance})
+        self.daemon.enqueue(op).result()
+
+    # -- events -------------------------------------------------------------
     def create_event(self) -> int:
         return self.daemon.enqueue(OpDescriptor(OpType.CREATE_EVENT)).result()
 
+    def destroy_event(self, vevent: int) -> None:
+        op = OpDescriptor(OpType.DESTROY_EVENT, vhandles=(vevent,))
+        self.daemon.enqueue(op).result()
+
     def record_event(self, vevent: int, vstream: int) -> Future:
         op = OpDescriptor(OpType.RECORD_EVENT, vstream=vstream,
-                          vhandles=(vevent,))
+                          vhandles=(vevent,), meta={"est_duration": 0.0})
         return self.daemon.enqueue(op)
 
-    # -- data-plane verbs ---------------------------------------------------
+    def wait_event(self, vevent: int, vstream: int) -> Future:
+        op = OpDescriptor(OpType.WAIT_EVENT, vstream=vstream,
+                          vhandles=(vevent,), meta={"est_duration": 0.0})
+        return self.daemon.enqueue(op)
+
+    # -- execution ----------------------------------------------------------
     def launch(self, vstream: int, fn: Optional[Callable], *args,
                phase: Phase = Phase.OTHER, meta: Optional[Dict] = None,
                **kwargs) -> Future:
@@ -57,7 +107,14 @@ class FlexClient(RuntimeAPI):
         return self.daemon.enqueue(op)
 
     def synchronize(self, vstream: Optional[int] = None) -> None:
-        self.daemon.drain()
+        if vstream is None:
+            self.daemon.drain()
+            return
+        # Stream-ordered marker: completes only after everything previously
+        # enqueued on this stream has, in either drive mode.
+        op = OpDescriptor(OpType.SYNCHRONIZE, vstream=vstream,
+                          meta={"est_duration": 0.0})
+        self.daemon.enqueue(op).result()
 
 
 class PassthroughClient(RuntimeAPI):
@@ -65,14 +122,26 @@ class PassthroughClient(RuntimeAPI):
     interception machinery — no descriptors, no handle translation, no
     phase queues, no policy.  A single FIFO submission thread stands in for
     the device stream (so async submission semantics match real AscendCL /
-    TPU streams, isolating FlexNPU's *interposition* cost in Table 1)."""
+    TPU streams, isolating FlexNPU's *interposition* cost in Table 1).
+
+    All verbs are supported; because there is one physical stream, every
+    virtual stream maps onto it and event edges reduce to FIFO order."""
 
     def __init__(self, backend: Optional[RealBackend] = None):
         self.backend = backend or RealBackend()
-        self._mem = 0
+        self._buffers: Dict[int, Dict[str, Any]] = {}
+        self._mem_refs: Dict[int, int] = {}
+        self._streams: Dict[int, Phase] = {}
+        self._events: Dict[int, bool] = {}
+        self._next_handle = 0
+        self._lock = threading.Lock()
+        # in-flight tracking: _unfinished counts ops submitted but not yet
+        # completed by the worker (q.empty() alone races with the op that the
+        # worker has dequeued but is still executing)
+        self._unfinished = 0
+        self._done_cv = threading.Condition(self._lock)
         import queue
         self._q: "queue.Queue" = queue.Queue()
-        import threading
         self._thread = threading.Thread(target=self._worker, daemon=True,
                                         name="passthrough-stream")
         self._thread.start()
@@ -90,39 +159,136 @@ class PassthroughClient(RuntimeAPI):
                     out = jax.block_until_ready(out)
                 except Exception:
                     pass
-                fut.set_result(out)
+                err = None
             except BaseException as e:
-                fut.set_error(e)
+                out, err = None, e
+            # resolve the future BEFORE waking synchronize(): a caller that
+            # synchronizes then inspects futures must see them done
+            if err is None:
+                fut.set_result(out)
+            else:
+                fut.set_error(err)
+            with self._done_cv:
+                self._unfinished -= 1
+                self._done_cv.notify_all()
+
+    def _submit(self, fn, args=(), kwargs=None) -> Future:
+        f = Future()
+        with self._done_cv:
+            self._unfinished += 1
+        self._q.put((fn, args, kwargs or {}, f))
+        return f
 
     def close(self):
         self._q.put(None)
 
+    def _handle(self) -> int:
+        with self._lock:
+            self._next_handle += 1
+            return self._next_handle
+
+    # -- memory -------------------------------------------------------------
     def malloc(self, nbytes: int, *, tag: str = "") -> int:
-        self._mem += 1
-        return self._mem
+        h = self._handle()
+        self._buffers[h] = {"nbytes": nbytes, "tag": tag, "data": None}
+        return h
 
     def free(self, vhandle: int) -> None:
-        pass
+        # strict like the daemon path: engines must behave identically
+        # under either client (transparency), including on a double free
+        # or a free racing a queued memcpy
+        with self._lock:
+            if self._mem_refs.get(vhandle):
+                raise RuntimeError(
+                    f"free({vhandle}): buffer has pending memcpy work")
+        if vhandle not in self._buffers:
+            raise KeyError(f"memory: unknown virtual handle {vhandle}")
+        del self._buffers[vhandle]
 
+    def memcpy(self, dst, src, nbytes: Optional[int] = None, *,
+               kind: Optional[MemcpyKind] = None, vstream: int = 0,
+               meta: Optional[Dict] = None) -> Future:
+        kind = MemcpyKind(kind) if kind is not None \
+            else infer_memcpy_kind(dst, src)
+        handles = [h for h in (dst, src) if isinstance(h, int)]
+        with self._lock:
+            for h in handles:
+                self._mem_refs[h] = self._mem_refs.get(h, 0) + 1
+
+        def copy():
+            try:
+                if kind == MemcpyKind.H2D:
+                    rec = self._buffers[dst]
+                    nb = nbytes if nbytes is not None else _payload_nbytes(src)
+                    if nb > rec["nbytes"]:
+                        raise MemoryError(
+                            f"memcpy h2d: {nb} B into {rec['nbytes']} B "
+                            f"buffer")
+                    rec["data"] = _payload_copy(src)
+                    return None
+                if kind == MemcpyKind.D2H:
+                    data = self._buffers[src]["data"]
+                    return None if data is None else _payload_copy(data)
+                if dst is not None:
+                    rec = self._buffers[dst]
+                    src_rec = self._buffers[src]
+                    nb = nbytes if nbytes is not None else src_rec["nbytes"]
+                    if nb > rec["nbytes"]:
+                        raise MemoryError(
+                            f"memcpy d2d: {nb} B into {rec['nbytes']} B "
+                            f"buffer")
+                    data = src_rec["data"]
+                    rec["data"] = None if data is None else _payload_copy(data)
+                return None
+            finally:
+                with self._lock:
+                    for h in handles:
+                        n = self._mem_refs.get(h, 0)
+                        if n > 1:
+                            self._mem_refs[h] = n - 1
+                        else:
+                            self._mem_refs.pop(h, None)
+
+        return self._submit(copy)
+
+    # -- streams ------------------------------------------------------------
     def create_stream(self, *, phase: Phase = Phase.OTHER) -> int:
-        return 0
+        h = self._handle()
+        self._streams[h] = phase
+        return h
 
+    def destroy_stream(self, vstream: int) -> None:
+        self._streams.pop(vstream, None)
+
+    # -- events -------------------------------------------------------------
     def create_event(self) -> int:
-        return 0
+        h = self._handle()
+        self._events[h] = False
+        return h
+
+    def destroy_event(self, vevent: int) -> None:
+        self._events.pop(vevent, None)
 
     def record_event(self, vevent: int, vstream: int) -> Future:
-        f = Future()
-        f.set_result(None)
-        return f
+        return self._submit(lambda: self._events.__setitem__(vevent, True))
 
+    def wait_event(self, vevent: int, vstream: int) -> Future:
+        # Single physical stream: any record issued before this wait has
+        # already executed by the time the worker reaches the marker, so the
+        # wait never blocks (unrecorded events are a no-op, CUDA semantics).
+        return self._submit(lambda: None)
+
+    # -- execution ----------------------------------------------------------
     def launch(self, vstream: int, fn: Optional[Callable], *args,
                phase: Phase = Phase.OTHER, meta: Optional[Dict] = None,
                **kwargs) -> Future:
-        f = Future()
-        self._q.put((fn, args, kwargs, f))
-        return f
+        return self._submit(fn if fn is not None else (lambda *a, **k: None),
+                            args, kwargs)
 
     def synchronize(self, vstream: Optional[int] = None) -> None:
-        import time
-        while not self._q.empty():
-            time.sleep(0.0005)
+        # One physical stream backs every vstream, so per-stream sync and
+        # device sync coincide: wait for ALL submitted ops to finish
+        # (including the one the worker is currently executing).
+        with self._done_cv:
+            while self._unfinished > 0:
+                self._done_cv.wait(0.1)

@@ -1,14 +1,28 @@
 """FlexNPU per-device daemon (paper §3.1-§3.2).
 
 Owns the virtual->physical handle tables, the **phase-aware dispatch queues**,
-and the dispatch loop for one (logical) NPU device.  The same daemon object is
-driven two ways, sharing every line of queue/policy/bookkeeping code:
+the per-stream ordering state, and the dispatch loop for one (logical) NPU
+device.  The same daemon object is driven two ways, sharing every line of
+queue/policy/ordering/bookkeeping code:
 
   * **threaded** (real backend): ``start()`` spawns the dispatch thread which
     executes ops on the in-process JAX backend, stamping wall-clock times;
   * **stepped** (simulation): the discrete-event simulator asks
     ``select_next(now)`` whenever the simulated device frees up and calls
     ``mark_complete(op, t)`` when the modeled duration elapses.
+
+Dependency-aware readiness (v2): ``select_next`` only ever returns an op that
+is *ready* — it is the oldest pending op of its virtual stream, no earlier op
+of that stream is still in flight, and every event edge it waits on has been
+satisfied.  The scheduler policy arbitrates **between phases of the ready
+set**, so phase-aware time slicing and stream-ordered dispatch compose: the
+policy decides *which stream head* runs next, never *whether* program order
+within a stream is respected.
+
+Op effects (``memcpy`` payload movement, event signalling, synchronize
+markers) are applied inside ``mark_complete`` so threaded and stepped drive
+modes share one implementation — the simulator models *when* an op finishes,
+the daemon owns *what* it does.
 
 This mirrors the paper's data-plane/policy-plane split: enqueue/dispatch is
 the data plane; the policy object (scheduler) and profiler are the policy
@@ -19,9 +33,12 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
-from typing import Any, Callable, Deque, Dict, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional
 
-from repro.core.api import Future, OpDescriptor, OpType, Phase
+import numpy as np
+
+from repro.core.api import (CONTROL_OPS, Future, MemcpyKind, OpDescriptor,
+                            OpType, Phase, memcpy_model_time)
 from repro.core.handles import HandleTable
 from repro.core.profiler import Profiler
 from repro.core.scheduler import FIFOPolicy, SchedulerPolicy
@@ -48,6 +65,49 @@ class RealBackend:
         return float(op.meta.get("est_duration", 1e-4))
 
 
+def _payload_copy(src) -> Any:
+    """Defensive copy of a host payload into/out of a backend buffer."""
+    if isinstance(src, (bytes, bytearray, memoryview)):
+        return bytes(src)
+    return np.array(src, copy=True)
+
+
+def _payload_nbytes(payload) -> int:
+    if payload is None:
+        return 0
+    if isinstance(payload, (bytes, bytearray, memoryview)):
+        return len(payload)
+    return int(np.asarray(payload).nbytes)
+
+
+class _ReadyView:
+    """Policy-facing view of one phase queue.
+
+    Truthiness/indexing/iteration expose only the READY ops (dispatchable
+    now: stream heads with satisfied event edges, FIFO order), which is what
+    a policy may pick from.  ``len()`` reports the FULL backlog including
+    blocked ops, so depth-based pressure signals (DynamicPDPolicy's
+    prefill/decode load) keep seeing real queue depth."""
+
+    __slots__ = ("ready", "backlog")
+
+    def __init__(self, ready: List[OpDescriptor], backlog: int):
+        self.ready = ready
+        self.backlog = backlog
+
+    def __bool__(self) -> bool:
+        return bool(self.ready)
+
+    def __len__(self) -> int:
+        return self.backlog
+
+    def __getitem__(self, i):
+        return self.ready[i]
+
+    def __iter__(self):
+        return iter(self.ready)
+
+
 class FlexDaemon:
     def __init__(self, device_id: int, backend, policy: Optional[SchedulerPolicy] = None,
                  profiler: Optional[Profiler] = None):
@@ -62,54 +122,148 @@ class FlexDaemon:
         self.memory = HandleTable("memory")
         self.allocated_bytes = 0
         self.peak_bytes = 0
+        self.allocated_by_instance: Dict[str, int] = {}
         self.failed = False
+        self.closed = False      # set by Session.close(): reject new work
         self.last_heartbeat = 0.0
         self._cv = threading.Condition()
         self._thread: Optional[threading.Thread] = None
         self._stop = False
         self._inflight: Optional[OpDescriptor] = None
+        # --- ordering state (v2) ---
+        # per-vstream FIFO of enqueued-not-yet-dispatched ops
+        self._stream_pending: Dict[int, Deque[OpDescriptor]] = {}
+        # per-vstream count of dispatched-not-yet-complete ops
+        self._stream_inflight: Dict[int, int] = {}
+        # per-event [records_enqueued, records_completed]: a wait snapshots
+        # records_enqueued at ITS enqueue and is satisfied once that many
+        # records completed — records issued after the wait never block it
+        # (CUDA/ACL semantics)
+        self._event_state: Dict[int, list] = {}
+        # per-memory-handle count of queued/in-flight memcpys referencing it
+        # (free refuses while nonzero so a stream-ordered copy can't lose
+        # its buffer underneath it)
+        self._mem_refs: Dict[int, int] = {}
 
     # ------------------------------------------------------------ enqueue
     def enqueue(self, op: OpDescriptor) -> Future:
-        if self.failed:
+        if self.failed or self.closed:
             op.future.set_error(RuntimeError(
-                f"device {self.device_id} failed"))
+                f"device {self.device_id} "
+                + ("failed" if self.failed else "closed")))
             return op.future
         op.enqueue_time = self.backend.now()
         # Control-plane ops that only mutate handle tables complete inline —
         # they never wait behind compute (cheap bookkeeping, paper §3.2).
-        if op.op in (OpType.MALLOC, OpType.FREE, OpType.CREATE_STREAM,
-                     OpType.DESTROY_STREAM, OpType.CREATE_EVENT):
+        if op.op in CONTROL_OPS:
             self._control_op(op)
             return op.future
+        if op.op in (OpType.RECORD_EVENT, OpType.WAIT_EVENT):
+            try:
+                self.events.resolve(op.vhandles[0])
+            except KeyError as e:
+                op.future.set_error(e)
+                return op.future
+        if op.op == OpType.MEMCPY and not op.meta.get("nbytes"):
+            # default the size from the source buffer so cost billing and
+            # the capacity check see the real transfer size
+            kind = MemcpyKind(op.meta.get("kind", MemcpyKind.D2D))
+            src_h = None
+            if kind == MemcpyKind.D2H and op.vhandles:
+                src_h = op.vhandles[0]
+            elif kind == MemcpyKind.D2D and len(op.vhandles) == 2:
+                src_h = op.vhandles[1]
+            if src_h is not None:
+                try:
+                    nb = int(self.memory.resolve(src_h)["nbytes"])
+                except KeyError as e:
+                    op.future.set_error(e)
+                    return op.future
+                op.meta.update(nbytes=nb, bytes=nb,
+                               est_duration=memcpy_model_time(kind, nb))
         with self._cv:
+            if op.op == OpType.RECORD_EVENT:
+                st = self._event_state.setdefault(op.vhandles[0], [0, 0])
+                st[0] += 1
+            elif op.op == OpType.WAIT_EVENT:
+                st = self._event_state.get(op.vhandles[0])
+                op.meta["wait_target"] = st[0] if st else 0
+            elif op.op == OpType.MEMCPY:
+                for h in op.vhandles:
+                    self._mem_refs[h] = self._mem_refs.get(h, 0) + 1
             self.queues[op.phase].append(op)
+            self._stream_pending.setdefault(op.vstream, deque()).append(op)
             self._cv.notify()
         return op.future
 
     def _control_op(self, op: OpDescriptor) -> None:
         now = self.backend.now()
         op.dispatch_time = op.complete_time = now
+        try:
+            op.future.set_result(self._apply_control(op))
+        except BaseException as e:
+            op.future.set_error(e)
+
+    def _apply_control(self, op: OpDescriptor):
+        instance = op.meta.get("instance", "")
         if op.op == OpType.MALLOC:
             nbytes = int(op.meta.get("nbytes", 0))
             h = self.memory.create({"nbytes": nbytes,
-                                    "tag": op.meta.get("tag", "")})
+                                    "tag": op.meta.get("tag", ""),
+                                    "instance": instance,
+                                    "data": None})
             self.allocated_bytes += nbytes
             self.peak_bytes = max(self.peak_bytes, self.allocated_bytes)
-            op.future.set_result(h)
-        elif op.op == OpType.FREE:
-            rec = self.memory.release(op.vhandles[0])
-            if rec:
-                self.allocated_bytes -= rec["nbytes"]
-            op.future.set_result(None)
-        elif op.op == OpType.CREATE_STREAM:
-            op.future.set_result(self.streams.create(
-                {"phase": op.meta.get("phase", Phase.OTHER)}))
-        elif op.op == OpType.DESTROY_STREAM:
-            self.streams.release(op.vhandles[0])
-            op.future.set_result(None)
-        elif op.op == OpType.CREATE_EVENT:
-            op.future.set_result(self.events.create())
+            self.allocated_by_instance[instance] = \
+                self.allocated_by_instance.get(instance, 0) + nbytes
+            return h
+        if op.op == OpType.FREE:
+            rec = self.memory.resolve(op.vhandles[0])
+            with self._cv:
+                if self._mem_refs.get(op.vhandles[0]):
+                    raise RuntimeError(
+                        f"free({op.vhandles[0]}): buffer has pending memcpy "
+                        f"work")
+            owner = rec.get("instance", "")
+            # owned buffers are freeable only by their owner; untagged
+            # buffers (owner "") are shared
+            if owner and instance != owner:
+                raise PermissionError(
+                    f"instance {instance!r} cannot free buffer owned by "
+                    f"{owner!r} (handle isolation)")
+            self.memory.release(op.vhandles[0])
+            self.allocated_bytes -= rec["nbytes"]
+            self.allocated_by_instance[owner] = \
+                self.allocated_by_instance.get(owner, 0) - rec["nbytes"]
+            return None
+        if op.op == OpType.CREATE_STREAM:
+            return self.streams.create(
+                {"phase": op.meta.get("phase", Phase.OTHER),
+                 "instance": instance})
+        if op.op == OpType.DESTROY_STREAM:
+            vs = op.vhandles[0]
+            with self._cv:
+                if self._stream_pending.get(vs) or \
+                        self._stream_inflight.get(vs):
+                    raise RuntimeError(
+                        f"destroy_stream({vs}): stream has pending work")
+                self._stream_pending.pop(vs, None)
+                self._stream_inflight.pop(vs, None)
+            self.streams.release(vs)
+            return None
+        if op.op == OpType.CREATE_EVENT:
+            return self.events.create({})
+        if op.op == OpType.DESTROY_EVENT:
+            ev = op.vhandles[0]
+            with self._cv:
+                st = self._event_state.get(ev)
+                if st and st[0] > st[1]:
+                    raise RuntimeError(
+                        f"destroy_event({ev}): event has a pending record")
+                self._event_state.pop(ev, None)
+            self.events.release(ev)
+            return None
+        raise ValueError(f"not a control op: {op.op}")
 
     # --------------------------------------------------- stepped interface
     def pending_count(self) -> int:
@@ -119,29 +273,128 @@ class FlexDaemon:
         times = [q[0].enqueue_time for q in self.queues.values() if q]
         return min(times) if times else None
 
+    def _ready_heads(self) -> List[OpDescriptor]:
+        """Heads of all streams whose next op may legally dispatch now."""
+        heads = []
+        for vs, q in self._stream_pending.items():
+            if not q or self._stream_inflight.get(vs, 0):
+                continue
+            op = q[0]
+            if op.op == OpType.WAIT_EVENT:
+                st = self._event_state.get(op.vhandles[0])
+                # a destroyed/unknown event satisfies the wait (st is None);
+                # otherwise the snapshot target must have completed
+                if st is not None and st[1] < op.meta.get("wait_target", 0):
+                    continue  # happens-before edge not yet satisfied
+            heads.append(op)
+        heads.sort(key=lambda o: o.op_id)  # preserve per-phase arrival order
+        return heads
+
     def select_next(self, now: float) -> Optional[OpDescriptor]:
-        """Pop the next op per policy (simulator / loop driver)."""
-        if self.failed:
-            return None
-        phase = self.policy.select(self.queues, self.profiler, now)
-        if phase is None:
-            return None
-        op = self.queues[phase].popleft()
-        op.dispatch_time = now
-        self.policy.on_dispatch(op, self.backend.estimate(op))
-        self._inflight = op
-        return op
+        """Pop the next *ready* op per policy (simulator / loop driver)."""
+        with self._cv:
+            if self.failed:
+                return None
+            heads = self._ready_heads()
+            ready: Dict[Phase, _ReadyView] = {
+                p: _ReadyView([o for o in heads if o.phase is p],
+                              len(self.queues[p]))
+                for p in Phase}
+            phase = self.policy.select(ready, self.profiler, now)
+            if phase is None or not ready[phase]:
+                return None
+            op = ready[phase][0]
+            self.queues[op.phase].remove(op)
+            self._stream_pending[op.vstream].popleft()
+            self._stream_inflight[op.vstream] = \
+                self._stream_inflight.get(op.vstream, 0) + 1
+            op.dispatch_time = now
+            self.policy.on_dispatch(op, self.backend.estimate(op))
+            self._inflight = op
+            return op
 
     def mark_complete(self, op: OpDescriptor, now: float,
                       result: Any = None, error: Optional[BaseException] = None):
         op.complete_time = now
         self.last_heartbeat = now
+        if error is None:
+            try:  # op effects are shared between threaded and stepped drive
+                result = self._apply_effect(op, result)
+            except BaseException as e:
+                error = e
         self.profiler.on_complete(op)
-        self._inflight = None
+        # Free the STREAM before resolving the future: completion callbacks
+        # routinely enqueue follow-up work on the same stream and must find
+        # it dispatchable (continuous batching relies on this).  The drain
+        # marker (_inflight) clears only AFTER the future resolves, so
+        # drain()/synchronize(None) never returns with the last op's future
+        # still unresolved.
+        with self._cv:
+            n = self._stream_inflight.get(op.vstream, 0)
+            if n > 1:
+                self._stream_inflight[op.vstream] = n - 1
+            else:
+                self._stream_inflight.pop(op.vstream, None)
+            self._cv.notify_all()
         if error is not None:
             op.future.set_error(error)
         else:
             op.future.set_result(result)
+        with self._cv:
+            if self._inflight is op:
+                self._inflight = None
+            self._cv.notify_all()
+
+    # ----------------------------------------------------------- effects
+    def _apply_effect(self, op: OpDescriptor, result: Any) -> Any:
+        if op.op == OpType.RECORD_EVENT:
+            with self._cv:
+                st = self._event_state.get(op.vhandles[0])
+                if st:
+                    st[1] += 1
+            return None
+        if op.op == OpType.MEMCPY:
+            try:
+                return self._do_memcpy(op)
+            finally:
+                with self._cv:
+                    for h in op.vhandles:
+                        n = self._mem_refs.get(h, 0)
+                        if n > 1:
+                            self._mem_refs[h] = n - 1
+                        else:
+                            self._mem_refs.pop(h, None)
+        return result  # LAUNCH result / WAIT_EVENT / SYNCHRONIZE markers
+
+    def _do_memcpy(self, op: OpDescriptor) -> Any:
+        """Move a payload through backend-owned buffers (H2D/D2H/D2D).
+
+        Payload-less descriptors (no handles bound) model transfer cost only
+        — the simulator's KV-transfer path uses these."""
+        kind = MemcpyKind(op.meta.get("kind", MemcpyKind.D2D))
+        if not op.vhandles:
+            return None
+        nbytes = int(op.meta.get("nbytes", 0))
+        if kind == MemcpyKind.H2D:
+            rec = self.memory.resolve(op.vhandles[0])
+            payload = op.args[0] if op.args else None
+            if nbytes > rec["nbytes"]:
+                raise MemoryError(
+                    f"memcpy h2d: {nbytes} B into {rec['nbytes']} B buffer")
+            rec["data"] = _payload_copy(payload)
+            return None
+        if kind == MemcpyKind.D2H:
+            rec = self.memory.resolve(op.vhandles[0])
+            return None if rec["data"] is None else _payload_copy(rec["data"])
+        # D2D: vhandles = (dst, src)
+        dst = self.memory.resolve(op.vhandles[0])
+        src = self.memory.resolve(op.vhandles[1])
+        if nbytes > dst["nbytes"]:
+            raise MemoryError(
+                f"memcpy d2d: {nbytes} B into {dst['nbytes']} B buffer")
+        dst["data"] = None if src["data"] is None \
+            else _payload_copy(src["data"])
+        return None
 
     # ---------------------------------------------------------- fail/drain
     def fail(self, requeue_sink: Optional[Callable] = None):
@@ -153,6 +406,10 @@ class FlexDaemon:
             for q in self.queues.values():
                 drained.extend(q)
                 q.clear()
+            self._stream_pending.clear()
+            self._stream_inflight.clear()
+            self._event_state.clear()
+            self._mem_refs.clear()
             self._cv.notify_all()
         for op in drained:
             if requeue_sink is not None:
@@ -185,18 +442,35 @@ class FlexDaemon:
             now = self.backend.now()
             op = self.select_next(now)
             if op is None:
+                # pending work exists but every stream head is blocked on an
+                # event edge — wait for a completion/enqueue to unblock it;
+                # on stop, abandon the blocked work instead of spinning
+                with self._cv:
+                    if self._stop:
+                        return
+                    self._cv.wait(0.001)
                 continue
-            try:
-                result = self.backend.execute(op)
+            if op.op == OpType.LAUNCH:
+                try:
+                    result = self.backend.execute(op)
+                except BaseException as e:  # propagate into the future
+                    self.mark_complete(op, self.backend.now(), error=e)
+                    continue
                 self.mark_complete(op, self.backend.now(), result)
-            except BaseException as e:  # propagate into the future
-                self.mark_complete(op, self.backend.now(), error=e)
+            else:
+                # non-launch data-plane ops (memcpy, event markers): the
+                # effect itself is applied inside mark_complete
+                self.mark_complete(op, self.backend.now())
 
     def drain(self, timeout: float = 30.0):
         """Block until all queued work is done (thread mode)."""
         deadline = time.monotonic() + timeout
         while time.monotonic() < deadline:
-            if self.pending_count() == 0 and self._inflight is None:
-                return
+            # read queue depth and in-flight state under the lock so the
+            # dispatch thread can't be observed mid-handoff (op popped from
+            # its queue but not yet marked in flight)
+            with self._cv:
+                if self.pending_count() == 0 and self._inflight is None:
+                    return
             time.sleep(0.001)
         raise TimeoutError("daemon did not drain")

@@ -30,8 +30,14 @@ SCHEDULABLE = (Phase.PREFILL, Phase.DECODE)
 
 
 class SchedulerPolicy:
-    """Returns which phase should dispatch next (None = no pending work).
-    ``queues`` maps Phase -> deque of pending OpDescriptors (FIFO order)."""
+    """Returns which phase should dispatch next (None = nothing ready).
+
+    ``queues`` maps Phase -> a sequence of *dispatchable* ops in FIFO order
+    (daemon v2 passes a ready view: truthiness/indexing expose only ops
+    whose stream-order and event edges permit dispatch now, while ``len()``
+    reports the full per-phase backlog so depth-based pressure signals see
+    real queue depth).  A plain dict of deques satisfies the same contract
+    in tests."""
 
     def select(self, queues: Dict[Phase, Deque[OpDescriptor]],
                prof: Profiler, now: float) -> Optional[Phase]:

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.tpu_compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -123,7 +125,7 @@ def flash_attention_kernel(q, k, v, *, causal: bool = True, scale: float,
             pltpu.VMEM((block_q, D), jnp.float32),
         ],
         out_shape=jax.ShapeDtypeStruct((B, Sp, H, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.tpu_compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -109,7 +111,7 @@ def paged_attention_kernel(q, k_pages, v_pages, page_tables, lengths, *,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, KVH, G, D), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(page_tables, lengths, qr, k_pages, v_pages)

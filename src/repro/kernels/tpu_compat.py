@@ -1,0 +1,19 @@
+"""JAX version compatibility for Pallas-TPU compiler parameters.
+
+Newer JAX exposes ``pltpu.CompilerParams``; 0.4.x calls the same dataclass
+``TPUCompilerParams``.  Kernels import ``CompilerParams`` from here so they
+build on either version (kwargs like ``dimension_semantics`` are identical).
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+
+if CompilerParams is None:  # fail at call time with an actionable message
+    def CompilerParams(*args, **kwargs):  # type: ignore[no-redef]
+        raise ImportError(
+            "this JAX version exposes neither pltpu.CompilerParams nor "
+            "pltpu.TPUCompilerParams; Pallas TPU kernels need jax>=0.4.x "
+            "with the Mosaic TPU backend")

@@ -41,7 +41,6 @@ _CALLS = re.compile(r"(?:calls|to_apply|body|condition|true_computation|"
                     r"false_computation|branch_computations)=\{?(%?[\w\.\-]+)")
 _REPL_GROUPS = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
-_OPERANDS = re.compile(r"\(((?:%[\w\.\-]+(?:, )?)+)\)")
 
 BUFFER_OPS = {"fusion", "dot", "copy", "dynamic-slice", "dynamic-update-slice",
               "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
@@ -74,6 +73,57 @@ def _shape_dims(type_str: str) -> Optional[List[int]]:
         return None
     dims = m.group(2)
     return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+def _call_args(line: str, kind: str) -> str:
+    """The argument span of ``kind(...)`` in an op line (balanced parens)."""
+    i = line.find(kind + "(")
+    if i < 0:
+        return ""
+    j = i + len(kind) + 1
+    depth, k = 1, j
+    while k < len(line) and depth:
+        if line[k] == "(":
+            depth += 1
+        elif line[k] == ")":
+            depth -= 1
+        k += 1
+    return line[j:k - 1]
+
+
+def _split_top(args: str) -> List[str]:
+    """Split an argument span on top-level commas (XLA may print operands
+    with inline types, including tuple types containing commas)."""
+    parts, depth, start = [], 0, 0
+    for i, ch in enumerate(args):
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            parts.append(args[start:i].strip())
+            start = i + 1
+    tail = args[start:].strip()
+    if tail:
+        parts.append(tail)
+    return parts
+
+
+def _operand_dims(part: str, shapes: Dict[str, str]) -> Optional[List[int]]:
+    """Dims of one operand: inline type if printed, else the shapes table."""
+    dims = _shape_dims(part)
+    if dims:
+        return dims
+    m = re.search(r"%([\w\.\-]+)", part)
+    return _shape_dims(shapes.get(m.group(1), "")) if m else None
+
+
+def _operand_bytes(part: str, shapes: Dict[str, str]) -> float:
+    b = float(_shape_bytes(part))
+    if b:
+        return b
+    m = re.search(r"%([\w\.\-]+)", part)
+    return float(_shape_bytes(shapes.get(m.group(1), ""))) if m else 0.0
 
 
 @dataclasses.dataclass
@@ -184,14 +234,12 @@ def _dot_flops(op: OpInfo, shapes: Dict[str, str]) -> float:
     mc = _CONTRACT.search(op.line)
     contract = 1.0
     if mc:
-        ops = _OPERANDS.search(op.line)
-        if ops:
-            lhs = ops.group(1).split(",")[0].strip().lstrip("%")
-            lhs_dims = _shape_dims(shapes.get(lhs, ""))
-            if lhs_dims:
-                for idx in mc.group(1).split(","):
-                    if idx and int(idx) < len(lhs_dims):
-                        contract *= lhs_dims[int(idx)]
+        parts = _split_top(_call_args(op.line, op.kind))
+        lhs_dims = _operand_dims(parts[0], shapes) if parts else None
+        if lhs_dims:
+            for idx in mc.group(1).split(","):
+                if idx and int(idx) < len(lhs_dims):
+                    contract *= lhs_dims[int(idx)]
     return 2.0 * out * contract
 
 
@@ -202,21 +250,15 @@ def _op_bytes(op: OpInfo, shapes: Dict[str, str]) -> float:
     dynamic-update-slice writes only the update window — charging their full
     operands would overcount the KV cache ~(layers x) per step."""
     result = float(_shape_bytes(op.type_str))
+    parts = _split_top(_call_args(op.line, op.kind))
     if op.kind == "dynamic-slice":
         return 2.0 * result                      # read window + write result
     if op.kind == "dynamic-update-slice":
-        ops = _OPERANDS.search(op.line)
-        upd = 0.0
-        if ops:
-            refs = [r.strip().lstrip("%") for r in ops.group(1).split(",")]
-            if len(refs) >= 2:
-                upd = float(_shape_bytes(shapes.get(refs[1], "")))
+        upd = _operand_bytes(parts[1], shapes) if len(parts) >= 2 else 0.0
         return 2.0 * upd                         # read update + write window
     total = result
-    ops = _OPERANDS.search(op.line)
-    if ops:
-        for ref in ops.group(1).split(","):
-            total += _shape_bytes(shapes.get(ref.strip().lstrip("%"), ""))
+    for part in parts:
+        total += _operand_bytes(part, shapes)
     return total
 
 

@@ -7,6 +7,11 @@
   * sim:   384-card cluster simulation with the paper's deployments:
            python -m repro.launch.serve --sim --arch mixtral-8x7b \
                --deployment dynamic --workload 1k1k
+
+Both paths go through the v2 session API (``repro.core.connect``): the real
+engine opens a one-device session; the cluster simulator opens one session
+with a device per serving instance.  ``--show-session`` prints the session's
+per-device handle/memory accounting after the run.
 """
 from __future__ import annotations
 
@@ -18,7 +23,8 @@ import numpy as np
 
 def run_real(arch: str, mode: str, n_requests: int, rate: float,
              prompt_len: int = 16, max_new: int = 16,
-             max_num_seqs: int = 4, seed: int = 0, verbose: bool = True):
+             max_num_seqs: int = 4, seed: int = 0, verbose: bool = True,
+             show_session: bool = False):
     from repro.distributed.sharding import unbox
     from repro.configs import get_config
     from repro.models import build_model
@@ -38,6 +44,10 @@ def run_real(arch: str, mode: str, n_requests: int, rate: float,
                      max_len=prompt_len + max_new + 8)
     try:
         res = eng.run(reqs, timeout=600)
+        if show_session and verbose:
+            print(f"  session[{eng.session.mode}] "
+                  f"devices={eng.session.device_count()} "
+                  f"stats={eng.session.stats()}")
     finally:
         eng.shutdown()
     if verbose:
@@ -46,7 +56,8 @@ def run_real(arch: str, mode: str, n_requests: int, rate: float,
     return res
 
 
-def run_sim(arch: str, deployment: str, workload: str, verbose: bool = True):
+def run_sim(arch: str, deployment: str, workload: str, verbose: bool = True,
+            show_session: bool = False):
     from repro.configs import get_config
     from repro.serving import (Cluster, deepseek_1k1k, deepseek_1k4k,
                                deployment_6p2d, deployment_dynamic)
@@ -63,6 +74,10 @@ def run_sim(arch: str, deployment: str, workload: str, verbose: bool = True):
     wl = {"1k1k": deepseek_1k1k, "1k4k": deepseek_1k4k}[workload]()
     cluster = Cluster(cfg, deploy)
     res = cluster.run(wl, until=7200)
+    if show_session and verbose:
+        print(f"  session[sim] devices={cluster.session.device_count()}")
+        for dev, st in cluster.session.stats().items():
+            print(f"    {cluster.instances[dev].name}: {st}")
     if verbose:
         for k, v in res.items():
             print(f"  {k}: {v:.4f}" if isinstance(v, float) else f"  {k}: {v}")
@@ -80,11 +95,15 @@ def main():
     ap.add_argument("--workload", default="1k1k", choices=["1k1k", "1k4k"])
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--rate", type=float, default=4.0)
+    ap.add_argument("--show-session", action="store_true",
+                    help="print per-device session handle/memory stats")
     args = ap.parse_args()
     if args.sim:
-        run_sim(args.arch, args.deployment, args.workload)
+        run_sim(args.arch, args.deployment, args.workload,
+                show_session=args.show_session)
     else:
-        run_real(args.arch, args.mode, args.requests, args.rate)
+        run_real(args.arch, args.mode, args.requests, args.rate,
+                 show_session=args.show_session)
 
 
 if __name__ == "__main__":

@@ -1,10 +1,11 @@
 """Real-execution serving engine (CPU JAX here, TPU in production).
 
 Continuous batching over slot-structured dense KV caches.  ALL device work is
-issued through the ``RuntimeAPI`` verbs (repro.core.api) — the engine is
-byte-identical under PassthroughClient (paper's native passthrough) and
-FlexClient (interposed through a FlexDaemon), which is the transparency claim
-of the paper made concrete.
+issued through the session-based v2 ``RuntimeAPI`` verbs: the engine opens a
+``repro.core.connect(...)`` session and speaks only to its device-scoped
+client — it is byte-identical under ``mode="passthrough"`` (paper's native
+passthrough) and the interposed FlexDaemon modes, which is the transparency
+claim of the paper made concrete.
 
 Modes:
   * ``passthrough``     — direct execution (Table 1 baseline).
@@ -12,6 +13,10 @@ Modes:
                           decode slot (head-of-line blocking; Table 4 baseline).
   * ``dynamic_pd``      — FlexNPU: prefill and decode as separate logical
                           instances over one daemon with DynamicPDPolicy.
+
+Prefill and decode each run on their own virtual stream; the daemon enforces
+per-stream FIFO order while the phase policy arbitrates between the stream
+heads (stream-ordered dispatch, daemon v2).
 """
 from __future__ import annotations
 
@@ -24,10 +29,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import Phase
-from repro.core.client import FlexClient, PassthroughClient
-from repro.core.daemon import FlexDaemon, RealBackend
 from repro.core.scheduler import (DynamicPDConfig, DynamicPDPolicy,
                                   FIFOPolicy)
+from repro.core.session import connect
 from repro.models.model import Model
 from repro.serving.request import Request, RequestState, summarize
 
@@ -55,16 +59,16 @@ class RealEngine:
         self._all_done = threading.Condition(self._lock)
 
         if mode == "passthrough":
-            self.client = PassthroughClient()
-            self.daemon = None
+            self.session = connect(mode="passthrough")
         else:
             policy = policy or (FIFOPolicy() if mode == "static_colocate"
                                 else DynamicPDPolicy(
                                     DynamicPDConfig(ttft_guard_s=0.05,
                                                     adjust_interval_s=0.01)))
-            self.daemon = FlexDaemon(0, RealBackend(), policy)
-            self.daemon.start()
-            self.client = FlexClient(self.daemon, instance="engine")
+            self.session = connect(mode="flex", policy=policy,
+                                   instance="engine")
+        self.client = self.session.device(0)
+        self.daemon = self.session.daemon(0)
         self.stream_p = self.client.create_stream(phase=Phase.PREFILL)
         self.stream_d = self.client.create_stream(phase=Phase.DECODE)
 
@@ -120,10 +124,13 @@ class RealEngine:
         return summarize(requests)
 
     def shutdown(self):
-        if self.daemon is not None:
-            self.daemon.stop()
-        elif isinstance(self.client, PassthroughClient):
-            self.client.close()
+        try:  # release the engine's stream handles (leak-free tables)
+            self.client.synchronize(None)
+            self.client.destroy_stream(self.stream_p)
+            self.client.destroy_stream(self.stream_d)
+        except Exception:
+            pass  # dirty shutdown (timeout/fault): session teardown suffices
+        self.session.close()
 
     # ------------------------------------------------------------ prefill
     def _admit_gated_locked(self):

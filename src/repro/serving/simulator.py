@@ -6,6 +6,14 @@ replaces ``execute()`` wall time with roofline-modeled durations and advances
 a virtual clock (DESIGN.md §2).  One daemon models one serving *instance*
 (the SPMD group of chips dispatches one step at a time, like the real stack).
 
+A Cluster opens ONE multi-device session (``connect(mode="sim",
+devices=N)``): instance *i* is device *i*, with its own stepped daemon,
+handle tables, and memory accounting.  Instances submit work through their
+device-scoped client using the same v2 verbs as the real engine — prefill
+and decode each run on a dedicated virtual stream, so the daemon's
+stream-ordered, dependency-aware dispatch applies identically under the
+virtual clock.
+
 Deployments (paper §4):
   * ``disagg``          — static PD disaggregation (e.g. 6P2D): separate
                           prefill/decode instances + KV-transfer delay.
@@ -29,10 +37,10 @@ import math
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
-from repro.core.api import OpDescriptor, OpType, Phase
-from repro.core.daemon import FlexDaemon
+from repro.core.api import OpDescriptor, Phase
 from repro.core.scheduler import (DynamicPDConfig, DynamicPDPolicy,
                                   FIFOPolicy, StaticTimeSlicePolicy)
+from repro.core.session import connect
 from repro.serving.costmodel import CostModel, InstanceSpec
 from repro.serving.request import Request, RequestState
 
@@ -76,10 +84,10 @@ class EventLoop:
     def run(self, until: float = math.inf, max_events: int = 50_000_000):
         n = 0
         while self._heap and n < max_events:
-            t, _, fn = heapq.heappop(self._heap)
-            if t > until:
+            if self._heap[0][0] > until:
                 self.clock.t = until
-                return
+                return       # beyond-horizon events stay queued for resume
+            t, seq, fn = heapq.heappop(self._heap)
             self.clock.t = t
             fn()
             n += 1
@@ -96,10 +104,12 @@ class SimConfig:
 
 
 class SimInstance:
-    """One serving instance: a daemon + batch formation + KV accounting."""
+    """One serving instance: a session device + batch formation + KV
+    accounting.  ``client``/``daemon`` come from the cluster's multi-device
+    session (instance i == device i)."""
 
     def __init__(self, name: str, spec: InstanceSpec, cost: CostModel,
-                 loop: EventLoop, policy, sim_cfg: SimConfig,
+                 loop: EventLoop, client, daemon, sim_cfg: SimConfig,
                  role: str = "both"):
         self.name = name
         self.spec = spec
@@ -107,9 +117,10 @@ class SimInstance:
         self.loop = loop
         self.sim_cfg = sim_cfg
         self.role = role  # "prefill" | "decode" | "both"
-        self.daemon = FlexDaemon(device_id=hash(name) & 0xFFFF,
-                                 backend=SimBackend(loop.clock),
-                                 policy=policy)
+        self.client = client
+        self.daemon = daemon
+        self.stream_p = client.create_stream(phase=Phase.PREFILL)
+        self.stream_d = client.create_stream(phase=Phase.DECODE)
         self.busy = False
         self.slow_factor = 1.0
         self.failed = False
@@ -173,14 +184,13 @@ class SimInstance:
         self.kv_used += req.prompt_len
         req.state = RequestState.PREFILLING
         self.prefilling[req.req_id] = req
-        op = OpDescriptor(
-            OpType.LAUNCH, phase=Phase.PREFILL,
+        fut = self.client.launch(
+            self.stream_p, None, phase=Phase.PREFILL,
             meta={"req": req, "tokens": req.prompt_len,
                   **self.cost.prefill_meta(self.spec, req.prompt_len),
                   "est_duration": self.cost.prefill_time(
                       self.spec, req.prompt_len)})
-        op.future.add_done_callback(lambda f, r=req: self._prefill_done(r, f))
-        self.daemon.enqueue(op)
+        fut.add_done_callback(lambda f, r=req: self._prefill_done(r, f))
         self.kick()
 
     def _prefill_done(self, req: Request, fut) -> None:
@@ -215,10 +225,10 @@ class SimInstance:
         if self._decode_op_inflight or not (self.active or self.decode_pending):
             return
         self._decode_op_inflight = True
-        op = OpDescriptor(OpType.LAUNCH, phase=Phase.DECODE,
-                          meta={"est_duration": self._decode_estimate()})
-        op.future.add_done_callback(self._decode_done)
-        self.daemon.enqueue(op)
+        fut = self.client.launch(
+            self.stream_d, None, phase=Phase.DECODE,
+            meta={"est_duration": self._decode_estimate()})
+        fut.add_done_callback(self._decode_done)
         self.kick()
 
     def _decode_estimate(self) -> float:
@@ -383,30 +393,41 @@ class Cluster:
 
     def _build(self):
         d = self.deploy
+        # plan (name, spec, policy, sim_cfg, role) per device, then open ONE
+        # multi-device session routing each instance to its own daemon
+        plan = []
         if d.mode == "disagg":
             for i in range(d.prefill_instances):
-                inst = SimInstance(
-                    f"P{i}", InstanceSpec(f"P{i}", d.prefill_chips),
-                    self.cost, self.loop, FIFOPolicy(), self.sim_cfg,
-                    role="prefill")
-                inst.on_prefill_done = self._transfer_to_decode
-                self.prefill_pool.append(inst)
+                plan.append((f"P{i}", InstanceSpec(f"P{i}", d.prefill_chips),
+                             FIFOPolicy(), self.sim_cfg, "prefill"))
             for i in range(d.decode_instances):
-                inst = SimInstance(
-                    f"D{i}", InstanceSpec(f"D{i}", d.decode_chips),
-                    self.cost, self.loop, FIFOPolicy(), self.sim_cfg,
-                    role="decode")
-                self.decode_pool.append(inst)
-            self.instances = self.prefill_pool + self.decode_pool
+                plan.append((f"D{i}", InstanceSpec(f"D{i}", d.decode_chips),
+                             FIFOPolicy(), self.sim_cfg, "decode"))
         else:
             gated = d.mode == "static_colocate"
             sim_cfg = dataclasses.replace(self.sim_cfg, admission_gated=gated)
             for i in range(d.colocated_instances):
-                inst = SimInstance(
-                    f"C{i}", InstanceSpec(f"C{i}", d.colocated_chips),
-                    self.cost, self.loop, self._policy(), sim_cfg,
-                    role="both")
+                plan.append((f"C{i}", InstanceSpec(f"C{i}", d.colocated_chips),
+                             self._policy(), sim_cfg, "both"))
+        policies = [p for _, _, p, _, _ in plan]
+        self.session = connect(
+            mode="sim", devices=len(plan),
+            backend=SimBackend(self.loop.clock),
+            policy=lambda i: policies[i])
+        for i, (name, spec, _, sim_cfg, role) in enumerate(plan):
+            inst = SimInstance(name, spec, self.cost, self.loop,
+                               self.session.device(i), self.session.daemon(i),
+                               sim_cfg, role=role)
+            if role == "prefill":
+                inst.on_prefill_done = self._transfer_to_decode
+                self.prefill_pool.append(inst)
+            elif role == "decode":
+                self.decode_pool.append(inst)
+            else:
                 self.instances.append(inst)
+        if d.mode == "disagg":
+            self.instances = self.prefill_pool + self.decode_pool
+        else:
             self.prefill_pool = self.decode_pool = self.instances
 
     # ------------------------------------------------------------ routing

@@ -3,7 +3,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; skipping property tests")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.api import OpDescriptor, OpType, Phase
 from repro.core.profiler import Profiler
