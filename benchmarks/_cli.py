@@ -1,0 +1,25 @@
+"""Shared CLI plumbing for directly-runnable benchmark modules.
+
+Keeps the row format in ONE place: the same ``name,us_per_call,derived``
+CSV that benchmarks/run.py streams, plus the BENCH_*.json schema the CI
+bench-smoke job uploads as artifacts.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def rows_payload(rows):
+    return [{"name": n, "us_per_call": u, "derived": d} for n, u, d in rows]
+
+
+def emit_rows(rows, json_path: str = "") -> None:
+    """Print the CSV rows; optionally also write them to a JSON file."""
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{json.dumps(json.dumps(derived))}")
+    if json_path:
+        os.makedirs(os.path.dirname(json_path) or ".", exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump({"rows": rows_payload(rows)}, f, indent=2)

@@ -5,7 +5,12 @@ exposes static co-location's head-of-line blocking (TTFT in the hundreds of
 seconds) while FlexNPU keeps TTFT sub-second at unchanged TPOT.
 
 Qwen2.5-7B is not in the assigned pool; the assigned Qwen2-VL-2B backbone
-(same family) stands in."""
+(same family) stands in.
+
+``--sweep-link-bw`` adds the third deployment the paper argues against —
+small-scale PD *disaggregation* — across KV-link bandwidths: every prompt's
+KV cache crosses the occupancy-aware link, so TPOT inflates with transfer
+queueing while both co-location modes are link-independent."""
 from __future__ import annotations
 
 import copy
@@ -54,3 +59,65 @@ def run(quick: bool = False):
              "throughput_change": f"{tp_gain:+.2%}",
              "paper_ttft_reduction": f"{paper[(i, o)][2]:+.2%}"}))
     return rows
+
+
+def sweep_link_bw(quick: bool = False, bws=(50e9, 2e9, 0.5e9, 0.25e9)):
+    """Table-4-scale disaggregation under shrinking KV-link bandwidth,
+    against the (link-independent) dynamic co-location reference.  Two
+    single-chip prefill instances feed one decode instance, so bursts put
+    concurrent transfers on the decode ingress link (occupancy)."""
+    from repro.configs import get_config
+    from repro.serving import Cluster, make_workload
+    from repro.serving.simulator import DeploymentSpec, SimConfig
+
+    cfg = get_config("qwen2-vl-2b")
+    n = 60 if quick else 200
+    wl = make_workload(n, 1024, 1024, rate=8.0, seed=42)
+    dyn = Cluster(cfg, DeploymentSpec(mode="dynamic_pd",
+                                      colocated_instances=1,
+                                      colocated_chips=4),
+                  sim_cfg=SimConfig(max_num_seqs=4)).run(
+        copy.deepcopy(wl), until=1e7)
+    rows = [("table4.link_sweep.dynamic_reference",
+             1e6 / max(dyn["output_tokens_per_s"], 1e-9),
+             {"tokens_per_s": round(dyn["output_tokens_per_s"], 2),
+              "ttft_ms": round(dyn["ttft_mean_s"] * 1e3, 1),
+              "tpot_ms": round(dyn["tpot_mean_s"] * 1e3, 3),
+              "transfers": dyn.get("transfers", 0)})]
+    deploy = DeploymentSpec(mode="disagg", prefill_instances=2,
+                            prefill_chips=1, decode_instances=1,
+                            decode_chips=2)
+    for bw in bws:
+        sim = SimConfig(max_num_seqs=4, transfer_bw=bw)
+        r = Cluster(cfg, deploy, sim_cfg=sim).run(copy.deepcopy(wl),
+                                                  until=1e7)
+        rows.append((
+            f"table4.link_sweep.{bw / 1e9:g}GBps.disagg",
+            1e6 / max(r["output_tokens_per_s"], 1e-9),
+            {"link_bw_gbps": bw / 1e9,
+             "tokens_per_s": round(r["output_tokens_per_s"], 2),
+             "ttft_ms": round(r["ttft_mean_s"] * 1e3, 1),
+             "tpot_ms": round(r["tpot_mean_s"] * 1e3, 3),
+             "transfers": r.get("transfers", 0),
+             "transfer_queue_delay_mean_ms": round(
+                 r.get("transfer_queue_delay_mean_s", 0.0) * 1e3, 2)}))
+    return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    from benchmarks._cli import emit_rows
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--sweep-link-bw", action="store_true")
+    ap.add_argument("--json", default="")
+    args = ap.parse_args(argv)
+    rows = sweep_link_bw(args.quick) if args.sweep_link_bw \
+        else run(args.quick)
+    emit_rows(rows, args.json)
+
+
+if __name__ == "__main__":
+    main()

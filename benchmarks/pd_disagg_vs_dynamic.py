@@ -4,15 +4,27 @@ FlexNPU dynamic PD co-location (3 x 128) on 384 chips.
 The paper's workloads: 1K-1K (balanced; prefill-bottlenecked under 6P2D,
 +26.33% for FlexNPU) and 1K-4K (decode-heavy, +5.15%).  DeepSeek-R1 itself is
 not in the assigned pool; the largest assigned MoE archs stand in (geometry,
-workloads and deployment match the paper)."""
+workloads and deployment match the paper).
+
+``--sweep-link-bw`` sweeps the KV-transfer link bandwidth: disaggregation
+moves every prompt's KV cache through the occupancy-aware LinkModel (copy
+engine + per-link contention), so its throughput degrades as the link
+shrinks — while dynamic co-location, which never moves KV, is unaffected.
+Each disagg row also reports the realized transfer-queueing delay
+(actual - contention-free transfer time).
+"""
 from __future__ import annotations
 
 import copy
 
+# default sweep: ICI-class fast link down to a constrained inter-host link
+SWEEP_BWS = (400e9, 50e9, 10e9, 2e9)
 
-def _run(cfg, deploy, wl):
+
+def _run(cfg, deploy, wl, sim_cfg=None):
     from repro.serving import Cluster
-    return Cluster(cfg, deploy).run(copy.deepcopy(wl), until=72000)
+    return Cluster(cfg, deploy, sim_cfg=sim_cfg).run(
+        copy.deepcopy(wl), until=72000)
 
 
 def run(quick: bool = False):
@@ -45,3 +57,60 @@ def run(quick: bool = False):
                       "improvement": f"{gain:+.2%}",
                       "paper_improvement": f"{paper_gain:+.2%}"}))
     return rows
+
+
+def sweep_link_bw(quick: bool = False, bws=SWEEP_BWS):
+    """Disagg vs dynamic across KV-link bandwidths (1K-1K, saturating)."""
+    from repro.configs import get_config
+    from repro.serving import (SimConfig, deployment_6p2d, deployment_dynamic,
+                               make_workload)
+
+    cfg = get_config("mixtral-8x7b")
+    n = 200 if quick else 800
+    wl = make_workload(n, 1024, 1024, rate=1e5, seed=3)  # saturate
+    rows = []
+    for bw in bws:
+        sim = SimConfig(transfer_bw=bw)
+        r_disagg = _run(cfg, deployment_6p2d(), wl, sim_cfg=sim)
+        r_dyn = _run(cfg, deployment_dynamic(), wl, sim_cfg=sim)
+        tag = f"{bw / 1e9:g}GBps"
+        rows.append((
+            f"table3.link_sweep.{tag}.disagg",
+            1e6 / max(r_disagg["requests_per_s"], 1e-9),
+            {"link_bw_gbps": bw / 1e9,
+             "rps": round(r_disagg["requests_per_s"], 2),
+             "transfers": r_disagg.get("transfers", 0),
+             "transfer_time_mean_ms": round(
+                 r_disagg.get("transfer_time_mean_s", 0.0) * 1e3, 2),
+             "transfer_queue_delay_mean_ms": round(
+                 r_disagg.get("transfer_queue_delay_mean_s", 0.0) * 1e3, 2),
+             "peak_link_concurrency": r_disagg.get(
+                 "peak_link_concurrency", 0)}))
+        rows.append((
+            f"table3.link_sweep.{tag}.dynamic",
+            1e6 / max(r_dyn["requests_per_s"], 1e-9),
+            {"link_bw_gbps": bw / 1e9,
+             "rps": round(r_dyn["requests_per_s"], 2),
+             "transfers": r_dyn.get("transfers", 0)}))
+    return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    from benchmarks._cli import emit_rows
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--sweep-link-bw", action="store_true",
+                    help="sweep KV-link bandwidth instead of Table 3")
+    ap.add_argument("--json", default="",
+                    help="also write the rows to this JSON file")
+    args = ap.parse_args(argv)
+    rows = sweep_link_bw(args.quick) if args.sweep_link_bw \
+        else run(args.quick)
+    emit_rows(rows, args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,13 +2,18 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = compact JSON of the
 table-specific numbers, including the paper's reference values).
+``--json-dir`` additionally writes one ``BENCH_<tag>.json`` per module —
+the CI bench-smoke job uploads these as artifacts so the perf trajectory
+is captured per PR.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only table3,fig2]
+                                            [--json-dir bench-out]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -28,8 +33,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json-dir", default="",
+                    help="write BENCH_<tag>.json per module into this dir")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.json_dir:
+        os.makedirs(args.json_dir, exist_ok=True)
 
     print("name,us_per_call,derived")
     failures = []
@@ -47,7 +56,16 @@ def main() -> None:
             continue
         for name, us, derived in rows:
             print(f"{name},{us:.2f},{json.dumps(json.dumps(derived))}")
-        print(f"# {tag} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        elapsed = time.time() - t0
+        print(f"# {tag} done in {elapsed:.1f}s", file=sys.stderr)
+        if args.json_dir:
+            from benchmarks._cli import rows_payload
+            path = os.path.join(args.json_dir, f"BENCH_{tag}.json")
+            with open(path, "w") as f:
+                json.dump({"tag": tag, "module": modname,
+                           "quick": args.quick,
+                           "elapsed_s": round(elapsed, 2),
+                           "rows": rows_payload(rows)}, f, indent=2)
     if failures:
         print(f"# FAILURES: {failures}", file=sys.stderr)
         raise SystemExit(1)

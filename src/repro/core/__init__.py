@@ -4,10 +4,12 @@
 # v2 entry point: ``connect(mode=..., devices=N) -> Session`` (session.py).
 # The v1 constructors (FlexDaemon / FlexClient / PassthroughClient) remain
 # public for single-device and test use; Session wraps them.
-from repro.core.api import (Future, MemcpyKind, OpDescriptor, OpType, Phase,
-                            RuntimeAPI, memcpy_model_time)
+from repro.core.api import (ENGINE_COMPUTE, ENGINE_COPY, Future, MemcpyKind,
+                            OpDescriptor, OpType, Phase, RuntimeAPI,
+                            memcpy_model_time)
 from repro.core.client import FlexClient, PassthroughClient
 from repro.core.daemon import FlexDaemon, RealBackend
+from repro.core.handles import SharedEventTable
 from repro.core.profiler import Profiler
 from repro.core.scheduler import (DynamicPDConfig, DynamicPDPolicy,
                                   FIFOPolicy, SchedulerPolicy,
@@ -15,9 +17,9 @@ from repro.core.scheduler import (DynamicPDConfig, DynamicPDPolicy,
 from repro.core.session import Session, connect
 
 __all__ = [
-    "Future", "MemcpyKind", "OpDescriptor", "OpType", "Phase", "RuntimeAPI",
-    "memcpy_model_time", "FlexClient", "PassthroughClient", "FlexDaemon",
-    "RealBackend", "Profiler", "DynamicPDConfig", "DynamicPDPolicy",
-    "FIFOPolicy", "SchedulerPolicy", "StaticTimeSlicePolicy", "Session",
-    "connect",
+    "ENGINE_COMPUTE", "ENGINE_COPY", "Future", "MemcpyKind", "OpDescriptor",
+    "OpType", "Phase", "RuntimeAPI", "memcpy_model_time", "FlexClient",
+    "PassthroughClient", "FlexDaemon", "RealBackend", "SharedEventTable",
+    "Profiler", "DynamicPDConfig", "DynamicPDPolicy", "FIFOPolicy",
+    "SchedulerPolicy", "StaticTimeSlicePolicy", "Session", "connect",
 ]

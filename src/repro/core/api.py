@@ -46,6 +46,7 @@ class OpType(str, enum.Enum):
     MALLOC = "malloc"
     FREE = "free"
     MEMCPY = "memcpy"              # H2D/D2H/D2D by metadata
+    MEMCPY_PEER = "memcpy_peer"    # cross-device D2D through the copy engine
     CREATE_STREAM = "create_stream"
     DESTROY_STREAM = "destroy_stream"
     CREATE_EVENT = "create_event"
@@ -67,16 +68,28 @@ class MemcpyKind(str, enum.Enum):
     H2D = "h2d"
     D2H = "d2h"
     D2D = "d2d"
+    P2P = "p2p"                    # device-to-device across the interconnect
 
 
 # Modeled copy-engine bandwidths (DESIGN.md hardware model): H2D/D2H cross
-# the host interconnect; D2D is an on-device HBM-to-HBM move.
+# the host interconnect; D2D is an on-device HBM-to-HBM move; P2P crosses
+# one ICI-class inter-device link (LinkModel refines this with occupancy).
 MEMCPY_BW_BYTES = {
     MemcpyKind.H2D: 32e9,
     MemcpyKind.D2H: 32e9,
     MemcpyKind.D2D: 600e9,
+    MemcpyKind.P2P: 50e9,
 }
 MEMCPY_LATENCY_S = 2e-6
+
+
+# Engine classes: every virtual stream maps onto one of the device's
+# execution engines.  A device has one compute queue and one DMA/copy
+# engine; ops on different engines may execute concurrently (the threaded
+# daemon and the stepped simulator both honour the per-engine slots), while
+# ops that share an engine still serialize.
+ENGINE_COMPUTE = "compute"
+ENGINE_COPY = "copy"
 
 
 def memcpy_model_time(kind: MemcpyKind, nbytes: int) -> float:
@@ -212,8 +225,23 @@ class RuntimeAPI:
         ``kind`` is inferred from the operand types when omitted."""
         raise NotImplementedError
 
+    def memcpy_peer(self, dst_device, dst, src, nbytes: Optional[int] = None,
+                    *, vstream: Optional[int] = None, link=None,
+                    meta: Optional[Dict] = None) -> Future:
+        """Cross-device copy through THIS device's copy engine.
+
+        ``dst_device`` is the destination device's daemon (FlexClient) or
+        client (PassthroughClient); ``dst``/``src`` are vhandles on the
+        destination/source device, or both None for a cost-only transfer
+        (the simulator's KV-movement path).  Defaults to the copy-engine
+        vstream, so peer copies overlap with compute launches.  ``link`` is
+        an opaque key for the shared LinkModel: concurrent transfers on one
+        link contend for its bandwidth."""
+        raise NotImplementedError
+
     # -- streams ------------------------------------------------------------
-    def create_stream(self, *, phase: Phase = Phase.OTHER) -> int:
+    def create_stream(self, *, phase: Phase = Phase.OTHER,
+                      engine: str = ENGINE_COMPUTE) -> int:
         raise NotImplementedError
 
     def destroy_stream(self, vstream: int) -> None:

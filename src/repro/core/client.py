@@ -23,8 +23,9 @@ from __future__ import annotations
 import threading
 from typing import Any, Callable, Dict, Optional
 
-from repro.core.api import (Future, MemcpyKind, OpDescriptor, OpType, Phase,
-                            RuntimeAPI, infer_memcpy_kind, memcpy_model_time)
+from repro.core.api import (ENGINE_COMPUTE, ENGINE_COPY, Future, MemcpyKind,
+                            OpDescriptor, OpType, Phase, RuntimeAPI,
+                            infer_memcpy_kind, memcpy_model_time)
 from repro.core.daemon import (FlexDaemon, RealBackend, _payload_copy,
                                _payload_nbytes)
 
@@ -33,6 +34,8 @@ class FlexClient(RuntimeAPI):
     def __init__(self, daemon: FlexDaemon, instance: str = ""):
         self.daemon = daemon
         self.instance = instance
+        self._copy_stream: Optional[int] = None
+        self._copy_stream_lock = threading.Lock()
 
     # -- memory -------------------------------------------------------------
     def malloc(self, nbytes: int, *, tag: str = "") -> int:
@@ -68,16 +71,59 @@ class FlexClient(RuntimeAPI):
                           meta=m, args=args)
         return self.daemon.enqueue(op)
 
+    def memcpy_peer(self, dst_device, dst, src, nbytes: Optional[int] = None,
+                    *, vstream: Optional[int] = None, link=None,
+                    meta: Optional[Dict] = None) -> Future:
+        """Cross-device copy on THIS device's copy engine.
+
+        ``dst_device`` is the destination FlexDaemon (or a FlexClient, whose
+        daemon is used).  With ``dst``/``src`` vhandles the payload moves
+        from our buffer into the peer's; with both None the op is cost-only
+        (the simulator's KV-transfer path).  Defaults to the copy-engine
+        vstream so the transfer overlaps with compute launches."""
+        dst_daemon = getattr(dst_device, "daemon", dst_device)
+        if vstream is None:
+            vstream = self.copy_engine_stream()
+        vhandles = (src,) if isinstance(src, int) else ()
+        if nbytes is None:
+            nbytes = int(self.daemon.memory.resolve(src)["nbytes"]) \
+                if isinstance(src, int) else 0
+        m = dict(meta or {}, kind=MemcpyKind.P2P, nbytes=nbytes, bytes=nbytes,
+                 link=link, dst_handle=dst if isinstance(dst, int) else None,
+                 instance=self.instance,
+                 est_duration=memcpy_model_time(MemcpyKind.P2P, nbytes))
+        m["_dst_daemon"] = dst_daemon
+        op = OpDescriptor(OpType.MEMCPY_PEER, vstream=vstream,
+                          vhandles=vhandles, meta=m)
+        return self.daemon.enqueue(op)
+
     # -- streams ------------------------------------------------------------
-    def create_stream(self, *, phase: Phase = Phase.OTHER) -> int:
+    def create_stream(self, *, phase: Phase = Phase.OTHER,
+                      engine: str = ENGINE_COMPUTE) -> int:
         op = OpDescriptor(OpType.CREATE_STREAM,
-                          meta={"phase": phase, "instance": self.instance})
+                          meta={"phase": phase, "engine": engine,
+                                "instance": self.instance})
         return self.daemon.enqueue(op).result()
+
+    def copy_engine_stream(self) -> int:
+        """This client's dedicated copy-engine vstream (created lazily).
+
+        Locked: callers routinely race here from Future completion
+        callbacks on different engine-worker threads, and a check-then-set
+        race would leak the loser's stream handle."""
+        with self._copy_stream_lock:
+            if self._copy_stream is None:
+                self._copy_stream = self.create_stream(phase=Phase.OTHER,
+                                                       engine=ENGINE_COPY)
+            return self._copy_stream
 
     def destroy_stream(self, vstream: int) -> None:
         op = OpDescriptor(OpType.DESTROY_STREAM, vhandles=(vstream,),
                           meta={"instance": self.instance})
         self.daemon.enqueue(op).result()
+        with self._copy_stream_lock:
+            if vstream == self._copy_stream:
+                self._copy_stream = None  # recreate lazily if needed again
 
     # -- events -------------------------------------------------------------
     def create_event(self) -> int:
@@ -251,8 +297,30 @@ class PassthroughClient(RuntimeAPI):
 
         return self._submit(copy)
 
+    def memcpy_peer(self, dst_device, dst, src, nbytes: Optional[int] = None,
+                    *, vstream: Optional[int] = None, link=None,
+                    meta: Optional[Dict] = None) -> Future:
+        """Direct host-side copy into a peer PassthroughClient's buffer —
+        no copy engine, no link model (the native baseline)."""
+        dst_client = dst_device
+
+        def copy():
+            if not isinstance(src, int) or not isinstance(dst, int):
+                return None
+            data = self._buffers[src]["data"]
+            rec = dst_client._buffers[dst]
+            nb = nbytes if nbytes is not None else self._buffers[src]["nbytes"]
+            if nb > rec["nbytes"]:
+                raise MemoryError(
+                    f"memcpy_peer: {nb} B into {rec['nbytes']} B buffer")
+            rec["data"] = None if data is None else _payload_copy(data)
+            return None
+
+        return self._submit(copy)
+
     # -- streams ------------------------------------------------------------
-    def create_stream(self, *, phase: Phase = Phase.OTHER) -> int:
+    def create_stream(self, *, phase: Phase = Phase.OTHER,
+                      engine: str = ENGINE_COMPUTE) -> int:
         h = self._handle()
         self._streams[h] = phase
         return h

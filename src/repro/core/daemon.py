@@ -19,6 +19,16 @@ set**, so phase-aware time slicing and stream-ordered dispatch compose: the
 policy decides *which stream head* runs next, never *whether* program order
 within a stream is respected.
 
+Copy-engine streams (v3): every stream belongs to an execution **engine** —
+``compute`` (default) or ``copy`` (the DMA engine).  The daemon allows one
+op in flight *per engine*, so a copy-engine memcpy overlaps with a compute
+launch in both drive modes: the threaded loop dispatches each engine on its
+own worker thread, and ``select_next`` hands the stepped simulator up to one
+ready op per free engine slot.  Events may also be **session-scoped**
+(negative handles from a ``SharedEventTable``): a record completing on
+device A releases a wait queued on device B, which is how cross-device KV
+transfers are ordered.
+
 Op effects (``memcpy`` payload movement, event signalling, synchronize
 markers) are applied inside ``mark_complete`` so threaded and stepped drive
 modes share one implementation — the simulator models *when* an op finishes,
@@ -30,6 +40,7 @@ plane and never block the critical path.
 """
 from __future__ import annotations
 
+import queue
 import threading
 import time
 from collections import deque
@@ -37,9 +48,10 @@ from typing import Any, Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.api import (CONTROL_OPS, Future, MemcpyKind, OpDescriptor,
-                            OpType, Phase, memcpy_model_time)
-from repro.core.handles import HandleTable
+from repro.core.api import (CONTROL_OPS, ENGINE_COMPUTE, ENGINE_COPY, Future,
+                            MemcpyKind, OpDescriptor, OpType, Phase,
+                            memcpy_model_time)
+from repro.core.handles import HandleTable, SharedEventTable
 from repro.core.profiler import Profiler
 from repro.core.scheduler import FIFOPolicy, SchedulerPolicy
 
@@ -110,7 +122,8 @@ class _ReadyView:
 
 class FlexDaemon:
     def __init__(self, device_id: int, backend, policy: Optional[SchedulerPolicy] = None,
-                 profiler: Optional[Profiler] = None):
+                 profiler: Optional[Profiler] = None,
+                 shared_events: Optional[SharedEventTable] = None):
         self.device_id = device_id
         self.backend = backend
         self.policy = policy or FIFOPolicy()
@@ -120,6 +133,7 @@ class FlexDaemon:
         self.streams = HandleTable("stream")
         self.events = HandleTable("event")
         self.memory = HandleTable("memory")
+        self.shared_events = shared_events    # session-scoped (may be None)
         self.allocated_bytes = 0
         self.peak_bytes = 0
         self.allocated_by_instance: Dict[str, int] = {}
@@ -129,7 +143,13 @@ class FlexDaemon:
         self._cv = threading.Condition()
         self._thread: Optional[threading.Thread] = None
         self._stop = False
-        self._inflight: Optional[OpDescriptor] = None
+        self._inflight: set = set()           # dispatched-not-yet-complete
+        # --- engine slots (v3): one op in flight per engine, so copy-engine
+        # memcpys overlap with compute launches in both drive modes
+        self.engine_slots: Dict[str, int] = {ENGINE_COMPUTE: 1, ENGINE_COPY: 1}
+        self._engine_inflight: Dict[str, int] = {}
+        self._engine_queues: Dict[str, "queue.Queue"] = {}
+        self._engine_threads: List[threading.Thread] = []
         # --- ordering state (v2) ---
         # per-vstream FIFO of enqueued-not-yet-dispatched ops
         self._stream_pending: Dict[int, Deque[OpDescriptor]] = {}
@@ -159,11 +179,28 @@ class FlexDaemon:
             self._control_op(op)
             return op.future
         if op.op in (OpType.RECORD_EVENT, OpType.WAIT_EVENT):
-            try:
-                self.events.resolve(op.vhandles[0])
-            except KeyError as e:
-                op.future.set_error(e)
-                return op.future
+            ev = op.vhandles[0]
+            if ev < 0:  # session-scoped (shared) event
+                if self.shared_events is None or ev not in self.shared_events:
+                    op.future.set_error(KeyError(
+                        f"shared event: unknown handle {ev}"))
+                    return op.future
+            else:
+                try:
+                    self.events.resolve(ev)
+                except KeyError as e:
+                    op.future.set_error(e)
+                    return op.future
+        if op.op == OpType.MEMCPY_PEER:
+            # take the DESTINATION daemon's memcpy ref before our own lock
+            # (sequenced, never nested: two daemons peer-copying into each
+            # other must not deadlock on each other's condition variables)
+            dst_daemon = op.meta.get("_dst_daemon")
+            dst_h = op.meta.get("dst_handle")
+            if dst_daemon is not None and dst_h is not None:
+                with dst_daemon._cv:
+                    dst_daemon._mem_refs[dst_h] = \
+                        dst_daemon._mem_refs.get(dst_h, 0) + 1
         if op.op == OpType.MEMCPY and not op.meta.get("nbytes"):
             # default the size from the source buffer so cost billing and
             # the capacity check see the real transfer size
@@ -183,12 +220,22 @@ class FlexDaemon:
                                est_duration=memcpy_model_time(kind, nb))
         with self._cv:
             if op.op == OpType.RECORD_EVENT:
-                st = self._event_state.setdefault(op.vhandles[0], [0, 0])
-                st[0] += 1
+                ev = op.vhandles[0]
+                if ev < 0:
+                    with self.shared_events.lock:
+                        self.shared_events.state[ev][0] += 1
+                else:
+                    st = self._event_state.setdefault(ev, [0, 0])
+                    st[0] += 1
             elif op.op == OpType.WAIT_EVENT:
-                st = self._event_state.get(op.vhandles[0])
+                ev = op.vhandles[0]
+                if ev < 0:
+                    with self.shared_events.lock:
+                        st = self.shared_events.state.get(ev)
+                else:
+                    st = self._event_state.get(ev)
                 op.meta["wait_target"] = st[0] if st else 0
-            elif op.op == OpType.MEMCPY:
+            elif op.op in (OpType.MEMCPY, OpType.MEMCPY_PEER):
                 for h in op.vhandles:
                     self._mem_refs[h] = self._mem_refs.get(h, 0) + 1
             self.queues[op.phase].append(op)
@@ -239,6 +286,7 @@ class FlexDaemon:
         if op.op == OpType.CREATE_STREAM:
             return self.streams.create(
                 {"phase": op.meta.get("phase", Phase.OTHER),
+                 "engine": op.meta.get("engine", ENGINE_COMPUTE),
                  "instance": instance})
         if op.op == OpType.DESTROY_STREAM:
             vs = op.vhandles[0]
@@ -273,15 +321,46 @@ class FlexDaemon:
         times = [q[0].enqueue_time for q in self.queues.values() if q]
         return min(times) if times else None
 
+    def stream_engine(self, vstream: int) -> str:
+        """Engine class of a stream (unknown/default streams are compute)."""
+        try:
+            return self.streams.resolve(vstream).get("engine", ENGINE_COMPUTE)
+        except KeyError:
+            return ENGINE_COMPUTE
+
+    def _remote_edge_pending(self) -> bool:
+        """True if any stream head waits on a session-scoped event — its
+        release may come from a PEER daemon, which never notifies our cv
+        (the threaded dispatcher polls only in that case).  Caller holds
+        ``_cv``."""
+        for q in self._stream_pending.values():
+            if q and q[0].op == OpType.WAIT_EVENT and q[0].vhandles[0] < 0:
+                return True
+        return False
+
+    def _event_progress(self, vevent: int) -> Optional[list]:
+        """[enqueued, completed] for a local or session-scoped event."""
+        if vevent < 0:
+            if self.shared_events is None:
+                return None
+            with self.shared_events.lock:
+                st = self.shared_events.state.get(vevent)
+                return list(st) if st is not None else None
+        return self._event_state.get(vevent)
+
     def _ready_heads(self) -> List[OpDescriptor]:
         """Heads of all streams whose next op may legally dispatch now."""
         heads = []
+        free = {e: n - self._engine_inflight.get(e, 0)
+                for e, n in self.engine_slots.items()}
         for vs, q in self._stream_pending.items():
             if not q or self._stream_inflight.get(vs, 0):
                 continue
+            if free.get(self.stream_engine(vs), 1) <= 0:
+                continue  # this execution engine has no free slot
             op = q[0]
             if op.op == OpType.WAIT_EVENT:
-                st = self._event_state.get(op.vhandles[0])
+                st = self._event_progress(op.vhandles[0])
                 # a destroyed/unknown event satisfies the wait (st is None);
                 # otherwise the snapshot target must have completed
                 if st is not None and st[1] < op.meta.get("wait_target", 0):
@@ -291,7 +370,11 @@ class FlexDaemon:
         return heads
 
     def select_next(self, now: float) -> Optional[OpDescriptor]:
-        """Pop the next *ready* op per policy (simulator / loop driver)."""
+        """Pop the next *ready* op per policy (simulator / loop driver).
+
+        May be called repeatedly before any completion: it hands out at most
+        one op per free engine slot, so a driver that loops until ``None``
+        gets a compute op AND a copy-engine op to run concurrently."""
         with self._cv:
             if self.failed:
                 return None
@@ -308,9 +391,12 @@ class FlexDaemon:
             self._stream_pending[op.vstream].popleft()
             self._stream_inflight[op.vstream] = \
                 self._stream_inflight.get(op.vstream, 0) + 1
+            eng = self.stream_engine(op.vstream)
+            self._engine_inflight[eng] = self._engine_inflight.get(eng, 0) + 1
+            op.meta["_engine"] = eng   # resolved once: survives stream destroy
             op.dispatch_time = now
             self.policy.on_dispatch(op, self.backend.estimate(op))
-            self._inflight = op
+            self._inflight.add(op)
             return op
 
     def mark_complete(self, op: OpDescriptor, now: float,
@@ -340,30 +426,69 @@ class FlexDaemon:
             op.future.set_error(error)
         else:
             op.future.set_result(result)
+        # The ENGINE slot frees only after the future's callbacks ran:
+        # callbacks enqueue follow-up work (continuous batching), and the
+        # threaded dispatcher must not race ahead of them and pick from a
+        # queue that is about to receive the follow-up — policy decisions
+        # would otherwise see stale per-phase state (the stepped drivers
+        # call select_next after mark_complete returns, same property).
         with self._cv:
-            if self._inflight is op:
-                self._inflight = None
+            eng = op.meta.get("_engine", ENGINE_COMPUTE)
+            ne = self._engine_inflight.get(eng, 0)
+            if ne > 1:
+                self._engine_inflight[eng] = ne - 1
+            else:
+                self._engine_inflight.pop(eng, None)
+            self._inflight.discard(op)
             self._cv.notify_all()
 
     # ----------------------------------------------------------- effects
+    @staticmethod
+    def _drop_dst_ref(op: OpDescriptor) -> None:
+        """Release the DESTINATION daemon's memcpy ref of a peer copy
+        (taken at enqueue; sequenced under the peer's cv, never nested)."""
+        dst_daemon = op.meta.get("_dst_daemon")
+        dst_h = op.meta.get("dst_handle")
+        if dst_daemon is None or dst_h is None:
+            return
+        with dst_daemon._cv:
+            n = dst_daemon._mem_refs.get(dst_h, 0)
+            if n > 1:
+                dst_daemon._mem_refs[dst_h] = n - 1
+            else:
+                dst_daemon._mem_refs.pop(dst_h, None)
+
+    def _release_mem_refs(self, op: OpDescriptor) -> None:
+        with self._cv:
+            for h in op.vhandles:
+                n = self._mem_refs.get(h, 0)
+                if n > 1:
+                    self._mem_refs[h] = n - 1
+                else:
+                    self._mem_refs.pop(h, None)
+        self._drop_dst_ref(op)
+
     def _apply_effect(self, op: OpDescriptor, result: Any) -> Any:
         if op.op == OpType.RECORD_EVENT:
-            with self._cv:
-                st = self._event_state.get(op.vhandles[0])
-                if st:
-                    st[1] += 1
+            ev = op.vhandles[0]
+            if ev < 0:
+                with self.shared_events.lock:
+                    st = self.shared_events.state.get(ev)
+                    if st:
+                        st[1] += 1
+            else:
+                with self._cv:
+                    st = self._event_state.get(ev)
+                    if st:
+                        st[1] += 1
             return None
-        if op.op == OpType.MEMCPY:
+        if op.op in (OpType.MEMCPY, OpType.MEMCPY_PEER):
             try:
+                if op.op == OpType.MEMCPY_PEER:
+                    return self._do_memcpy_peer(op)
                 return self._do_memcpy(op)
             finally:
-                with self._cv:
-                    for h in op.vhandles:
-                        n = self._mem_refs.get(h, 0)
-                        if n > 1:
-                            self._mem_refs[h] = n - 1
-                        else:
-                            self._mem_refs.pop(h, None)
+                self._release_mem_refs(op)
         return result  # LAUNCH result / WAIT_EVENT / SYNCHRONIZE markers
 
     def _do_memcpy(self, op: OpDescriptor) -> Any:
@@ -396,7 +521,46 @@ class FlexDaemon:
             else _payload_copy(src["data"])
         return None
 
+    def _do_memcpy_peer(self, op: OpDescriptor) -> Any:
+        """Move a payload from this device's buffer into a PEER device's
+        buffer (the cross-device KV-transfer data path).
+
+        Payload-less descriptors (no handles bound) model transfer cost
+        only — the cluster simulator's KV movement uses these."""
+        dst_daemon = op.meta.get("_dst_daemon")
+        if not op.vhandles or dst_daemon is None:
+            return None
+        src = self.memory.resolve(op.vhandles[0])
+        dst = dst_daemon.memory.resolve(op.meta["dst_handle"])
+        nbytes = int(op.meta.get("nbytes", 0))
+        if nbytes > dst["nbytes"]:
+            raise MemoryError(
+                f"memcpy_peer: {nbytes} B into {dst['nbytes']} B buffer on "
+                f"device {dst_daemon.device_id}")
+        dst["data"] = None if src["data"] is None \
+            else _payload_copy(src["data"])
+        return None
+
     # ---------------------------------------------------------- fail/drain
+    def abandon_inflight(self, op: OpDescriptor) -> None:
+        """Settle the CROSS-DEVICE side effects of an op this (failed)
+        device will never perform: credit shared-event records so waiters
+        on peer devices don't wedge forever (device-loss semantics: waits
+        are released), and drop the destination daemon's memcpy ref so the
+        peer can free its buffer.  The op's own result stays void.
+
+        Called for drained queue entries by ``fail()`` and by stepped
+        drivers for the op that was already dispatched when the fault hit
+        (the threaded loop instead runs ``mark_complete`` to completion)."""
+        if op.op == OpType.RECORD_EVENT and op.vhandles and \
+                op.vhandles[0] < 0 and self.shared_events is not None:
+            with self.shared_events.lock:
+                st = self.shared_events.state.get(op.vhandles[0])
+                if st:
+                    st[1] += 1
+        elif op.op == OpType.MEMCPY_PEER:
+            self._drop_dst_ref(op)
+
     def fail(self, requeue_sink: Optional[Callable] = None):
         """Simulated device failure: error every queued op (the engine's
         fault-tolerance layer re-queues them elsewhere)."""
@@ -408,10 +572,12 @@ class FlexDaemon:
                 q.clear()
             self._stream_pending.clear()
             self._stream_inflight.clear()
+            self._engine_inflight.clear()
             self._event_state.clear()
             self._mem_refs.clear()
             self._cv.notify_all()
         for op in drained:
+            self.abandon_inflight(op)
             if requeue_sink is not None:
                 requeue_sink(op)
             else:
@@ -421,6 +587,15 @@ class FlexDaemon:
     # -------------------------------------------------------- thread drive
     def start(self):
         self._stop = False
+        # one executor thread per engine: ops on different engines (compute
+        # vs copy) execute concurrently; ops sharing an engine serialize
+        self._engine_queues = {e: queue.Queue() for e in self.engine_slots}
+        self._engine_threads = [
+            threading.Thread(target=self._engine_loop, args=(e,), daemon=True,
+                             name=f"flexd-{self.device_id}-{e}")
+            for e in self.engine_slots]
+        for t in self._engine_threads:
+            t.start()
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name=f"flexd-{self.device_id}")
         self._thread.start()
@@ -431,8 +606,14 @@ class FlexDaemon:
             self._cv.notify_all()
         if self._thread is not None:
             self._thread.join(timeout=5)
+        for q in self._engine_queues.values():
+            q.put(None)                       # workers drain, then exit
+        for t in self._engine_threads:
+            t.join(timeout=5)
+        self._engine_threads = []
 
     def _loop(self):
+        """Dispatcher: pops ready ops and routes each to its engine worker."""
         while True:
             with self._cv:
                 while not self._stop and self.pending_count() == 0:
@@ -442,14 +623,26 @@ class FlexDaemon:
             now = self.backend.now()
             op = self.select_next(now)
             if op is None:
-                # pending work exists but every stream head is blocked on an
-                # event edge — wait for a completion/enqueue to unblock it;
-                # on stop, abandon the blocked work instead of spinning
+                # Pending work exists but every stream head is blocked on an
+                # event edge or a busy engine.  Local unblocks (enqueue,
+                # completion) notify the cv, so wait long; a head waiting on
+                # a SHARED event may be released by a record completing on a
+                # PEER daemon — no local notify — so poll fast only then.
+                # On stop, abandon the blocked work instead of spinning.
                 with self._cv:
                     if self._stop:
                         return
-                    self._cv.wait(0.001)
+                    self._cv.wait(
+                        0.001 if self._remote_edge_pending() else 0.1)
                 continue
+            self._engine_queues[op.meta.get("_engine", ENGINE_COMPUTE)].put(op)
+
+    def _engine_loop(self, engine: str):
+        q = self._engine_queues[engine]
+        while True:
+            op = q.get()
+            if op is None:
+                return
             if op.op == OpType.LAUNCH:
                 try:
                     result = self.backend.execute(op)
@@ -470,7 +663,7 @@ class FlexDaemon:
             # dispatch thread can't be observed mid-handoff (op popped from
             # its queue but not yet marked in flight)
             with self._cv:
-                if self.pending_count() == 0 and self._inflight is None:
+                if self.pending_count() == 0 and not self._inflight:
                     return
             time.sleep(0.001)
         raise TimeoutError("daemon did not drain")

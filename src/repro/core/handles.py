@@ -50,3 +50,42 @@ class HandleTable:
     def live_handles(self):
         with self._lock:
             return list(self._v2p)
+
+
+class SharedEventTable:
+    """Session-scoped events: record on device A, wait on device B.
+
+    Handles are NEGATIVE integers so they can never collide with a
+    device-local event handle.  State per event is the same
+    ``[records_enqueued, records_completed]`` pair the per-device tables
+    use, but guarded by one lock shared by every daemon in the session —
+    that is what lets a record completing on device A release a wait
+    queued on device B (the cross-device happens-before edge)."""
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self._next = itertools.count(1)
+        self.state: Dict[int, list] = {}
+
+    def create(self) -> int:
+        with self.lock:
+            h = -next(self._next)
+            self.state[h] = [0, 0]
+            return h
+
+    def destroy(self, vevent: int) -> None:
+        with self.lock:
+            st = self.state.get(vevent)
+            if st and st[0] > st[1]:
+                raise RuntimeError(
+                    f"destroy_shared_event({vevent}): event has a pending "
+                    f"record")
+            self.state.pop(vevent, None)
+
+    def __contains__(self, vevent: int) -> bool:
+        with self.lock:
+            return vevent in self.state
+
+    def __len__(self) -> int:
+        with self.lock:
+            return len(self.state)

@@ -26,19 +26,23 @@ Modes:
 Every device has its **own handle tables and memory accounting** — handles
 are only meaningful on the device that issued them, and clients carry an
 instance tag so co-located logical instances cannot free each other's
-buffers (per-instance handle isolation).  Events are device-scoped: a
-``record_event``/``wait_event`` pair builds a happens-before edge between two
-streams of the same device (cross-device coordination goes through Futures,
-like the real stack's host-side callbacks).
+buffers (per-instance handle isolation).  Events come in two scopes:
+device-scoped (positive handles: a ``record_event``/``wait_event`` pair
+links two streams of the same device) and **session-scoped** (negative
+handles from ``create_shared_event()``: record on device A, wait on device
+B — the happens-before graph spans devices).  Cross-device data movement
+goes through ``memcpy_peer``, dispatched on the source device's copy-engine
+stream so it overlaps with compute.
 """
 from __future__ import annotations
 
 import copy as _copy
 from typing import Callable, Dict, List, Optional, Union
 
-from repro.core.api import Future, MemcpyKind, Phase, RuntimeAPI
+from repro.core.api import ENGINE_COMPUTE, Future, MemcpyKind, Phase, RuntimeAPI
 from repro.core.client import FlexClient, PassthroughClient
 from repro.core.daemon import FlexDaemon, RealBackend
+from repro.core.handles import SharedEventTable
 from repro.core.scheduler import SchedulerPolicy
 
 MODES = ("flex", "passthrough", "sim")
@@ -69,10 +73,12 @@ class Session(RuntimeAPI):
     device-scoped client for code that pins a device explicitly."""
 
     def __init__(self, mode: str, clients: List[RuntimeAPI],
-                 daemons: List[Optional[FlexDaemon]]):
+                 daemons: List[Optional[FlexDaemon]],
+                 shared_events: Optional[SharedEventTable] = None):
         self.mode = mode
         self._clients = clients
         self.daemons = daemons
+        self.shared_events = shared_events
         self._current = 0
         self._closed = False
 
@@ -114,8 +120,30 @@ class Session(RuntimeAPI):
         return self._clients[self._current].memcpy(
             dst, src, nbytes, kind=kind, vstream=vstream, meta=meta)
 
-    def create_stream(self, *, phase: Phase = Phase.OTHER) -> int:
-        return self._clients[self._current].create_stream(phase=phase)
+    def memcpy_peer(self, dst_device, dst, src, nbytes: Optional[int] = None,
+                    *, vstream: Optional[int] = None, link=None,
+                    meta: Optional[Dict] = None) -> Future:
+        """Cross-device copy from the CURRENT device to ``dst_device``
+        (a device index, or a daemon/client object), dispatched on the
+        source device's copy-engine stream by default."""
+        if isinstance(dst_device, int):
+            if not 0 <= dst_device < len(self._clients):
+                raise IndexError(
+                    f"device {dst_device} out of range "
+                    f"(session has {len(self._clients)})")
+            d = self.daemons[dst_device]
+            dst_device = d if d is not None else self._clients[dst_device]
+        return self._clients[self._current].memcpy_peer(
+            dst_device, dst, src, nbytes, vstream=vstream, link=link,
+            meta=meta)
+
+    def create_stream(self, *, phase: Phase = Phase.OTHER,
+                      engine: str = ENGINE_COMPUTE) -> int:
+        return self._clients[self._current].create_stream(phase=phase,
+                                                          engine=engine)
+
+    def copy_engine_stream(self) -> int:
+        return self._clients[self._current].copy_engine_stream()
 
     def destroy_stream(self, vstream: int) -> None:
         self._clients[self._current].destroy_stream(vstream)
@@ -125,6 +153,22 @@ class Session(RuntimeAPI):
 
     def destroy_event(self, vevent: int) -> None:
         self._clients[self._current].destroy_event(vevent)
+
+    # -- session-scoped (cross-device) events -------------------------------
+    def create_shared_event(self) -> int:
+        """An event visible to EVERY device of this session (negative
+        handle): record it on one device's stream and wait on another's —
+        the daemons' happens-before graph then spans devices."""
+        if self.shared_events is None:
+            raise RuntimeError(
+                "shared events need daemon-backed devices "
+                "(mode='flex' or 'sim', not 'passthrough')")
+        return self.shared_events.create()
+
+    def destroy_shared_event(self, vevent: int) -> None:
+        if self.shared_events is None:
+            raise RuntimeError("session has no shared events")
+        self.shared_events.destroy(vevent)
 
     def record_event(self, vevent: int, vstream: int) -> Future:
         return self._clients[self._current].record_event(vevent, vstream)
@@ -205,15 +249,16 @@ def connect(mode: str = "flex", devices: int = 1, *,
                          "(e.g. SimBackend over the event-loop clock)")
     clients: List[RuntimeAPI] = []
     daemons: List[Optional[FlexDaemon]] = []
+    shared = SharedEventTable() if mode != "passthrough" else None
     for i in range(devices):
         if mode == "passthrough":
             clients.append(PassthroughClient())
             daemons.append(None)
             continue
         d = FlexDaemon(i, _backend_for(backend, i),
-                       policy=_policy_for(policy, i))
+                       policy=_policy_for(policy, i), shared_events=shared)
         if mode == "flex":
             d.start()
         clients.append(FlexClient(d, instance=instance))
         daemons.append(d)
-    return Session(mode, clients, daemons)
+    return Session(mode, clients, daemons, shared_events=shared)

@@ -57,10 +57,11 @@ def run_real(arch: str, mode: str, n_requests: int, rate: float,
 
 
 def run_sim(arch: str, deployment: str, workload: str, verbose: bool = True,
-            show_session: bool = False):
+            show_session: bool = False, link_bw: float = 0.0):
     from repro.configs import get_config
-    from repro.serving import (Cluster, deepseek_1k1k, deepseek_1k4k,
-                               deployment_6p2d, deployment_dynamic)
+    from repro.serving import (Cluster, SimConfig, deepseek_1k1k,
+                               deepseek_1k4k, deployment_6p2d,
+                               deployment_dynamic)
     from repro.serving.simulator import DeploymentSpec
 
     cfg = get_config(arch)
@@ -72,7 +73,8 @@ def run_sim(arch: str, deployment: str, workload: str, verbose: bool = True,
                                           colocated_chips=128),
     }[deployment]
     wl = {"1k1k": deepseek_1k1k, "1k4k": deepseek_1k4k}[workload]()
-    cluster = Cluster(cfg, deploy)
+    sim_cfg = SimConfig(transfer_bw=link_bw * 1e9) if link_bw else None
+    cluster = Cluster(cfg, deploy, sim_cfg=sim_cfg)
     res = cluster.run(wl, until=7200)
     if show_session and verbose:
         print(f"  session[sim] devices={cluster.session.device_count()}")
@@ -89,10 +91,14 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--sim", action="store_true")
     ap.add_argument("--mode", default="dynamic_pd",
-                    choices=["passthrough", "static_colocate", "dynamic_pd"])
+                    choices=["passthrough", "static_colocate", "dynamic_pd",
+                             "disagg"])
     ap.add_argument("--deployment", default="dynamic",
                     choices=["6p2d", "dynamic", "static_colocate"])
     ap.add_argument("--workload", default="1k1k", choices=["1k1k", "1k4k"])
+    ap.add_argument("--link-bw", type=float, default=0.0,
+                    help="sim: KV-transfer link bandwidth in GB/s "
+                         "(0 = default 50)")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--rate", type=float, default=4.0)
     ap.add_argument("--show-session", action="store_true",
@@ -100,7 +106,7 @@ def main():
     args = ap.parse_args()
     if args.sim:
         run_sim(args.arch, args.deployment, args.workload,
-                show_session=args.show_session)
+                show_session=args.show_session, link_bw=args.link_bw)
     else:
         run_real(args.arch, args.mode, args.requests, args.rate,
                  show_session=args.show_session)

@@ -1,16 +1,17 @@
-from repro.serving.costmodel import CostModel, InstanceSpec
+from repro.serving.costmodel import (CostModel, InstanceSpec, LinkModel,
+                                     LinkTransfer)
 from repro.serving.kvcache import OutOfPages, PagedAllocator, PagedKVStore
 from repro.serving.request import Request, RequestState, summarize
 from repro.serving.simulator import (Cluster, DeploymentSpec, EventLoop,
-                                     SimConfig, SimInstance,
+                                     LinkDriver, SimConfig, SimInstance,
                                      deployment_6p2d, deployment_dynamic)
 from repro.serving.workload import (deepseek_1k1k, deepseek_1k4k,
                                     make_workload, qwen_grid)
 
 __all__ = [
-    "CostModel", "InstanceSpec", "OutOfPages", "PagedAllocator",
-    "PagedKVStore", "Request", "RequestState", "summarize", "Cluster",
-    "DeploymentSpec", "EventLoop", "SimConfig", "SimInstance",
-    "deployment_6p2d", "deployment_dynamic", "deepseek_1k1k",
+    "CostModel", "InstanceSpec", "LinkModel", "LinkTransfer", "OutOfPages",
+    "PagedAllocator", "PagedKVStore", "Request", "RequestState", "summarize",
+    "Cluster", "DeploymentSpec", "EventLoop", "LinkDriver", "SimConfig",
+    "SimInstance", "deployment_6p2d", "deployment_dynamic", "deepseek_1k1k",
     "deepseek_1k4k", "make_workload", "qwen_grid",
 ]

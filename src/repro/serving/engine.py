@@ -13,6 +13,12 @@ Modes:
                           decode slot (head-of-line blocking; Table 4 baseline).
   * ``dynamic_pd``      — FlexNPU: prefill and decode as separate logical
                           instances over one daemon with DynamicPDPolicy.
+  * ``disagg``          — static PD disaggregation over a 2-device session:
+                          prefill on device 0, decode on device 1, and the
+                          KV cache moved between them by ``memcpy_peer`` on
+                          the copy-engine stream, ordered by a cross-device
+                          (shared) event — the real-execution analogue of
+                          the cluster simulator's disagg deployments.
 
 Prefill and decode each run on their own virtual stream; the daemon enforces
 per-stream FIFO order while the phase policy arbitrates between the stream
@@ -34,6 +40,28 @@ from repro.core.scheduler import (DynamicPDConfig, DynamicPDPolicy,
 from repro.core.session import connect
 from repro.models.model import Model
 from repro.serving.request import Request, RequestState, summarize
+
+
+def _pack_cache(cache):
+    """Flatten a KV-cache pytree into one contiguous byte blob (+ recipe)."""
+    leaves, treedef = jax.tree.flatten(cache)
+    arrs = [np.asarray(x) for x in leaves]
+    spec = [(a.shape, a.dtype) for a in arrs]
+    blob = np.concatenate(
+        [np.frombuffer(a.tobytes(), np.uint8) for a in arrs]) \
+        if arrs else np.zeros(0, np.uint8)
+    return blob, treedef, spec
+
+
+def _unpack_cache(blob, treedef, spec):
+    buf = bytes(blob) if not isinstance(blob, (bytes, bytearray)) else blob
+    leaves, off = [], 0
+    for shape, dtype in spec:
+        n = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+        leaves.append(jnp.asarray(
+            np.frombuffer(buf[off:off + n], dtype=dtype).reshape(shape)))
+        off += n
+    return jax.tree.unflatten(treedef, leaves)
 
 
 def _insert_slot(full_cache, one_cache, slot):
@@ -60,6 +88,12 @@ class RealEngine:
 
         if mode == "passthrough":
             self.session = connect(mode="passthrough")
+        elif mode == "disagg":
+            # device 0 prefills, device 1 decodes; each side is single-phase
+            # so FIFO order suffices (the simulator's disagg instances too)
+            self.session = connect(mode="flex", devices=2,
+                                   policy=policy or FIFOPolicy(),
+                                   instance="engine")
         else:
             policy = policy or (FIFOPolicy() if mode == "static_colocate"
                                 else DynamicPDPolicy(
@@ -69,8 +103,11 @@ class RealEngine:
                                    instance="engine")
         self.client = self.session.device(0)
         self.daemon = self.session.daemon(0)
+        # decode-side client: device 1 under disagg, device 0 otherwise
+        self.client_d = self.session.device(1) if mode == "disagg" \
+            else self.client
         self.stream_p = self.client.create_stream(phase=Phase.PREFILL)
-        self.stream_d = self.client.create_stream(phase=Phase.DECODE)
+        self.stream_d = self.client_d.create_stream(phase=Phase.DECODE)
 
         # device state
         self.slot_cache = model.init_cache(max_num_seqs, max_len)
@@ -126,8 +163,15 @@ class RealEngine:
     def shutdown(self):
         try:  # release the engine's stream handles (leak-free tables)
             self.client.synchronize(None)
+            if self.client_d is not self.client:
+                self.client_d.synchronize(None)
+                self.client_d.destroy_stream(self.stream_d)
+            else:
+                self.client.destroy_stream(self.stream_d)
             self.client.destroy_stream(self.stream_p)
-            self.client.destroy_stream(self.stream_d)
+            for c in (self.client, self.client_d):
+                if getattr(c, "_copy_stream", None) is not None:
+                    c.destroy_stream(c._copy_stream)
         except Exception:
             pass  # dirty shutdown (timeout/fault): session teardown suffices
         self.session.close()
@@ -172,7 +216,56 @@ class RealEngine:
             if req.done_decoding:
                 self._finish_locked(req)
                 return
+        if self.mode == "disagg":
+            self._transfer_kv(req, single_cache, tok)
+            return
+        with self._lock:
             self.decode_pending.append((req, single_cache, tok))
+            self._fill_slots_locked()
+            self._ensure_decode_locked()
+
+    # --------------------------------------------- disagg: KV cache transfer
+    def _transfer_kv(self, req: Request, single_cache, tok: int) -> None:
+        """Move the prefilled KV cache from the prefill device (0) to the
+        decode device (1) through backend-owned buffers: H2D on device 0,
+        ``memcpy_peer`` on the copy-engine stream, then a cross-device
+        (shared) event orders device 1's D2H readback after the peer copy —
+        the daemons' happens-before graph spans both devices."""
+        blob, treedef, spec = _pack_cache(single_cache)
+        cp, cd = self.client, self.client_d
+        sp, sd = cp.copy_engine_stream(), cd.copy_engine_stream()
+        h_src = cp.malloc(blob.nbytes, tag="kv-transfer")
+        h_dst = cd.malloc(blob.nbytes, tag="kv-transfer")
+        ev = self.session.create_shared_event()
+        cp.memcpy(h_src, blob, vstream=sp)
+        cp.memcpy_peer(self.session.daemon(1), h_dst, h_src, blob.nbytes,
+                       vstream=sp, meta={"req_id": req.req_id})
+        cp.record_event(ev, sp)
+        cd.wait_event(ev, sd)               # released by device 0's record
+        fut = cd.memcpy(None, h_dst, blob.nbytes, vstream=sd)
+        fut.add_done_callback(
+            lambda f: self._kv_arrived(req, tok, treedef, spec,
+                                       h_src, h_dst, ev, f))
+
+    def _kv_arrived(self, req: Request, tok: int, treedef, spec,
+                    h_src: int, h_dst: int, ev: int, fut) -> None:
+        try:
+            cache = _unpack_cache(fut.result(), treedef, spec)
+        except Exception:
+            with self._lock:
+                req.state = RequestState.FAILED
+                self.outstanding -= 1
+                self._all_done.notify_all()
+            return
+        finally:
+            try:  # the peer copy completed before the readback (event edge)
+                self.client.free(h_src)
+                self.client_d.free(h_dst)
+                self.session.destroy_shared_event(ev)
+            except Exception:
+                pass  # teardown race on shutdown: session close cleans up
+        with self._lock:
+            self.decode_pending.append((req, cache, tok))
             self._fill_slots_locked()
             self._ensure_decode_locked()
 
@@ -202,7 +295,7 @@ class RealEngine:
         self.decode_inflight = True
         toks = jnp.asarray(self.next_tokens)
         lens = jnp.asarray(self.lengths)
-        fut = self.client.launch(
+        fut = self.client_d.launch(
             self.stream_d, self._decode_jit, self.params, toks,
             self.slot_cache, lens, phase=Phase.DECODE,
             meta={"tokens": self.active_count})

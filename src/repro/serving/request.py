@@ -65,6 +65,15 @@ class Request:
             self.first_token_time = now
         self.token_times.append(now)
 
+    def reset_for_retry(self) -> None:
+        """Back to QUEUED after a fault: generation restarts from prefill
+        (one reset sequence for instance-failure AND transfer re-routes)."""
+        self.state = RequestState.QUEUED
+        self.generated = 0
+        self.token_times = []
+        self.first_token_time = -1.0
+        self.retries += 1
+
     @property
     def done_decoding(self) -> bool:
         return self.generated >= self.max_new_tokens

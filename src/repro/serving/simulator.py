@@ -37,11 +37,12 @@ import math
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
-from repro.core.api import OpDescriptor, Phase
+from repro.core.api import OpDescriptor, OpType, Phase
 from repro.core.scheduler import (DynamicPDConfig, DynamicPDPolicy,
                                   FIFOPolicy, StaticTimeSlicePolicy)
 from repro.core.session import connect
-from repro.serving.costmodel import CostModel, InstanceSpec
+from repro.serving.costmodel import (CostModel, InstanceSpec, LinkModel,
+                                     LinkTransfer)
 from repro.serving.request import Request, RequestState
 
 
@@ -98,9 +99,47 @@ class SimConfig:
     max_num_seqs: int = 256            # decode slots per instance
     max_prefill_tokens: int = 8192     # tokens batched into one prefill launch
     kv_reserve_frac: float = 0.10
-    transfer_bw: float = 50e9          # disaggregation KV link
+    transfer_bw: float = 50e9          # disaggregation KV link (per link)
+    transfer_latency_s: float = 1e-3   # fixed per-transfer launch latency
     admission_gated: bool = False      # static co-location: prefill needs slot
     chunk_prefill_tokens: int = 0      # 0 = whole-prompt prefill ops
+
+
+class LinkDriver:
+    """Glues a LinkModel onto the EventLoop.
+
+    Processor-shared links change EVERY active transfer's finish time when
+    one starts or completes, and the event loop cannot cancel scheduled
+    events — so the driver schedules a completion *poll* at each transfer's
+    current ETA and re-schedules all peers on every occupancy change.
+    Early (stale) polls are harmless: ``LinkModel.poll`` just reports
+    not-done and a later poll is already queued."""
+
+    def __init__(self, loop: EventLoop, model: LinkModel):
+        self.loop = loop
+        self.model = model
+        self._done_cbs: Dict[LinkTransfer, Callable] = {}
+
+    def start(self, link, nbytes: float, done_cb: Callable) -> LinkTransfer:
+        x = self.model.start(link, nbytes, self.loop.clock.t)
+        self._done_cbs[x] = done_cb
+        self._schedule_polls(link)
+        return x
+
+    def _schedule_polls(self, link) -> None:
+        now = self.loop.clock.t
+        for x in self.model.active_on(link):
+            self.loop.at(self.model.eta(x, now),
+                         lambda x=x: self._poll(x))
+
+    def _poll(self, x: LinkTransfer) -> None:
+        cb = self._done_cbs.get(x)
+        if cb is None:
+            return                     # already completed via an earlier poll
+        if self.model.poll(x, self.loop.clock.t):
+            del self._done_cbs[x]
+            self._schedule_polls(x.link)   # peers now finish earlier
+            cb(x)
 
 
 class SimInstance:
@@ -121,9 +160,10 @@ class SimInstance:
         self.daemon = daemon
         self.stream_p = client.create_stream(phase=Phase.PREFILL)
         self.stream_d = client.create_stream(phase=Phase.DECODE)
-        self.busy = False
+        self.stream_c = client.copy_engine_stream()   # KV transfers
         self.slow_factor = 1.0
         self.failed = False
+        self.link_driver: Optional[LinkDriver] = None  # set by the Cluster
         # request state
         self.prefill_waiting: List[Request] = []   # awaiting admission (gated)
         self.prefilling: Dict[int, Request] = {}  # prefill queued/in-flight
@@ -137,9 +177,16 @@ class SimInstance:
                 f"not fit {spec.chips} chips x 16 GB HBM — choose a larger "
                 f"instance or a smaller/quantized model")
         self.kv_used = 0
+        # prompt tokens whose KV is still charged here while a copy-engine
+        # transfer to a decode instance is in flight (conservation: the
+        # source pages are only freed once the destination holds the copy)
+        self.kv_in_transit = 0
         self._decode_op_inflight = False
         self.on_request_done: Optional[Callable] = None
         self.on_prefill_done: Optional[Callable] = None
+        # cluster hook: a completion other instances may be blocked on
+        # (shared-event record, peer copy) — kicks the sibling daemons
+        self.on_cross_device: Optional[Callable] = None
         self.steps = {"prefill": 0, "decode": 0}
         self.ewma_step = 0.0
 
@@ -273,36 +320,66 @@ class SimInstance:
 
     # ----------------------------------------------------- device driving
     def kick(self) -> None:
-        if self.busy or self.failed:
+        """Dispatch every ready op the device's engines can take.
+
+        The daemon hands out at most one op per free engine slot, so a
+        copy-engine transfer and a compute launch run concurrently on the
+        virtual clock (the threaded daemon does the same on real threads)."""
+        if self.failed:
             return
-        now = self.now
-        op = self.daemon.select_next(now)
-        if op is None:
+        while True:
+            op = self.daemon.select_next(self.now)
+            if op is None:
+                return
+            self._dispatch(op)
+
+    def _dispatch(self, op: OpDescriptor) -> None:
+        # Copy-engine transfers are timed by the shared LinkModel: their
+        # duration depends on link occupancy, not a fixed estimate.
+        if op.op == OpType.MEMCPY_PEER and self.link_driver is not None \
+                and op.meta.get("link") is not None:
+            self.link_driver.start(op.meta["link"],
+                                   float(op.meta.get("nbytes", 0)),
+                                   lambda x, o=op: self._complete(o))
             return
-        self.busy = True
-        # Late-binding batch formation: decode duration reflects the batch
-        # at dispatch time (continuous batching).
         if op.phase == Phase.DECODE:
+            # Late-binding batch formation: decode duration reflects the
+            # batch at dispatch time (continuous batching).
             dur = self._decode_estimate()
-            self.daemon.profiler  # (stats update happens on completion)
             b = max(1, len(self.active))
             ctx = (sum(r.total_tokens for r in self.active) // b) \
                 if self.active else 1024
             op.meta.update(self.cost.decode_meta(self.spec, b, ctx))
             self.steps["decode"] += 1
-        else:
+        elif op.phase == Phase.PREFILL:
             dur = float(op.meta.get("est_duration", 1e-3))
             self.steps["prefill"] += 1
+        else:
+            # bookkeeping ops (event markers, cost-only copies without a
+            # link): modeled duration, no step accounting, no slowdown —
+            # a straggling compute pipeline doesn't slow the DMA engine
+            self.loop.after(float(op.meta.get("est_duration", 0.0)),
+                            lambda o=op: self._complete(o))
+            return
         dur *= self.slow_factor
         self.ewma_step = 0.8 * self.ewma_step + 0.2 * dur if self.ewma_step \
             else dur
         self.loop.after(dur, lambda o=op: self._complete(o))
 
     def _complete(self, op: OpDescriptor) -> None:
-        self.busy = False
         if self.failed:
+            # the op was in flight when the fault hit: its result is void,
+            # but cross-device effects must settle (a shared record peers
+            # wait on, a peer's memcpy ref) or siblings wedge/leak
+            self.daemon.abandon_inflight(op)
+            if self.on_cross_device is not None and \
+                    op.op in (OpType.RECORD_EVENT, OpType.MEMCPY_PEER):
+                self.on_cross_device()
             return
         self.daemon.mark_complete(op, self.now)
+        if self.on_cross_device is not None and \
+                op.op in (OpType.RECORD_EVENT, OpType.MEMCPY_PEER):
+            self.on_cross_device()
         self.kick()
 
     # ------------------------------------------------------------ faults
@@ -317,13 +394,10 @@ class SimInstance:
         self.prefill_waiting, self.decode_pending, self.active = [], [], []
         self.prefilling = {}
         self.kv_used = 0
+        self.kv_in_transit = 0
         self.daemon.fail(requeue_sink=lambda op: None)
         for r in lost:
-            r.state = RequestState.QUEUED
-            r.generated = 0
-            r.token_times = []
-            r.first_token_time = -1.0
-            r.retries += 1
+            r.reset_for_retry()
         return lost
 
 
@@ -378,6 +452,16 @@ class Cluster:
         self.prefill_pool: List[SimInstance] = []
         self.decode_pool: List[SimInstance] = []
         self.instances: List[SimInstance] = []
+        # shared interconnect: one ingress link per instance, occupancy-aware
+        self.link_model = LinkModel(bw=self.sim_cfg.transfer_bw,
+                                    latency_s=self.sim_cfg.transfer_latency_s)
+        self.link_driver = LinkDriver(self.loop, self.link_model)
+        # transfer-id -> {"req", "src", "dst", "tokens", "aborted"} while a
+        # KV transfer is in flight (fault handling + conservation checks).
+        # Keyed by a UNIQUE id, not req_id: a re-routed request may start a
+        # second transfer while its aborted first one is still settling.
+        self.inflight_transfers: Dict[int, Dict] = {}
+        self._transfer_ids = itertools.count(1)
         self._build()
 
     # ----------------------------------------------------------- topology
@@ -418,6 +502,8 @@ class Cluster:
             inst = SimInstance(name, spec, self.cost, self.loop,
                                self.session.device(i), self.session.daemon(i),
                                sim_cfg, role=role)
+            inst.link_driver = self.link_driver
+            inst.on_cross_device = self._kick_all
             if role == "prefill":
                 inst.on_prefill_done = self._transfer_to_decode
                 self.prefill_pool.append(inst)
@@ -455,18 +541,76 @@ class Cluster:
         inst = min(pool, key=lambda i: i.load())
         inst.submit(req)
 
+    def _kick_all(self) -> None:
+        """A cross-device edge resolved (shared record / peer copy done):
+        sibling daemons may have unblocked stream heads."""
+        for inst in self.instances:
+            inst.kick()
+
     def _transfer_to_decode(self, src: SimInstance, req: Request) -> None:
-        """Disaggregation: move KV from a prefill to a decode instance."""
-        src.kv_used -= req.prompt_len
+        """Disaggregation: move KV from a prefill to a decode instance
+        through the source's copy-engine stream.  The transfer is a real
+        daemon op timed by the shared LinkModel, so concurrent transfers
+        into one decode instance contend for its ingress bandwidth — the
+        cost static disaggregation pays and dynamic co-location avoids.
+
+        KV conservation: the source keeps the prompt's pages charged (in
+        ``kv_in_transit``) until the destination holds the copy; only then
+        does the source free them and the destination charge its own."""
         req.state = RequestState.TRANSFER
-        delay = self.cost.transfer_time(req.prompt_len,
-                                        bw=self.sim_cfg.transfer_bw)
         pool = self._healthy(self.decode_pool)
         if not pool:
+            src.kv_used -= req.prompt_len
             req.state = RequestState.FAILED
             return
         dst = min(pool, key=lambda i: i.load())
-        self.loop.after(delay, lambda: dst.admit_decode(req, charge_kv=True))
+        tokens = req.prompt_len
+        src.kv_in_transit += tokens
+        xid = next(self._transfer_ids)
+        self.inflight_transfers[xid] = {
+            "req": req, "src": src, "dst": dst, "tokens": tokens,
+            "aborted": False}
+        fut = src.client.memcpy_peer(
+            dst.daemon, None, None,
+            nbytes=int(tokens * self.cost.kv_bytes_per_token()),
+            vstream=src.stream_c, link=("ingress", dst.name),
+            meta={"req_id": req.req_id})
+        fut.add_done_callback(lambda f, x=xid: self._transfer_done(x, f))
+        src.kick()
+
+    def _transfer_done(self, xid: int, fut) -> None:
+        entry = self.inflight_transfers.pop(xid, None)
+        if entry is None:
+            return                       # source failed: future never fired
+        req, src, dst = entry["req"], entry["src"], entry["dst"]
+        tokens = entry["tokens"]
+        if not src.failed:
+            # free the source copy only now that the destination has one
+            src.kv_in_transit -= tokens
+            src.kv_used -= tokens
+            assert src.kv_used >= 0 and src.kv_in_transit >= 0, \
+                (src.name, src.kv_used, src.kv_in_transit)
+            src._retry_parked()          # freed pages may admit parked work
+        failed_transfer = False
+        try:
+            fut.result()
+        except Exception:
+            failed_transfer = True       # transfer errored on the device
+        if entry["aborted"]:
+            return                       # fault handling already re-routed it
+        if failed_transfer or dst.failed:
+            # destination lost: nothing arrived; restart from prefill
+            self._reroute(req)
+            return
+        dst.admit_decode(req, charge_kv=True)
+
+    def _reroute(self, req: Request) -> None:
+        req.reset_for_retry()
+        pool = self._healthy(self.prefill_pool)
+        if pool:
+            min(pool, key=lambda i: i.load()).submit(req)
+        else:
+            req.state = RequestState.FAILED
 
     # -------------------------------------------------------------- runs
     def run(self, workload: List[Request], until: float = math.inf) -> Dict:
@@ -480,20 +624,62 @@ class Cluster:
         retries = sum(r.retries for r in self.requests)
         if retries:
             out["retries"] = retries
+        if self.link_model.completed:
+            out.update(self.link_model.stats())
         return out
+
+    def check_kv_conservation(self) -> None:
+        """Invariant: KV pages are never double-freed or dropped while a
+        transfer is in flight (satellite fix for the old path, which freed
+        the source pages at transfer START)."""
+        by_src: Dict[str, int] = {}
+        for entry in self.inflight_transfers.values():
+            # aborted entries (dst died) still hold source pages until the
+            # source-side copy op completes and settles them
+            by_src[entry["src"].name] = \
+                by_src.get(entry["src"].name, 0) + entry["tokens"]
+        for inst in self.instances:
+            assert inst.kv_used >= 0, (inst.name, inst.kv_used)
+            assert inst.kv_in_transit >= 0, (inst.name, inst.kv_in_transit)
+            assert inst.kv_used >= inst.kv_in_transit or inst.failed, \
+                (inst.name, inst.kv_used, inst.kv_in_transit)
+            if not inst.failed:
+                assert inst.kv_in_transit == by_src.get(inst.name, 0), \
+                    (inst.name, inst.kv_in_transit, by_src.get(inst.name, 0))
 
     # ------------------------------------------------------------- faults
     def fail_instance(self, name: str) -> int:
-        """Kill an instance; its requests restart elsewhere (prefill redone)."""
+        """Kill an instance; its requests restart elsewhere (prefill redone).
+
+        KV transfers touching the dead instance are resolved WITHOUT double
+        frees: source-side transfers died with their daemon (futures never
+        resolve — drop the registry entry); destination-side transfers keep
+        their entry so the still-running source op settles its own KV
+        accounting, but the request is re-routed immediately."""
         inst = next(i for i in self.instances if i.name == name)
         lost = inst.fail()
+        n_lost = len(lost)
+        for xid, entry in list(self.inflight_transfers.items()):
+            if entry["src"] is inst:
+                # the copy op was drained with the daemon: no completion
+                # callback will fire, and fail() zeroed the KV accounting.
+                # An already-aborted entry (its DESTINATION died first) was
+                # re-routed then — don't resubmit the request a second time
+                del self.inflight_transfers[xid]
+                if not entry["aborted"]:
+                    self._reroute(entry["req"])
+                    n_lost += 1
+            elif entry["dst"] is inst and not entry["aborted"]:
+                entry["aborted"] = True   # source op settles its KV later
+                self._reroute(entry["req"])
+                n_lost += 1
         for r in lost:
             pool = self._healthy(self.prefill_pool)
             if pool:
                 min(pool, key=lambda i: i.load()).submit(r)
             else:
                 r.state = RequestState.FAILED
-        return len(lost)
+        return n_lost
 
     def slow_instance(self, name: str, factor: float) -> None:
         inst = next(i for i in self.instances if i.name == name)

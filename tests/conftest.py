@@ -23,3 +23,14 @@ def np_rng():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running test")
+
+
+def drive_modes():
+    """Daemon drive modes the dual-mode tests parameterize over.
+
+    CI matrixes the tier-1 job over FLEX_DRIVE=threaded|stepped so each leg
+    exercises one way of driving the daemons (real dispatch threads vs the
+    discrete-event stepper); unset or unrecognized values run both."""
+    want = os.environ.get("FLEX_DRIVE", "")
+    modes = ["threaded", "stepped"]
+    return [want] if want in modes else modes
