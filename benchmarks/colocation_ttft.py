@@ -49,6 +49,7 @@ def run(quick: bool = False):
             {"tokens_per_s": round(st["output_tokens_per_s"], 2),
              "ttft_ms": round(st["ttft_mean_s"] * 1e3, 1),
              "tpot_ms": round(st["tpot_mean_s"] * 1e3, 3)}))
+        dy_disp = next(iter(dy["policy"]["dispatch"].values()), {})
         rows.append((
             f"table4.{i}_{o}.flexnpu", 1e6 / max(dy["output_tokens_per_s"], 1e-9),
             {"tokens_per_s": round(dy["output_tokens_per_s"], 2),
@@ -57,7 +58,10 @@ def run(quick: bool = False):
              "ttft_reduction": f"{ttft_red:+.2%}",
              "tpot_change": f"{tpot_red:+.2%}",
              "throughput_change": f"{tp_gain:+.2%}",
-             "paper_ttft_reduction": f"{paper[(i, o)][2]:+.2%}"}))
+             "paper_ttft_reduction": f"{paper[(i, o)][2]:+.2%}",
+             # policy telemetry: where the dynamic policy's share settled
+             "decode_share_target": dy_disp.get("decode_share_target"),
+             "decode_share_realized": dy_disp.get("decode_share_realized")}))
     return rows
 
 

@@ -24,6 +24,7 @@ MODULES = [
     ("table4", "benchmarks.colocation_ttft"),
     ("fig2", "benchmarks.decode_bandwidth"),
     ("fig56", "benchmarks.timeslice_sweep"),
+    ("role_switch", "benchmarks.role_switch"),
     ("roofline", "benchmarks.roofline"),
     ("kernels", "benchmarks.kernels_microbench"),
 ]

@@ -24,7 +24,11 @@ def _run_share(cfg, share, wl):
     peak_kv_frac = None
     if inst.kv_capacity:
         peak_kv_frac = min(1.0, max(inst.kv_used, 0) / inst.kv_capacity)
-    return res, peak_kv_frac
+    # policy telemetry: how closely the realized device-time split tracked
+    # the configured share (SchedulerPolicy.debug_state -> BENCH artifacts)
+    share_realized = res["policy"]["dispatch"].get(inst.name, {}).get(
+        "decode_share_realized")
+    return res, peak_kv_frac, share_realized
 
 
 def run(quick: bool = False):
@@ -41,10 +45,11 @@ def run(quick: bool = False):
     wl5 = make_workload(n, 1024, 1024, rate=40.0, seed=8)
     for share in ([0.2, 0.5, 0.8] if quick else
                   [0.1, 0.25, 0.4, 0.55, 0.7, 0.85]):
-        res, kv = _run_share(cfg, share, wl5)
+        res, kv, realized = _run_share(cfg, share, wl5)
         rows.append((f"fig5.decode_share_{int(share * 100)}",
                      1e6 / max(res["requests_per_s"], 1e-9),
                      {"decode_share": share,
+                      "decode_share_realized": realized,
                       "rps": round(res["requests_per_s"], 2),
                       "tokens_per_s": round(res["output_tokens_per_s"], 0),
                       "kv_used_frac": kv}))
@@ -52,10 +57,11 @@ def run(quick: bool = False):
     wl6 = make_workload(max(n // 3, 80), 1024, 4096, rate=10.0, seed=9)
     for pshare in ([0.2, 0.5, 0.8] if quick else
                    [0.1, 0.25, 0.4, 0.55, 0.7]):
-        res, kv = _run_share(cfg, 1 - pshare, wl6)
+        res, kv, realized = _run_share(cfg, 1 - pshare, wl6)
         rows.append((f"fig6.prefill_share_{int(pshare * 100)}",
                      1e6 / max(res["requests_per_s"], 1e-9),
                      {"prefill_share": pshare,
+                      "decode_share_realized": realized,
                       "rps": round(res["requests_per_s"], 2),
                       "tokens_per_s": round(res["output_tokens_per_s"], 0),
                       "kv_used_frac": kv}))

@@ -11,15 +11,31 @@ from repro.core.client import FlexClient, PassthroughClient
 from repro.core.daemon import FlexDaemon, RealBackend
 from repro.core.handles import SharedEventTable
 from repro.core.profiler import Profiler
-from repro.core.scheduler import (DynamicPDConfig, DynamicPDPolicy,
-                                  FIFOPolicy, SchedulerPolicy,
+# Dispatch policies live in repro.sched (control-plane API v3);
+# repro.core.scheduler remains as a deprecation shim for one release.
+# Submodule imports (not the repro.sched package) keep the core <-> sched
+# import cycle acyclic: sched's own __init__ imports repro.core.api.
+from repro.sched.context import PolicyContext
+from repro.sched.dispatch import (DispatchPolicy, DynamicPDConfig,
+                                  DynamicPDPolicy, FIFOPolicy,
                                   StaticTimeSlicePolicy)
 from repro.core.session import Session, connect
+
+SchedulerPolicy = DispatchPolicy   # v2 alias
+
+
+def make_policy(name: str, **knobs):
+    """Lazy re-export of :func:`repro.sched.make_policy` (the registry
+    imports the cluster-policy layer, which would close the import cycle
+    if pulled in here eagerly)."""
+    from repro.sched.registry import make_policy as _mp
+    return _mp(name, **knobs)
 
 __all__ = [
     "ENGINE_COMPUTE", "ENGINE_COPY", "Future", "MemcpyKind", "OpDescriptor",
     "OpType", "Phase", "RuntimeAPI", "memcpy_model_time", "FlexClient",
     "PassthroughClient", "FlexDaemon", "RealBackend", "SharedEventTable",
-    "Profiler", "DynamicPDConfig", "DynamicPDPolicy", "FIFOPolicy",
-    "SchedulerPolicy", "StaticTimeSlicePolicy", "Session", "connect",
+    "Profiler", "DispatchPolicy", "DynamicPDConfig", "DynamicPDPolicy",
+    "FIFOPolicy", "PolicyContext", "SchedulerPolicy",
+    "StaticTimeSlicePolicy", "Session", "connect", "make_policy",
 ]

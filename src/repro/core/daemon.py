@@ -53,7 +53,12 @@ from repro.core.api import (CONTROL_OPS, ENGINE_COMPUTE, ENGINE_COPY, Future,
                             memcpy_model_time)
 from repro.core.handles import HandleTable, SharedEventTable
 from repro.core.profiler import Profiler
-from repro.core.scheduler import FIFOPolicy, SchedulerPolicy
+# import from the submodules, not the repro.sched package: the daemon loads
+# while repro.sched's own __init__ may still be executing (sched.cluster ->
+# repro.core.api -> this module), and submodule imports break that cycle
+from repro.sched.context import PolicyContext
+from repro.sched.dispatch import DispatchPolicy as SchedulerPolicy
+from repro.sched.dispatch import FIFOPolicy
 
 
 class RealBackend:
@@ -140,6 +145,9 @@ class FlexDaemon:
         self.failed = False
         self.closed = False      # set by Session.close(): reject new work
         self.last_heartbeat = 0.0
+        # optional LinkModel.stats provider — the cluster wires this in so
+        # dispatch policies see link-queueing pressure (PolicyContext v3)
+        self.link_stats_fn = None
         self._cv = threading.Condition()
         self._thread: Optional[threading.Thread] = None
         self._stop = False
@@ -317,9 +325,19 @@ class FlexDaemon:
     def pending_count(self) -> int:
         return sum(len(q) for q in self.queues.values())
 
-    def oldest_pending_time(self) -> Optional[float]:
-        times = [q[0].enqueue_time for q in self.queues.values() if q]
+    def oldest_pending_time(self, phase: Optional[Phase] = None) \
+            -> Optional[float]:
+        """Enqueue time of the oldest pending op (optionally one phase's).
+        Locked: cluster policies read this from other threads."""
+        with self._cv:
+            qs = [self.queues[phase]] if phase is not None \
+                else list(self.queues.values())
+            times = [q[0].enqueue_time for q in qs if q]
         return min(times) if times else None
+
+    def backlog(self, phase: Phase) -> int:
+        """Pending-op depth of one phase queue (cheap, thread-safe)."""
+        return len(self.queues[phase])
 
     def stream_engine(self, vstream: int) -> str:
         """Engine class of a stream (unknown/default streams are compute)."""
@@ -383,7 +401,15 @@ class FlexDaemon:
                 p: _ReadyView([o for o in heads if o.phase is p],
                               len(self.queues[p]))
                 for p in Phase}
-            phase = self.policy.select(ready, self.profiler, now)
+            ctx = PolicyContext(
+                queues=ready, prof=self.profiler, now=now,
+                engine_free={e: n - self._engine_inflight.get(e, 0)
+                             for e, n in self.engine_slots.items()},
+                engine_slots=dict(self.engine_slots),
+                link_stats_fn=self.link_stats_fn)
+            # legacy policies override select(queues, prof, now); the ctx
+            # duck-types as the queues mapping so both signatures work
+            phase = self.policy.select(ctx, self.profiler, now)
             if phase is None or not ready[phase]:
                 return None
             op = ready[phase][0]
@@ -652,7 +678,13 @@ class FlexDaemon:
                 self.mark_complete(op, self.backend.now(), result)
             else:
                 # non-launch data-plane ops (memcpy, event markers): the
-                # effect itself is applied inside mark_complete
+                # effect itself is applied inside mark_complete.  A backend
+                # may pace the op first (the real-time sim drive blocks the
+                # engine thread for the modeled duration; the real backend
+                # has no pace — payload movement is the actual work)
+                pace = getattr(self.backend, "pace", None)
+                if pace is not None:
+                    pace(op)
                 self.mark_complete(op, self.backend.now())
 
     def drain(self, timeout: float = 30.0):

@@ -1,188 +1,27 @@
-"""Phase-aware dispatch scheduling (paper §3.4, 'Phase-Aware Dispatch').
+"""DEPRECATED shim — the dispatch policies moved to ``repro.sched``.
 
-The daemon keeps separate prefill/decode queues; a policy picks which queue
-dispatches next whenever the device frees up.  The paper's dynamic policy
-adjusts the prefill/decode **time-slice ratio** online from five signals:
+The scheduling surface was redesigned into a layered control-plane API
+(v3): ``repro.sched.dispatch`` holds the per-daemon phase policies this
+module used to define, ``repro.sched.admission`` the admission gate, and
+``repro.sched.cluster`` the routing/role-switching layer.  Construct
+policies through the registry::
 
-  (1) pending ops per phase, (2) recent per-phase execution times,
-  (3) memory-bandwidth pressure, (4) decode progress / active sequences,
-  (5) queue occupancy & device utilization.
+    from repro.sched import make_policy
+    make_policy("dynamic_pd", ttft_guard_s=0.05)
 
-All policies are **work-conserving**: if only one phase has pending work it
-always dispatches (the ratio only arbitrates contention).
-
-Policies:
-  * ``FIFOPolicy``            — static PD co-location: arrival order, no phase
-                                awareness (exhibits head-of-line blocking).
-  * ``StaticTimeSlicePolicy`` — fixed decode share (the knob swept in the
-                                paper's Figures 5/6).
-  * ``DynamicPDPolicy``       — FlexNPU: adaptive share + TTFT guard.
+Every v2 name keeps importing from here for one release (see the migration
+table in docs/api.md); new code should import from ``repro.sched``.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Deque, Dict, Optional
+from repro.sched.dispatch import (SCHEDULABLE, DispatchPolicy,  # noqa: F401
+                                  DynamicPDConfig, DynamicPDPolicy,
+                                  FIFOPolicy, StaticTimeSlicePolicy,
+                                  _nonempty, _TimeSliceBase)
 
-from repro.core.api import OpDescriptor, Phase
-from repro.core.profiler import Profiler
+# v2 base-class name: subclasses may override either the v3 ``pick(ctx)``
+# or the legacy ``select(queues, prof, now)`` — both drive the daemon.
+SchedulerPolicy = DispatchPolicy
 
-SCHEDULABLE = (Phase.PREFILL, Phase.DECODE)
-
-
-class SchedulerPolicy:
-    """Returns which phase should dispatch next (None = nothing ready).
-
-    ``queues`` maps Phase -> a sequence of *dispatchable* ops in FIFO order
-    (daemon v2 passes a ready view: truthiness/indexing expose only ops
-    whose stream-order and event edges permit dispatch now, while ``len()``
-    reports the full per-phase backlog so depth-based pressure signals see
-    real queue depth).  A plain dict of deques satisfies the same contract
-    in tests."""
-
-    def select(self, queues: Dict[Phase, Deque[OpDescriptor]],
-               prof: Profiler, now: float) -> Optional[Phase]:
-        raise NotImplementedError
-
-    def on_dispatch(self, op: OpDescriptor, est_duration: float) -> None:
-        pass
-
-    def debug_state(self) -> Dict[str, float]:
-        return {}
-
-
-def _nonempty(queues) -> list:
-    order = [Phase.OTHER, Phase.PREFILL, Phase.DECODE]
-    return [p for p in order if queues.get(p)]
-
-
-class FIFOPolicy(SchedulerPolicy):
-    """Static PD co-location: dispatch strictly by arrival time (the fixed
-    execution policy of the paper's static co-location baseline)."""
-
-    def select(self, queues, prof, now):
-        pending = _nonempty(queues)
-        if not pending:
-            return None
-        return min(pending, key=lambda p: queues[p][0].enqueue_time)
-
-
-class _TimeSliceBase(SchedulerPolicy):
-    """Deficit round-robin over estimated durations: the realized device-time
-    split tracks ``decode_share`` without any hardware partitioning —
-    user-space dispatch control only (paper §3.4)."""
-
-    def __init__(self, decode_share: float = 0.5):
-        self.decode_share = decode_share
-        self._spent = {Phase.PREFILL: 1e-9, Phase.DECODE: 1e-9}
-
-    def _target(self, phase: Phase) -> float:
-        return self.decode_share if phase == Phase.DECODE \
-            else 1.0 - self.decode_share
-
-    def _pick_by_deficit(self, candidates) -> Phase:
-        total = sum(self._spent.values())
-
-        def deficit(p):
-            return self._spent[p] / total - self._target(p)
-        return min(candidates, key=deficit)
-
-    def on_dispatch(self, op, est_duration):
-        if op.phase in self._spent:
-            self._spent[op.phase] += max(est_duration, 1e-9)
-
-    def select(self, queues, prof, now):
-        if queues.get(Phase.OTHER):
-            return Phase.OTHER                     # control ops never starve
-        candidates = [p for p in SCHEDULABLE if queues.get(p)]
-        if not candidates:
-            return None
-        if len(candidates) == 1:
-            return candidates[0]                   # work-conserving
-        return self._pick_by_deficit(candidates)
-
-    def debug_state(self):
-        total = sum(self._spent.values())
-        return {"decode_share_target": self.decode_share,
-                "decode_share_realized": self._spent[Phase.DECODE] / total}
-
-
-class StaticTimeSlicePolicy(_TimeSliceBase):
-    """Fixed prefill/decode split — static PD resource ratio baseline."""
-
-
-@dataclasses.dataclass
-class DynamicPDConfig:
-    min_share: float = 0.05
-    max_share: float = 0.95
-    bw_saturation: float = 0.85    # Figure 2: decode HBM saturation knee
-    adjust_step: float = 0.05
-    ttft_guard_s: float = 0.5      # oldest-prefill age that forces a prefill
-    backlog_ratio_hi: float = 2.0  # decode backlog pressure threshold
-    adjust_interval_s: float = 0.05
-
-
-class DynamicPDPolicy(_TimeSliceBase):
-    """FlexNPU's dynamic PD co-location policy.
-
-    Rules (paper §3.4):
-      * decode bandwidth saturated + prefill pending  -> shift share to prefill
-        ("giving decode more compute slots may not improve throughput").
-      * decode backlog large                          -> shift share to decode
-        ("prevent decode from becoming the serving bottleneck").
-      * TTFT guard: a prefill older than ``ttft_guard_s`` dispatches next —
-        this is what removes static co-location's head-of-line blocking.
-    """
-
-    def __init__(self, cfg: Optional[DynamicPDConfig] = None,
-                 decode_share: float = 0.5):
-        super().__init__(decode_share)
-        self.cfg = cfg or DynamicPDConfig()
-        self._last_adjust = -1e30
-
-    def _adapt(self, queues, prof: Profiler, now: float) -> None:
-        c = self.cfg
-        if now - self._last_adjust < c.adjust_interval_s:
-            return
-        self._last_adjust = now
-        n_pre = len(queues.get(Phase.PREFILL, ()))
-        n_dec = len(queues.get(Phase.DECODE, ()))
-        bw = prof.decode_bandwidth_util()                      # signal (3)
-        dec_stats = prof.stats[Phase.DECODE]
-        pre_stats = prof.stats[Phase.PREFILL]
-
-        # signal (1)+(4): backlog pressure — decode work outstanding relative
-        # to prefill work outstanding, weighted by their typical durations.
-        dec_load = n_dec * max(dec_stats.ewma_exec, 1e-6)
-        pre_load = n_pre * max(pre_stats.ewma_exec, 1e-6)
-
-        if bw >= c.bw_saturation and n_pre > 0:
-            # Decode can't convert more time slices into tokens; lend slack
-            # compute to prefill (the co-location win).
-            self.decode_share -= c.adjust_step
-        elif dec_load > c.backlog_ratio_hi * max(pre_load, 1e-6):
-            self.decode_share += c.adjust_step
-        elif pre_load > c.backlog_ratio_hi * max(dec_load, 1e-6):
-            self.decode_share -= c.adjust_step
-        self.decode_share = min(c.max_share,
-                                max(c.min_share, self.decode_share))
-
-    def select(self, queues, prof, now):
-        if queues.get(Phase.OTHER):
-            return Phase.OTHER
-        candidates = [p for p in SCHEDULABLE if queues.get(p)]
-        if not candidates:
-            return None
-        if len(candidates) == 1:
-            return candidates[0]
-        self._adapt(queues, prof, now)
-        # TTFT guard (signal 5 / responsiveness): never let a prefill wait
-        # behind an unbounded decode run.
-        oldest_prefill = queues[Phase.PREFILL][0]
-        if now - oldest_prefill.enqueue_time > self.cfg.ttft_guard_s:
-            return Phase.PREFILL
-        return self._pick_by_deficit(candidates)
-
-    def debug_state(self):
-        d = super().debug_state()
-        d["decode_share_target"] = self.decode_share
-        return d
+__all__ = ["SCHEDULABLE", "SchedulerPolicy", "DispatchPolicy", "FIFOPolicy",
+           "StaticTimeSlicePolicy", "DynamicPDConfig", "DynamicPDPolicy"]

@@ -43,7 +43,7 @@ from repro.core.api import ENGINE_COMPUTE, Future, MemcpyKind, Phase, RuntimeAPI
 from repro.core.client import FlexClient, PassthroughClient
 from repro.core.daemon import FlexDaemon, RealBackend
 from repro.core.handles import SharedEventTable
-from repro.core.scheduler import SchedulerPolicy
+from repro.sched.dispatch import DispatchPolicy as SchedulerPolicy
 
 MODES = ("flex", "passthrough", "sim")
 

@@ -24,7 +24,7 @@ import numpy as np
 def run_real(arch: str, mode: str, n_requests: int, rate: float,
              prompt_len: int = 16, max_new: int = 16,
              max_num_seqs: int = 4, seed: int = 0, verbose: bool = True,
-             show_session: bool = False):
+             show_session: bool = False, policy: str = ""):
     from repro.distributed.sharding import unbox
     from repro.configs import get_config
     from repro.models import build_model
@@ -41,7 +41,8 @@ def run_real(arch: str, mode: str, n_requests: int, rate: float,
                     arrival_time=i / rate)
             for i in range(n_requests)]
     eng = RealEngine(model, params, mode=mode, max_num_seqs=max_num_seqs,
-                     max_len=prompt_len + max_new + 8)
+                     max_len=prompt_len + max_new + 8,
+                     policy=policy or None)
     try:
         res = eng.run(reqs, timeout=600)
         if show_session and verbose:
@@ -57,24 +58,35 @@ def run_real(arch: str, mode: str, n_requests: int, rate: float,
 
 
 def run_sim(arch: str, deployment: str, workload: str, verbose: bool = True,
-            show_session: bool = False, link_bw: float = 0.0):
+            show_session: bool = False, link_bw: float = 0.0,
+            cluster_policy: str = "", dispatch_policy: str = "",
+            drive: str = "stepped"):
+    import dataclasses
+
     from repro.configs import get_config
-    from repro.serving import (Cluster, SimConfig, deepseek_1k1k,
-                               deepseek_1k4k, deployment_6p2d,
-                               deployment_dynamic)
+    from repro.serving import (Cluster, SimConfig, bursty_phase_shift,
+                               deepseek_1k1k, deepseek_1k4k, deployment_6p2d,
+                               deployment_dynamic, deployment_role_switch)
     from repro.serving.simulator import DeploymentSpec
 
     cfg = get_config(arch)
     deploy = {
         "6p2d": deployment_6p2d(),
         "dynamic": deployment_dynamic(),
+        "role_switch": deployment_role_switch(),
         "static_colocate": DeploymentSpec(mode="static_colocate",
                                           colocated_instances=3,
                                           colocated_chips=128),
     }[deployment]
-    wl = {"1k1k": deepseek_1k1k, "1k4k": deepseek_1k4k}[workload]()
+    # control-plane overrides: any registry name is sweepable from the CLI
+    if cluster_policy or dispatch_policy:
+        deploy = dataclasses.replace(
+            deploy, cluster_policy=cluster_policy or deploy.cluster_policy,
+            dispatch_policy=dispatch_policy or deploy.dispatch_policy)
+    wl = {"1k1k": deepseek_1k1k, "1k4k": deepseek_1k4k,
+          "bursty": bursty_phase_shift}[workload]()
     sim_cfg = SimConfig(transfer_bw=link_bw * 1e9) if link_bw else None
-    cluster = Cluster(cfg, deploy, sim_cfg=sim_cfg)
+    cluster = Cluster(cfg, deploy, sim_cfg=sim_cfg, drive=drive)
     res = cluster.run(wl, until=7200)
     if show_session and verbose:
         print(f"  session[sim] devices={cluster.session.device_count()}")
@@ -94,8 +106,21 @@ def main():
                     choices=["passthrough", "static_colocate", "dynamic_pd",
                              "disagg"])
     ap.add_argument("--deployment", default="dynamic",
-                    choices=["6p2d", "dynamic", "static_colocate"])
-    ap.add_argument("--workload", default="1k1k", choices=["1k1k", "1k4k"])
+                    choices=["6p2d", "dynamic", "role_switch",
+                             "static_colocate"])
+    ap.add_argument("--workload", default="1k1k",
+                    choices=["1k1k", "1k4k", "bursty"])
+    ap.add_argument("--policy", default="",
+                    help="real path: dispatch-policy registry name "
+                         "(repro.sched) overriding the mode default")
+    ap.add_argument("--cluster-policy", default="",
+                    help="sim: cluster-policy registry name "
+                         "(least_loaded, role_switch, ...)")
+    ap.add_argument("--dispatch-policy", default="",
+                    help="sim: per-instance dispatch-policy registry name")
+    ap.add_argument("--drive", default="stepped",
+                    choices=["stepped", "threaded"],
+                    help="sim: discrete-event or real-thread drive")
     ap.add_argument("--link-bw", type=float, default=0.0,
                     help="sim: KV-transfer link bandwidth in GB/s "
                          "(0 = default 50)")
@@ -106,10 +131,12 @@ def main():
     args = ap.parse_args()
     if args.sim:
         run_sim(args.arch, args.deployment, args.workload,
-                show_session=args.show_session, link_bw=args.link_bw)
+                show_session=args.show_session, link_bw=args.link_bw,
+                cluster_policy=args.cluster_policy,
+                dispatch_policy=args.dispatch_policy, drive=args.drive)
     else:
         run_real(args.arch, args.mode, args.requests, args.rate,
-                 show_session=args.show_session)
+                 show_session=args.show_session, policy=args.policy)
 
 
 if __name__ == "__main__":

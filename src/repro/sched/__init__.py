@@ -1,0 +1,38 @@
+# Control-plane API v3 (paper §3.4 + the adaptive-orchestration direction
+# in PAPERS.md): the scheduling surface as three layered policy planes.
+#
+#   DispatchPolicy   — per-daemon phase picker over a stable PolicyContext
+#                      (queue views, profiler signals, engine occupancy,
+#                      link-queueing stats).
+#   AdmissionPolicy  — per-instance prefill admission over an AdmissionView
+#                      (one implementation shared by RealEngine and the
+#                      cluster simulator).
+#   ClusterPolicy    — cluster-wide routing, migration, and dynamic
+#                      instance role-switching.
+#
+# Everything is constructed through one registry: make_policy(name, **knobs).
+# The v2 entry points in repro.core.scheduler remain as deprecation shims
+# for one release (see docs/api.md for the migration table).
+from repro.sched.admission import (AdmissionPolicy, GatedAdmission,
+                                   UngatedAdmission)
+from repro.sched.cluster import (ClusterPolicy, LeastLoadedPolicy,
+                                 RoleSwitchConfig, RoleSwitchPolicy)
+from repro.sched.context import AdmissionView, PolicyContext
+from repro.sched.dispatch import (SCHEDULABLE, DispatchPolicy,
+                                  DynamicPDConfig, DynamicPDPolicy,
+                                  FIFOPolicy, StaticTimeSlicePolicy)
+from repro.sched.registry import (list_policies, make_policy, policy_kind,
+                                  register_policy)
+
+# v2 name for the dispatch layer's base class (kept as an alias so
+# isinstance checks and subclasses written against it keep working)
+SchedulerPolicy = DispatchPolicy
+
+__all__ = [
+    "AdmissionPolicy", "GatedAdmission", "UngatedAdmission",
+    "ClusterPolicy", "LeastLoadedPolicy", "RoleSwitchConfig",
+    "RoleSwitchPolicy", "AdmissionView", "PolicyContext", "SCHEDULABLE",
+    "DispatchPolicy", "DynamicPDConfig", "DynamicPDPolicy", "FIFOPolicy",
+    "StaticTimeSlicePolicy", "SchedulerPolicy", "list_policies",
+    "make_policy", "policy_kind", "register_policy",
+]

@@ -1,0 +1,69 @@
+"""Admission policies (control-plane API v3).
+
+One shared implementation of the prefill admission decision that v2 kept as
+two copy-pasted loops — ``RealEngine._admit_gated_locked`` and
+``SimInstance._try_admit_gated``.  The engine builds an
+:class:`~repro.sched.context.AdmissionView` from its own bookkeeping and
+asks the policy whether the head-of-queue request may start prefilling;
+the *same object* answers for the real engine and the simulator, which is
+what the admission-parity tests pin down.
+
+Policies (registry names in parentheses):
+  * ``UngatedAdmission`` (``ungated``) — FlexNPU co-location: prefill starts
+    immediately; the dispatch policy arbitrates device time.
+  * ``GatedAdmission`` (``gated``)     — static co-location baseline
+    (vLLM-style): a request prefills only once a decode slot AND KV-cache
+    room are guaranteed — the head-of-line blocking the paper's Table 4
+    measures.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.sched.context import AdmissionView
+
+
+class AdmissionPolicy:
+    """Decides whether the head-of-queue request may start prefilling."""
+
+    def admit(self, view: AdmissionView) -> bool:
+        raise NotImplementedError
+
+    def debug_state(self) -> Dict[str, float]:
+        return {}
+
+
+class UngatedAdmission(AdmissionPolicy):
+    """Admit immediately (dynamic PD co-location): TTFT is bounded by the
+    dispatch policy, never by slot availability."""
+
+    def admit(self, view: AdmissionView) -> bool:
+        return view.waiting > 0
+
+
+class GatedAdmission(AdmissionPolicy):
+    """Slot- and KV-gated admission (static co-location baseline).
+
+    A request is admitted only when the sequences already holding or
+    guaranteed a decode slot leave one free, and — where the caller
+    accounts KV tokens — the cache has room for the whole prompt.
+
+    ``count_prefilling`` controls whether admitted-but-still-prefilling
+    requests claim a slot.  The real engine's dense slot cache needs one
+    the moment prefill completes (True, its default); the cluster
+    simulator's KV accounting already bounds prefill concurrency, so its
+    historical gate counts only active + prefilled-pending (False)."""
+
+    def __init__(self, count_prefilling: bool = True):
+        self.count_prefilling = count_prefilling
+
+    def admit(self, view: AdmissionView) -> bool:
+        if view.waiting <= 0:
+            return False
+        claimed = view.active + view.decode_pending \
+            + (view.prefilling if self.count_prefilling else 0)
+        if claimed >= view.max_num_seqs:
+            return False
+        if view.kv_free is not None and view.kv_free < view.next_prompt_len:
+            return False
+        return True

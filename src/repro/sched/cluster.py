@@ -1,0 +1,191 @@
+"""Cluster policies: routing, migration, and dynamic role-switching (v3).
+
+The third control-plane layer sits above per-device dispatch and
+per-instance admission: a :class:`ClusterPolicy` sees cluster-wide phase
+pressure and decides *where* requests go and *what role* each instance
+plays.  This is where FlexNPU's adaptive win lives — per-queue FIFO order
+cannot rebalance a fleet under phase-shifted load (cf. the adaptive
+orchestration layers in PAPERS.md: A-IO, the multi-core-NPU serving study).
+
+Policies (registry names in parentheses):
+  * ``LeastLoadedPolicy`` (``least_loaded``) — v2 behavior: route to the
+    least-loaded healthy instance, avoid stragglers (>2.5x pool-median
+    EWMA step time).
+  * ``RoleSwitchPolicy`` (``role_switch``)   — least-loaded routing plus
+    **dynamic role-switching** for disaggregated deployments: a decode
+    instance under prefill backlog flips role to prefill — draining its
+    in-flight decode KV through the copy-engine path — and flips back when
+    TTFT pressure subsides (or decode pressure returns).
+
+The module is duck-typed against ``repro.serving.simulator`` objects
+(instances expose ``failed / ewma_step / load() / active / decode_pending /
+role``; the cluster exposes ``switch_role`` and the pools) so the policy
+layer carries no serving-side import and stays reusable for a future
+multi-replica RealEngine front end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.api import Phase
+
+
+class ClusterPolicy:
+    """Routing + migration + role control for a serving cluster."""
+
+    def bind(self, cluster) -> None:
+        """Called once by the cluster after construction."""
+        self.cluster = cluster
+
+    # ------------------------------------------------------------- routing
+    def healthy(self, pool: List) -> List:
+        """Healthy members of a pool, excluding stragglers.
+
+        Straggler avoidance: instances whose EWMA step time is >2.5x the
+        pool median stop receiving NEW work (they still drain their own
+        queues)."""
+        ok = [i for i in pool if not i.failed]
+        if len(ok) <= 1:
+            return ok
+        steps = sorted(i.ewma_step for i in ok if i.ewma_step > 0)
+        if steps:
+            med = steps[len(steps) // 2]
+            fast = [i for i in ok
+                    if i.ewma_step <= 2.5 * med or i.ewma_step == 0]
+            if fast:
+                return fast
+        return ok
+
+    def route_prefill(self, req, pool: List):
+        """Pick the instance that prefills ``req`` (None = no capacity)."""
+        raise NotImplementedError
+
+    def route_decode(self, req, src, pool: List):
+        """Pick the decode destination for a prefilled/migrating request."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------ periodic control
+    def tick_interval(self) -> float:
+        """Seconds between ``on_tick`` calls (0 = policy never ticks)."""
+        return 0.0
+
+    def on_tick(self, now: float) -> None:
+        """Periodic cluster-wide control (role switching, rebalancing)."""
+
+    def debug_state(self) -> Dict[str, float]:
+        return {}
+
+
+class LeastLoadedPolicy(ClusterPolicy):
+    """v2 routing: least queued work per chip, stragglers avoided."""
+
+    def _least_loaded(self, pool: List):
+        ok = self.healthy(pool)
+        return min(ok, key=lambda i: i.load()) if ok else None
+
+    def route_prefill(self, req, pool):
+        return self._least_loaded(pool)
+
+    def route_decode(self, req, src, pool):
+        return self._least_loaded(pool)
+
+
+@dataclasses.dataclass
+class RoleSwitchConfig:
+    check_interval_s: float = 0.25   # on_tick cadence (virtual seconds)
+    ttft_hi_s: float = 1.0           # oldest queued prefill age that borrows
+    ttft_lo_s: float = 0.1           # pressure below this returns instances
+    cooldown_s: float = 1.0          # min gap between role flips
+    min_decode: int = 1              # never shrink the decode pool below this
+    decode_busy_hi: float = 0.85     # decode slot occupancy that (a) blocks
+    #                                  borrowing and (b) forces a return
+
+
+class RoleSwitchPolicy(LeastLoadedPolicy):
+    """Dynamic role-switching over a disaggregated deployment.
+
+    Borrow rule: when the oldest queued prefill has waited longer than
+    ``ttft_hi_s`` (TTFT pressure) and the decode pool has slack, the
+    least-busy decode instance flips to prefill; its in-flight decode KV
+    drains to the remaining decode instances over the copy-engine path.
+
+    Return rule: when TTFT pressure falls below ``ttft_lo_s`` — or decode
+    occupancy crosses ``decode_busy_hi`` — the most recently borrowed
+    instance flips back to decode.  Both rules respect a cooldown so the
+    fleet never thrashes."""
+
+    def __init__(self, cfg: Optional[RoleSwitchConfig] = None):
+        self.cfg = cfg or RoleSwitchConfig()
+        self.borrowed: List = []     # decode instances currently prefilling
+        self.flips = 0
+        self._last_flip = -1e30
+        self._pressure = 0.0
+        self._decode_busy = 0.0
+
+    def tick_interval(self) -> float:
+        return self.cfg.check_interval_s
+
+    # ------------------------------------------------------------- signals
+    def prefill_pressure(self, now: float, prefill_pool: List) -> float:
+        """Age of the oldest prefill op still queued anywhere in the pool
+        (the cluster-wide TTFT pressure signal)."""
+        oldest = None
+        for inst in prefill_pool:
+            if inst.failed:
+                continue
+            t = inst.daemon.oldest_pending_time(Phase.PREFILL)
+            if t is not None and (oldest is None or t < oldest):
+                oldest = t
+            for r in inst.prefill_waiting:        # parked / unadmitted
+                if oldest is None or r.arrival_time < oldest:
+                    oldest = r.arrival_time
+        return 0.0 if oldest is None else max(0.0, now - oldest)
+
+    @staticmethod
+    def decode_busy(decode_pool: List) -> float:
+        ok = [i for i in decode_pool if not i.failed]
+        slots = sum(i.sim_cfg.max_num_seqs for i in ok)
+        if slots <= 0:
+            return 1.0
+        return sum(len(i.active) + len(i.decode_pending) for i in ok) / slots
+
+    # ---------------------------------------------------------------- tick
+    def on_tick(self, now: float) -> None:
+        c = self.cluster
+        cfg = self.cfg
+        self._pressure = self.prefill_pressure(now, c.prefill_pool)
+        self._decode_busy = self.decode_busy(c.decode_pool)
+        if now - self._last_flip < cfg.cooldown_s:
+            return
+        if self.borrowed and self._pressure > cfg.ttft_lo_s:
+            # keep re-leveling the router-visible prefill queues while
+            # borrowed capacity is active: waiting requests are pure
+            # routing state, so this continuously corrects any imbalance
+            # (e.g. real dispatch overhead the cost model doesn't see)
+            c._rebalance_prefill_queues()
+        decode_ok = [i for i in c.decode_pool if not i.failed]
+        if (self._pressure > cfg.ttft_hi_s
+                and len(decode_ok) > cfg.min_decode
+                and self._decode_busy < cfg.decode_busy_hi):
+            victim = min(decode_ok,
+                         key=lambda i: len(i.active) + len(i.decode_pending))
+            if c.switch_role(victim, "prefill"):
+                self.borrowed.append(victim)
+                self.flips += 1
+                self._last_flip = now
+        elif self.borrowed and (self._pressure < cfg.ttft_lo_s
+                                or self._decode_busy > cfg.decode_busy_hi):
+            inst = self.borrowed[-1]
+            if inst.failed:
+                self.borrowed.pop()
+            elif c.switch_role(inst, "decode"):
+                self.borrowed.pop()
+                self.flips += 1
+                self._last_flip = now
+
+    def debug_state(self):
+        return {"role_flips": self.flips,
+                "borrowed_now": len(self.borrowed),
+                "prefill_pressure_s": round(self._pressure, 4),
+                "decode_busy": round(self._decode_busy, 4)}

@@ -1,0 +1,101 @@
+"""Stable policy-facing views of runtime state (control-plane API v3).
+
+``PolicyContext`` is the one argument a :class:`DispatchPolicy` receives:
+the per-phase queue views the daemon already exposed, plus the profiler,
+the clock, per-engine occupancy, and (when the deployment wires one in)
+link-queueing statistics from the shared ``LinkModel``.  It also implements
+the old ``queues`` mapping protocol (``ctx[phase]`` / ``ctx.get(phase)``),
+so policies written against the v2 ``select(queues, prof, now)`` signature
+keep working unchanged while new policies read the richer signals.
+
+``AdmissionView`` is the analogous snapshot for :class:`AdmissionPolicy`:
+both the real engine and the simulator instance build one from their own
+bookkeeping, which is what makes the admission decision shared instead of
+copy-pasted (the v2 duplication this API replaces).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Optional
+
+
+@dataclasses.dataclass
+class PolicyContext:
+    """Everything a dispatch policy may look at when picking a phase.
+
+    ``queues`` maps Phase -> a *ready view*: truthiness/indexing expose only
+    ops whose stream-order and event edges permit dispatch now, while
+    ``len()`` reports the full per-phase backlog (depth-based pressure
+    signals see real queue depth).  A plain dict of deques satisfies the
+    same contract in tests."""
+
+    queues: Mapping
+    prof: Any = None                 # repro.core.profiler.Profiler
+    now: float = 0.0
+    # per-engine occupancy: free dispatch slots and configured slot counts
+    # (a device has one compute queue and one DMA/copy engine)
+    engine_free: Dict[str, int] = dataclasses.field(default_factory=dict)
+    engine_slots: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # lazily-evaluated link-queueing stats (LinkModel.stats()); daemons not
+    # attached to a link model report {}
+    link_stats_fn: Optional[Callable[[], Dict[str, float]]] = None
+
+    # -- legacy mapping protocol (v2 policies treated the first select()
+    # -- argument as the queues dict itself)
+    def __getitem__(self, phase):
+        return self.queues[phase]
+
+    def get(self, phase, default=None):
+        return self.queues.get(phase, default)
+
+    def __contains__(self, phase) -> bool:
+        return phase in self.queues
+
+    def __iter__(self):
+        return iter(self.queues)
+
+    def __len__(self) -> int:
+        return len(self.queues)
+
+    def keys(self):
+        return self.queues.keys()
+
+    def values(self):
+        return self.queues.values()
+
+    def items(self):
+        return self.queues.items()
+
+    # -- convenience signals -------------------------------------------------
+    def backlog(self, phase) -> int:
+        """Full queue depth of one phase (ready + blocked ops)."""
+        q = self.queues.get(phase)
+        return len(q) if q is not None else 0
+
+    @property
+    def link_stats(self) -> Dict[str, float]:
+        return self.link_stats_fn() if self.link_stats_fn is not None else {}
+
+    @classmethod
+    def coerce(cls, queues, prof=None, now=None) -> "PolicyContext":
+        """Normalize either calling convention into a context object."""
+        if isinstance(queues, cls):
+            return queues
+        return cls(queues=queues, prof=prof, now=0.0 if now is None else now)
+
+
+@dataclasses.dataclass
+class AdmissionView:
+    """Snapshot of one serving instance's occupancy for admission control.
+
+    ``kv_free`` is ``None`` when the caller does no KV-token accounting
+    (the real engine's dense slot caches); the simulator reports free KV
+    tokens so admission can gate on cache room as well as slots."""
+
+    waiting: int                 # requests queued for admission
+    next_prompt_len: int         # prompt length of the head-of-queue request
+    active: int                  # decoding now
+    decode_pending: int          # prefilled, awaiting a decode slot
+    prefilling: int              # admitted, prefill queued or in flight
+    max_num_seqs: int            # decode slots on the instance
+    kv_free: Optional[int] = None

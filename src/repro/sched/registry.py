@@ -1,0 +1,95 @@
+"""Policy registry: construct any control-plane policy by name.
+
+One factory for all three layers::
+
+    from repro.sched import make_policy
+
+    make_policy("dynamic_pd", ttft_guard_s=0.05)   # DispatchPolicy
+    make_policy("gated")                           # AdmissionPolicy
+    make_policy("role_switch", ttft_hi_s=2.0)      # ClusterPolicy
+
+``Cluster``, ``RealEngine``, ``launch/serve.py``, and the benchmarks all
+resolve policies through this registry, so a new policy registered here is
+immediately sweepable by name everywhere.  Config-dataclass policies
+(``dynamic_pd``, ``role_switch``) accept their config's fields as flat
+keyword knobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, NamedTuple
+
+from repro.sched.admission import GatedAdmission, UngatedAdmission
+from repro.sched.cluster import (LeastLoadedPolicy, RoleSwitchConfig,
+                                 RoleSwitchPolicy)
+from repro.sched.dispatch import (DynamicPDConfig, DynamicPDPolicy,
+                                  FIFOPolicy, StaticTimeSlicePolicy)
+
+
+class _Entry(NamedTuple):
+    kind: str                    # "dispatch" | "admission" | "cluster"
+    factory: Callable
+    knobs: tuple                 # accepted keyword names (for errors/--help)
+
+
+_REGISTRY: Dict[str, _Entry] = {}
+
+
+def register_policy(name: str, kind: str, factory: Callable,
+                    knobs: tuple = ()) -> None:
+    """Register a policy constructor under a sweepable name."""
+    if kind not in ("dispatch", "admission", "cluster"):
+        raise ValueError(f"unknown policy kind {kind!r}")
+    _REGISTRY[name] = _Entry(kind, factory, tuple(knobs))
+
+
+def list_policies(kind: str = "") -> List[str]:
+    return sorted(n for n, e in _REGISTRY.items()
+                  if not kind or e.kind == kind)
+
+
+def policy_kind(name: str) -> str:
+    return _REGISTRY[name].kind
+
+
+def make_policy(name: str, **knobs):
+    """Build the policy registered as ``name`` with the given knobs."""
+    try:
+        entry = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown policy {name!r}; registered: {list_policies()}") \
+            from None
+    bad = [k for k in knobs if entry.knobs and k not in entry.knobs]
+    if bad:
+        raise TypeError(f"policy {name!r} accepts knobs {entry.knobs}, "
+                        f"got {bad}")
+    return entry.factory(**knobs)
+
+
+def _cfg_knobs(cfg_cls) -> tuple:
+    return tuple(f.name for f in dataclasses.fields(cfg_cls))
+
+
+def _dynamic_pd(decode_share: float = 0.5, **knobs) -> DynamicPDPolicy:
+    return DynamicPDPolicy(DynamicPDConfig(**knobs), decode_share=decode_share)
+
+
+def _role_switch(**knobs) -> RoleSwitchPolicy:
+    return RoleSwitchPolicy(RoleSwitchConfig(**knobs))
+
+
+# --- dispatch --------------------------------------------------------------
+register_policy("fifo", "dispatch", FIFOPolicy)
+register_policy("static_slice", "dispatch", StaticTimeSlicePolicy,
+                knobs=("decode_share",))
+register_policy("dynamic_pd", "dispatch", _dynamic_pd,
+                knobs=("decode_share",) + _cfg_knobs(DynamicPDConfig))
+# --- admission -------------------------------------------------------------
+register_policy("ungated", "admission", UngatedAdmission)
+register_policy("gated", "admission", GatedAdmission,
+                knobs=("count_prefilling",))
+# --- cluster ---------------------------------------------------------------
+register_policy("least_loaded", "cluster", LeastLoadedPolicy)
+register_policy("role_switch", "cluster", _role_switch,
+                knobs=_cfg_knobs(RoleSwitchConfig))

@@ -4,14 +4,16 @@ from repro.serving.kvcache import OutOfPages, PagedAllocator, PagedKVStore
 from repro.serving.request import Request, RequestState, summarize
 from repro.serving.simulator import (Cluster, DeploymentSpec, EventLoop,
                                      LinkDriver, SimConfig, SimInstance,
-                                     deployment_6p2d, deployment_dynamic)
-from repro.serving.workload import (deepseek_1k1k, deepseek_1k4k,
-                                    make_workload, qwen_grid)
+                                     deployment_6p2d, deployment_dynamic,
+                                     deployment_role_switch)
+from repro.serving.workload import (bursty_phase_shift, deepseek_1k1k,
+                                    deepseek_1k4k, make_workload, qwen_grid)
 
 __all__ = [
     "CostModel", "InstanceSpec", "LinkModel", "LinkTransfer", "OutOfPages",
     "PagedAllocator", "PagedKVStore", "Request", "RequestState", "summarize",
     "Cluster", "DeploymentSpec", "EventLoop", "LinkDriver", "SimConfig",
-    "SimInstance", "deployment_6p2d", "deployment_dynamic", "deepseek_1k1k",
+    "SimInstance", "deployment_6p2d", "deployment_dynamic",
+    "deployment_role_switch", "bursty_phase_shift", "deepseek_1k1k",
     "deepseek_1k4k", "make_workload", "qwen_grid",
 ]

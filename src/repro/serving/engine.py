@@ -35,9 +35,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import Phase
-from repro.core.scheduler import (DynamicPDConfig, DynamicPDPolicy,
-                                  FIFOPolicy)
 from repro.core.session import connect
+from repro.sched import (AdmissionPolicy, AdmissionView, DynamicPDConfig,
+                         DynamicPDPolicy, FIFOPolicy, GatedAdmission,
+                         UngatedAdmission, make_policy)
 from repro.models.model import Model
 from repro.serving.request import Request, RequestState, summarize
 
@@ -76,7 +77,8 @@ def _insert_slot(full_cache, one_cache, slot):
 class RealEngine:
     def __init__(self, model: Model, params, *, mode: str = "dynamic_pd",
                  max_num_seqs: int = 4, max_len: int = 256,
-                 policy=None, sample: str = "greedy"):
+                 policy=None, admission: Optional[AdmissionPolicy] = None,
+                 sample: str = "greedy"):
         self.model = model
         self.params = params
         self.mode = mode
@@ -85,6 +87,20 @@ class RealEngine:
         self.sample = sample
         self._lock = threading.RLock()
         self._all_done = threading.Condition(self._lock)
+        # control plane (v3): dispatch policies resolve through the registry
+        # by name; admission is a shared AdmissionPolicy (the same object
+        # type the cluster simulator uses — no copy-pasted gating)
+        if isinstance(policy, str):
+            from repro.sched import policy_kind
+            if policy_kind(policy) != "dispatch":
+                raise ValueError(
+                    f"policy {policy!r} is a {policy_kind(policy)} policy; "
+                    f"RealEngine's policy= takes a dispatch policy "
+                    f"(fifo, static_slice, dynamic_pd, ...)")
+            policy = make_policy(policy)
+        self.admission = admission or (
+            GatedAdmission() if mode == "static_colocate"
+            else UngatedAdmission())
 
         if mode == "passthrough":
             self.session = connect(mode="passthrough")
@@ -122,7 +138,7 @@ class RealEngine:
             lambda p, toks, cache, lens: model.decode(p, toks, cache, lens))
 
         # engine queues
-        self.waiting_admission: List[Request] = []   # static mode gate
+        self.waiting_admission: List[Request] = []   # awaiting admission
         self.decode_pending: List[tuple] = []        # (req, single_cache, tok)
         self.prefilling_count = 0                    # admitted, prefill running
         self.active_count = 0
@@ -135,11 +151,8 @@ class RealEngine:
         with self._lock:
             self.outstanding += 1
             req.arrival_time = req.arrival_time or time.monotonic()
-            if self.mode == "static_colocate":
-                self.waiting_admission.append(req)
-                self._admit_gated_locked()
-            else:
-                self._launch_prefill(req)
+            self.waiting_admission.append(req)
+            self._drain_admission_locked()
 
     def run(self, requests: List[Request], timeout: float = 300.0) -> Dict:
         """Submit per arrival offsets (relative seconds) and wait."""
@@ -177,10 +190,19 @@ class RealEngine:
         self.session.close()
 
     # ------------------------------------------------------------ prefill
-    def _admit_gated_locked(self):
-        while (self.waiting_admission
-               and self.active_count + len(self.decode_pending)
-               + self.prefilling_count < self.max_num_seqs):
+    def _admission_view(self) -> AdmissionView:
+        head = self.waiting_admission[0] if self.waiting_admission else None
+        return AdmissionView(
+            waiting=len(self.waiting_admission),
+            next_prompt_len=head.prompt_len if head else 0,
+            active=self.active_count,
+            decode_pending=len(self.decode_pending),
+            prefilling=self.prefilling_count,
+            max_num_seqs=self.max_num_seqs,
+            kv_free=None)      # dense slot caches: no token accounting
+
+    def _drain_admission_locked(self):
+        while self.admission.admit(self._admission_view()):
             req = self.waiting_admission.pop(0)
             self.prefilling_count += 1
             self._launch_prefill(req)
@@ -200,17 +222,16 @@ class RealEngine:
             logits, single_cache, lens = fut.result()
         except Exception:
             with self._lock:
-                if self.mode == "static_colocate":
-                    self.prefilling_count = max(0, self.prefilling_count - 1)
+                self.prefilling_count = max(0, self.prefilling_count - 1)
                 req.state = RequestState.FAILED
                 self.outstanding -= 1
+                self._drain_admission_locked()
                 self._all_done.notify_all()
             return
         tok = int(np.argmax(np.asarray(logits[0])))
         now = time.monotonic()
         with self._lock:
-            if self.mode == "static_colocate":
-                self.prefilling_count = max(0, self.prefilling_count - 1)
+            self.prefilling_count = max(0, self.prefilling_count - 1)
             req.record_token(now)
             req.output_tokens.append(tok)
             if req.done_decoding:
@@ -327,8 +348,7 @@ class RealEngine:
                     self.lengths[slot] = 0
                     self.active_count -= 1
                     self._finish_locked(req)
-            if self.mode == "static_colocate":
-                self._admit_gated_locked()
+            self._drain_admission_locked()
             self._fill_slots_locked()
             self._ensure_decode_locked()
 
@@ -337,4 +357,8 @@ class RealEngine:
         req.finish_time = time.monotonic()
         self.finished.append(req)
         self.outstanding -= 1
+        # a finished sequence releases its slot claim: gated admission may
+        # now let the next request in (also covers requests that finish at
+        # prefill, which never reach the decode-completion drain)
+        self._drain_admission_locked()
         self._all_done.notify_all()

@@ -1,0 +1,175 @@
+"""Real-time (threaded) drive for the cluster: wall clock instead of DES.
+
+The discrete-event simulator steps daemons by hand (``select_next`` /
+``mark_complete``) on a virtual clock.  This module provides the second
+drive mode: the SAME cluster, instances, policies, and cost model, but the
+daemons run their real dispatch threads (``connect(mode="flex")``) against
+a :class:`RealTimeSimBackend` that *blocks* each op's engine thread for its
+modeled duration — scaled by ``time_scale`` so a 60-virtual-second run
+takes ~``60 * time_scale`` wall seconds.
+
+Why it exists: the control plane (dispatch policies, admission, cluster
+routing, role switching) must behave identically whether the daemons are
+driven by the stepper or by real threads — that is the dual-drive property
+the rest of the repo maintains, now extended to cluster scale.  Timing in
+this mode carries real scheduling jitter; tests that assert on it use the
+``FLEX_TIMING_SLACK`` knob.
+
+  * :class:`WallClock` — virtual ``now`` derived from the wall clock.
+  * :class:`RealTimeLoop` — EventLoop-compatible (``at``/``after``/``run``)
+    scheduler that fires events at their scaled wall deadlines while daemon
+    threads make progress concurrently.
+  * :class:`RealTimeSimBackend` — executes LAUNCH ops as scaled sleeps and
+    paces non-launch data ops (the daemon's ``pace`` hook).
+  * :class:`ThreadedLinkTimer` — blocks a copy-engine thread for a
+    transfer's occupancy-aware duration on the shared ``LinkModel`` (the
+    threaded analogue of the stepped ``LinkDriver``).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+import threading
+import time
+from typing import Callable, List, Optional, Tuple
+
+from repro.core.api import OpDescriptor, OpType
+
+from repro.serving.costmodel import LinkModel
+
+
+class WallClock:
+    """Virtual time derived from the wall clock: ``t`` advances at
+    ``1 / scale`` virtual seconds per wall second once started."""
+
+    def __init__(self, scale: float):
+        self.scale = float(scale)
+        self._t0: Optional[float] = None
+
+    def start(self) -> None:
+        if self._t0 is None:
+            self._t0 = time.monotonic()
+
+    @property
+    def t(self) -> float:
+        if self._t0 is None:
+            return 0.0
+        return (time.monotonic() - self._t0) / self.scale
+
+    def now(self) -> float:
+        return self.t
+
+
+class RealTimeLoop:
+    """EventLoop-compatible scheduler over a :class:`WallClock`.
+
+    ``at``/``after`` are thread-safe (daemon callbacks re-arm policy
+    ticks); ``run`` fires events at their scaled wall deadlines and returns
+    once the heap is empty AND ``idle()`` reports the cluster quiescent
+    (daemon threads finish work the loop never sees)."""
+
+    def __init__(self, time_scale: float = 0.05):
+        self.scale = float(time_scale)
+        self.clock = WallClock(self.scale)
+        self._heap: List[Tuple[float, int, Callable]] = []
+        self._seq = itertools.count()
+        self._cv = threading.Condition()
+
+    def at(self, t: float, fn: Callable) -> None:
+        with self._cv:
+            heapq.heappush(self._heap,
+                           (max(t, self.clock.t), next(self._seq), fn))
+            self._cv.notify()
+
+    def after(self, dt: float, fn: Callable) -> None:
+        self.at(self.clock.t + dt, fn)
+
+    def run(self, until: float = math.inf,
+            idle: Optional[Callable[[], bool]] = None) -> None:
+        self.clock.start()
+        while True:
+            if self.clock.t >= until:
+                return                       # virtual-time horizon reached
+            with self._cv:
+                if not self._heap:
+                    if idle is None or idle():
+                        return
+                    self._cv.wait(0.01)      # daemons still working: poll
+                    continue
+                t = self._heap[0][0]
+                wall_wait = (t - self.clock.t) * self.scale
+                if wall_wait > 1e-4:
+                    # may be woken early by an at() for a sooner event
+                    self._cv.wait(min(wall_wait, 0.05))
+                    continue
+                _, _, fn = heapq.heappop(self._heap)
+            fn()
+
+
+class ThreadedLinkTimer:
+    """Occupancy-aware transfer timing for the threaded drive.
+
+    Blocks the calling (copy-engine) thread until the transfer completes on
+    the shared :class:`LinkModel` — the engine IS busy for the duration,
+    exactly like the stepped drive's one-op-per-engine rule.  Concurrent
+    transfers from other daemons' copy threads contend on the same link and
+    stretch each other's ETAs; each sleeper re-polls at its current ETA."""
+
+    def __init__(self, model: LinkModel, clock: WallClock, scale: float):
+        self.model = model
+        self.clock = clock
+        self.scale = float(scale)
+        self._lock = threading.Lock()
+
+    def transfer(self, link, nbytes: float) -> None:
+        with self._lock:
+            x = self.model.start(link, nbytes, self.clock.t)
+        while True:
+            with self._lock:
+                if self.model.poll(x, self.clock.t):
+                    return
+                eta = self.model.eta(x, self.clock.t)
+            wall = (eta - self.clock.t) * self.scale
+            time.sleep(max(wall, 1e-4))
+
+
+class RealTimeSimBackend:
+    """Backend for threaded daemons inside the real-time cluster drive.
+
+    LAUNCH ops block their engine thread for the modeled duration (scaled);
+    non-launch data ops are paced the same way, except link-keyed peer
+    copies which block on the :class:`ThreadedLinkTimer` so same-link
+    transfers contend.  Payload effects still happen in ``mark_complete``
+    — this backend only owns *when*, like the stepped ``SimBackend``."""
+
+    def __init__(self, clock: WallClock, scale: float,
+                 link_timer: Optional[ThreadedLinkTimer] = None):
+        self.clock = clock
+        self.scale = float(scale)
+        self.link_timer = link_timer
+
+    def now(self) -> float:
+        return self.clock.t
+
+    def estimate(self, op: OpDescriptor) -> float:
+        return float(op.meta.get("est_duration", 1e-3))
+
+    def execute(self, op: OpDescriptor):
+        # the op's SimInstance (stamped at enqueue) owns the duration:
+        # decode late-binds its batch, slow_factor applies, EWMA updates —
+        # the same op_duration the stepped _dispatch uses
+        inst = op.meta.get("_sim_inst")
+        dur = inst.op_duration(op) if inst is not None else self.estimate(op)
+        time.sleep(dur * self.scale)
+        return None
+
+    def pace(self, op: OpDescriptor) -> None:
+        if (op.op == OpType.MEMCPY_PEER and self.link_timer is not None
+                and op.meta.get("link") is not None):
+            self.link_timer.transfer(op.meta["link"],
+                                     float(op.meta.get("nbytes", 0)))
+            return
+        dur = self.estimate(op)
+        if dur > 0:
+            time.sleep(dur * self.scale)

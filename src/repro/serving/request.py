@@ -102,6 +102,7 @@ def summarize(requests: List[Request]) -> dict:
         "output_tokens_per_s": out_tokens / dur,
         "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else float("nan"),
         "ttft_p50_s": pct(ttfts, 0.50),
+        "ttft_p95_s": pct(ttfts, 0.95),
         "ttft_p99_s": pct(ttfts, 0.99),
         "tpot_mean_s": sum(tpots) / len(tpots) if tpots else float("nan"),
         "tpot_p99_s": pct(tpots, 0.99),

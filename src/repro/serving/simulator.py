@@ -27,6 +27,20 @@ Deployments (paper §4):
 Fault tolerance: instances can be failed mid-run (state lost, queued +
 in-flight requests re-routed and restarted), or slowed (straggler); the
 router avoids stragglers using fleet-relative EWMA step times.
+
+Control plane (v3, ``repro.sched``): dispatch policies are built through
+the policy registry, prefill admission goes through a shared
+``AdmissionPolicy`` (the same implementation the real engine uses), and a
+``ClusterPolicy`` owns routing, migration, and **dynamic role-switching**
+(``Cluster.switch_role``): a decode instance under prefill backlog flips
+role — draining its in-flight decode KV over the copy-engine path — and
+flips back when TTFT pressure subsides.
+
+Drive modes: ``drive="stepped"`` (default) is the discrete-event simulator
+above; ``drive="threaded"`` runs the SAME instances over real daemon
+dispatch threads against a wall clock scaled by ``time_scale``
+(``repro.serving.realtime``), so control-plane behavior is validated under
+real concurrency too.
 """
 from __future__ import annotations
 
@@ -34,13 +48,16 @@ import dataclasses
 import heapq
 import itertools
 import math
+import threading
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.api import OpDescriptor, OpType, Phase
-from repro.core.scheduler import (DynamicPDConfig, DynamicPDPolicy,
-                                  FIFOPolicy, StaticTimeSlicePolicy)
 from repro.core.session import connect
+from repro.sched import (AdmissionPolicy, AdmissionView, ClusterPolicy,
+                         DynamicPDConfig, DynamicPDPolicy, FIFOPolicy,
+                         GatedAdmission, UngatedAdmission, make_policy,
+                         policy_kind)
 from repro.serving.costmodel import (CostModel, InstanceSpec, LinkModel,
                                      LinkTransfer)
 from repro.serving.request import Request, RequestState
@@ -103,6 +120,12 @@ class SimConfig:
     transfer_latency_s: float = 1e-3   # fixed per-transfer launch latency
     admission_gated: bool = False      # static co-location: prefill needs slot
     chunk_prefill_tokens: int = 0      # 0 = whole-prompt prefill ops
+    # max prefills enqueued-but-incomplete per instance (0 = unbounded).
+    # A small window keeps excess prefill backlog in the instance's
+    # router-visible waiting queue instead of the device queue, so a role
+    # switch can REBALANCE it onto a newly-borrowed instance (work already
+    # on a daemon cannot move).  Work-conserving for any window >= 2.
+    prefill_window: int = 0
 
 
 class LinkDriver:
@@ -149,13 +172,26 @@ class SimInstance:
 
     def __init__(self, name: str, spec: InstanceSpec, cost: CostModel,
                  loop: EventLoop, client, daemon, sim_cfg: SimConfig,
-                 role: str = "both"):
+                 role: str = "both",
+                 admission: Optional[AdmissionPolicy] = None,
+                 lock: Optional[threading.RLock] = None,
+                 drive: str = "stepped"):
         self.name = name
         self.spec = spec
         self.cost = cost
         self.loop = loop
         self.sim_cfg = sim_cfg
-        self.role = role  # "prefill" | "decode" | "both"
+        self.role = role  # "prefill" | "decode" | "both" (switchable)
+        self.drive = drive
+        # shared admission policy (control plane v3) — the same object type
+        # RealEngine uses, so gating decisions cannot drift between them
+        self.admission = admission or (
+            GatedAdmission(count_prefilling=False)
+            if sim_cfg.admission_gated else UngatedAdmission())
+        # serving-state lock: the cluster shares ONE RLock across instances
+        # (threaded drive mutates state from daemon engine threads; in the
+        # stepped drive it is uncontended)
+        self._lock = lock or threading.RLock()
         self.client = client
         self.daemon = daemon
         self.stream_p = client.create_stream(phase=Phase.PREFILL)
@@ -206,22 +242,34 @@ class SimInstance:
 
     # ------------------------------------------------------------ prefill
     def submit(self, req: Request) -> None:
-        req.instance = self.name
-        if self.sim_cfg.admission_gated:
-            # static co-location: a request only prefills once a decode slot
-            # AND kv space are available (vLLM-style admission).
+        with self._lock:
+            req.instance = self.name
             self.prefill_waiting.append(req)
-            self._try_admit_gated()
-        else:
-            self._enqueue_prefill(req)
+            self._drain_admission()
 
-    def _try_admit_gated(self) -> None:
-        while (self.prefill_waiting
-               and len(self.active) + len(self.decode_pending)
-               < self.sim_cfg.max_num_seqs
-               and self.kv_free() >= self.prefill_waiting[0].prompt_len):
+    def _admission_view(self) -> AdmissionView:
+        head = self.prefill_waiting[0] if self.prefill_waiting else None
+        return AdmissionView(
+            waiting=len(self.prefill_waiting),
+            next_prompt_len=head.prompt_len if head else 0,
+            active=len(self.active),
+            decode_pending=len(self.decode_pending),
+            prefilling=len(self.prefilling),
+            max_num_seqs=self.sim_cfg.max_num_seqs,
+            kv_free=self.kv_free())
+
+    def _drain_admission(self) -> None:
+        """Admit waiting requests per the AdmissionPolicy.  Each pass offers
+        every waiting request at most once (an ungated enqueue may re-park
+        the head when KV is full — see ``_enqueue_prefill``), and the
+        prefill dispatch window bounds device-queue depth."""
+        w = self.sim_cfg.prefill_window
+        n = len(self.prefill_waiting)
+        while n > 0 and (w <= 0 or len(self.prefilling) < w) \
+                and self.admission.admit(self._admission_view()):
             req = self.prefill_waiting.pop(0)
             self._enqueue_prefill(req)
+            n -= 1
 
     def _enqueue_prefill(self, req: Request) -> None:
         if self.kv_free() < req.prompt_len:
@@ -233,7 +281,7 @@ class SimInstance:
         self.prefilling[req.req_id] = req
         fut = self.client.launch(
             self.stream_p, None, phase=Phase.PREFILL,
-            meta={"req": req, "tokens": req.prompt_len,
+            meta={"req": req, "tokens": req.prompt_len, "_sim_inst": self,
                   **self.cost.prefill_meta(self.spec, req.prompt_len),
                   "est_duration": self.cost.prefill_time(
                       self.spec, req.prompt_len)})
@@ -241,25 +289,44 @@ class SimInstance:
         self.kick()
 
     def _prefill_done(self, req: Request, fut) -> None:
-        self.prefilling.pop(req.req_id, None)
-        try:
-            fut.result()
-        except Exception:
-            return  # failure path handled by cluster re-router
-        req.record_token(self.now)   # first token emitted at prefill end
-        if self.on_prefill_done is not None:
-            self.on_prefill_done(self, req)
-        else:
-            self.admit_decode(req)
+        with self._lock:
+            self.prefilling.pop(req.req_id, None)
+            try:
+                fut.result()
+            except Exception:
+                return  # failure path handled by cluster re-router
+            self.steps["prefill"] += 1
+            req.record_token(self.now)   # first token emitted at prefill end
+            self._drain_admission()      # a window slot freed up
+            if self.on_prefill_done is not None:
+                self.on_prefill_done(self, req)
+            else:
+                self.admit_decode(req)
 
     # ------------------------------------------------------------- decode
     def admit_decode(self, req: Request, charge_kv: bool = False) -> None:
-        if charge_kv:
-            self.kv_used += req.prompt_len + req.generated
-        req.state = RequestState.DECODE_QUEUED
-        self.decode_pending.append(req)
-        self._fill_slots()
-        self._ensure_decode_op()
+        with self._lock:
+            if charge_kv:
+                self.kv_used += req.prompt_len + req.generated
+            req.instance = self.name
+            req.state = RequestState.DECODE_QUEUED
+            self.decode_pending.append(req)
+            self._fill_slots()
+            self._ensure_decode_op()
+
+    def drain_decode(self) -> List[Request]:
+        """Role switch (decode -> prefill): stop decoding and hand every
+        queued/active decode request back to the cluster for migration.
+
+        The requests' KV pages STAY charged here (``kv_used`` includes
+        prompt + generated tokens for each) — the cluster moves each one
+        over the copy-engine path and only then frees the source copy, the
+        same conservation rule as prefill-side transfers.  An in-flight
+        decode op settles harmlessly against the emptied active list."""
+        with self._lock:
+            drained = self.decode_pending + self.active
+            self.decode_pending, self.active = [], []
+            return drained
 
     def _fill_slots(self) -> None:
         while (self.decode_pending
@@ -272,9 +339,13 @@ class SimInstance:
         if self._decode_op_inflight or not (self.active or self.decode_pending):
             return
         self._decode_op_inflight = True
+        b = max(1, len(self.active))
+        ctx = (sum(r.total_tokens for r in self.active) // b) if self.active \
+            else 1024
         fut = self.client.launch(
             self.stream_d, None, phase=Phase.DECODE,
-            meta={"est_duration": self._decode_estimate()})
+            meta={"est_duration": self._decode_estimate(), "_sim_inst": self,
+                  **self.cost.decode_meta(self.spec, b, ctx)})
         fut.add_done_callback(self._decode_done)
         self.kick()
 
@@ -284,39 +355,60 @@ class SimInstance:
             else 1024
         return self.cost.decode_time(self.spec, b, ctx)
 
+    def op_duration(self, op: OpDescriptor) -> float:
+        """Modeled duration of an op at EXECUTION time — one implementation
+        for both drives (stepped ``_dispatch`` and the real-time backend):
+        decode late-binds its batch (continuous batching), ``slow_factor``
+        applies, and the straggler EWMA updates."""
+        with self._lock:
+            if op.phase == Phase.DECODE:
+                dur = self._decode_estimate()
+                b = max(1, len(self.active))
+                ctx = (sum(r.total_tokens for r in self.active) // b) \
+                    if self.active else 1024
+                op.meta.update(self.cost.decode_meta(self.spec, b, ctx))
+            elif op.phase == Phase.PREFILL:
+                dur = float(op.meta.get("est_duration", 1e-3))
+            else:
+                # bookkeeping ops (event markers, cost-only copies without
+                # a link): modeled duration, no slowdown — a straggling
+                # compute pipeline doesn't slow the DMA engine
+                return float(op.meta.get("est_duration", 0.0))
+            dur *= self.slow_factor
+            self.ewma_step = 0.8 * self.ewma_step + 0.2 * dur \
+                if self.ewma_step else dur
+            return dur
+
     def _decode_done(self, fut) -> None:
-        self._decode_op_inflight = False
-        try:
-            fut.result()
-        except Exception:
-            return
-        finished = []
-        for r in self.active:
-            r.record_token(self.now)
-            self.kv_used += 1  # one token appended
-            if r.done_decoding:
-                finished.append(r)
-        for r in finished:
-            self.active.remove(r)
-            self.kv_used -= r.total_tokens
-            r.state = RequestState.DONE
-            r.finish_time = self.now
-            if self.on_request_done is not None:
-                self.on_request_done(self, r)
-        if finished and self.sim_cfg.admission_gated:
-            self._try_admit_gated()
-        if finished:
-            self._retry_parked()
-        self._fill_slots()
-        self._ensure_decode_op()
+        with self._lock:
+            self._decode_op_inflight = False
+            try:
+                fut.result()
+            except Exception:
+                return
+            self.steps["decode"] += 1
+            finished = []
+            for r in self.active:
+                r.record_token(self.now)
+                self.kv_used += 1  # one token appended
+                if r.done_decoding:
+                    finished.append(r)
+            for r in finished:
+                self.active.remove(r)
+                self.kv_used -= r.total_tokens
+                r.state = RequestState.DONE
+                r.finish_time = self.now
+                if self.on_request_done is not None:
+                    self.on_request_done(self, r)
+            if finished:
+                self._retry_parked()
+            self._fill_slots()
+            self._ensure_decode_op()
 
     def _retry_parked(self) -> None:
-        parked = [r for r in self.prefill_waiting
-                  if r.state == RequestState.QUEUED]
-        if not self.sim_cfg.admission_gated:
-            self.prefill_waiting = []
-            for r in parked:
-                self._enqueue_prefill(r)
+        """Freed slots/KV may admit waiting or parked requests."""
+        with self._lock:
+            self._drain_admission()
 
     # ----------------------------------------------------- device driving
     def kick(self) -> None:
@@ -325,8 +417,8 @@ class SimInstance:
         The daemon hands out at most one op per free engine slot, so a
         copy-engine transfer and a compute launch run concurrently on the
         virtual clock (the threaded daemon does the same on real threads)."""
-        if self.failed:
-            return
+        if self.failed or self.drive != "stepped":
+            return  # threaded drive: the daemon's own dispatcher runs ops
         while True:
             op = self.daemon.select_next(self.now)
             if op is None:
@@ -342,29 +434,7 @@ class SimInstance:
                                    float(op.meta.get("nbytes", 0)),
                                    lambda x, o=op: self._complete(o))
             return
-        if op.phase == Phase.DECODE:
-            # Late-binding batch formation: decode duration reflects the
-            # batch at dispatch time (continuous batching).
-            dur = self._decode_estimate()
-            b = max(1, len(self.active))
-            ctx = (sum(r.total_tokens for r in self.active) // b) \
-                if self.active else 1024
-            op.meta.update(self.cost.decode_meta(self.spec, b, ctx))
-            self.steps["decode"] += 1
-        elif op.phase == Phase.PREFILL:
-            dur = float(op.meta.get("est_duration", 1e-3))
-            self.steps["prefill"] += 1
-        else:
-            # bookkeeping ops (event markers, cost-only copies without a
-            # link): modeled duration, no step accounting, no slowdown —
-            # a straggling compute pipeline doesn't slow the DMA engine
-            self.loop.after(float(op.meta.get("est_duration", 0.0)),
-                            lambda o=op: self._complete(o))
-            return
-        dur *= self.slow_factor
-        self.ewma_step = 0.8 * self.ewma_step + 0.2 * dur if self.ewma_step \
-            else dur
-        self.loop.after(dur, lambda o=op: self._complete(o))
+        self.loop.after(self.op_duration(op), lambda o=op: self._complete(o))
 
     def _complete(self, op: OpDescriptor) -> None:
         if self.failed:
@@ -385,16 +455,17 @@ class SimInstance:
     # ------------------------------------------------------------ faults
     def fail(self) -> List[Request]:
         """Device failure: lose all state; return requests to re-route."""
-        self.failed = True
-        lost: List[Request] = []
-        lost.extend(self.prefill_waiting)
-        lost.extend(self.prefilling.values())   # ops queued or in flight
-        lost.extend(self.decode_pending)
-        lost.extend(self.active)
-        self.prefill_waiting, self.decode_pending, self.active = [], [], []
-        self.prefilling = {}
-        self.kv_used = 0
-        self.kv_in_transit = 0
+        with self._lock:
+            self.failed = True
+            lost: List[Request] = []
+            lost.extend(self.prefill_waiting)
+            lost.extend(self.prefilling.values())  # ops queued or in flight
+            lost.extend(self.decode_pending)
+            lost.extend(self.active)
+            self.prefill_waiting, self.decode_pending, self.active = [], [], []
+            self.prefilling = {}
+            self.kv_used = 0
+            self.kv_in_transit = 0
         self.daemon.fail(requeue_sink=lambda op: None)
         for r in lost:
             r.reset_for_retry()
@@ -408,7 +479,11 @@ class SimInstance:
 
 @dataclasses.dataclass
 class DeploymentSpec:
-    """How instances are laid out (paper §4.3: 6P2D vs 3x128 co-location)."""
+    """How instances are laid out (paper §4.3: 6P2D vs 3x128 co-location).
+
+    The ``*_policy`` fields name control-plane policies from the
+    ``repro.sched`` registry; empty strings pick the mode's historical
+    default, so v2 specs behave identically."""
     mode: str                        # disagg | static_colocate | dynamic_pd | static_slice
     prefill_instances: int = 0       # disagg only
     prefill_chips: int = 0
@@ -418,6 +493,11 @@ class DeploymentSpec:
     colocated_chips: int = 0
     decode_share: float = 0.5        # static_slice fixed ratio
     dynamic_cfg: Optional[DynamicPDConfig] = None
+    # control plane (v3): registry names + knobs
+    dispatch_policy: str = ""        # per-daemon phase picker
+    dispatch_knobs: Dict = dataclasses.field(default_factory=dict)
+    cluster_policy: str = ""         # routing / migration / role switching
+    cluster_knobs: Dict = dataclasses.field(default_factory=dict)
 
     @property
     def total_chips(self) -> int:
@@ -439,11 +519,24 @@ def deployment_dynamic(total: int = 384, instances: int = 3) -> DeploymentSpec:
                           colocated_chips=total // instances)
 
 
+def deployment_role_switch(total: int = 384, **knobs) -> DeploymentSpec:
+    """6P2D geometry under the dynamic role-switching control plane: same
+    chips as the static baseline, but decode instances may temporarily
+    flip to prefill under TTFT pressure (``knobs`` -> RoleSwitchConfig)."""
+    return DeploymentSpec(mode="disagg", prefill_instances=6,
+                          prefill_chips=16, decode_instances=2,
+                          decode_chips=144, cluster_policy="role_switch",
+                          cluster_knobs=dict(knobs))
+
+
 class Cluster:
     def __init__(self, cfg: ModelConfig, deploy: DeploymentSpec,
                  sim_cfg: Optional[SimConfig] = None,
-                 cost: Optional[CostModel] = None):
-        self.loop = EventLoop()
+                 cost: Optional[CostModel] = None,
+                 drive: str = "stepped", time_scale: float = 0.05):
+        if drive not in ("stepped", "threaded"):
+            raise ValueError(f"unknown drive {drive!r}")
+        self.drive = drive
         self.cfg = cfg
         self.deploy = deploy
         self.cost = cost or CostModel(cfg)
@@ -452,10 +545,36 @@ class Cluster:
         self.prefill_pool: List[SimInstance] = []
         self.decode_pool: List[SimInstance] = []
         self.instances: List[SimInstance] = []
+        # ONE serving-state lock shared by the cluster and every instance:
+        # the threaded drive mutates state from daemon engine threads
+        # (uncontended in the stepped drive)
+        self._lock = threading.RLock()
         # shared interconnect: one ingress link per instance, occupancy-aware
         self.link_model = LinkModel(bw=self.sim_cfg.transfer_bw,
                                     latency_s=self.sim_cfg.transfer_latency_s)
-        self.link_driver = LinkDriver(self.loop, self.link_model)
+        if drive == "stepped":
+            self.loop = EventLoop()
+            self.link_driver = LinkDriver(self.loop, self.link_model)
+        else:
+            from repro.serving.realtime import (RealTimeLoop,
+                                                ThreadedLinkTimer)
+            self.loop = RealTimeLoop(time_scale)
+            self.link_driver = None
+            self._link_timer = ThreadedLinkTimer(self.link_model,
+                                                 self.loop.clock, time_scale)
+        # control plane (v3): the cluster policy owns routing, migration,
+        # and role switching; built by registry name from the deployment
+        for name, want in ((deploy.cluster_policy, "cluster"),
+                           (deploy.dispatch_policy, "dispatch")):
+            if name and policy_kind(name) != want:
+                raise ValueError(
+                    f"policy {name!r} is a {policy_kind(name)} policy; "
+                    f"expected a {want} policy here")
+        self.policy: ClusterPolicy = make_policy(
+            deploy.cluster_policy or "least_loaded", **deploy.cluster_knobs)
+        self.policy.bind(self)
+        self.role_flips = 0
+        self._tick_armed = False
         # transfer-id -> {"req", "src", "dst", "tokens", "aborted"} while a
         # KV transfer is in flight (fault handling + conservation checks).
         # Keyed by a UNIQUE id, not req_id: a re-routed request may start a
@@ -465,14 +584,17 @@ class Cluster:
         self._build()
 
     # ----------------------------------------------------------- topology
-    def _policy(self):
-        m = self.deploy.mode
+    def _dispatch_policy(self):
+        d = self.deploy
+        if d.dispatch_policy:
+            return make_policy(d.dispatch_policy, **d.dispatch_knobs)
+        m = d.mode
         if m == "static_colocate":
             return FIFOPolicy()
         if m == "static_slice":
-            return StaticTimeSlicePolicy(self.deploy.decode_share)
+            return make_policy("static_slice", decode_share=d.decode_share)
         if m == "dynamic_pd":
-            return DynamicPDPolicy(self.deploy.dynamic_cfg)
+            return DynamicPDPolicy(d.dynamic_cfg)
         return FIFOPolicy()   # disagg instances are single-phase anyway
 
     def _build(self):
@@ -483,29 +605,49 @@ class Cluster:
         if d.mode == "disagg":
             for i in range(d.prefill_instances):
                 plan.append((f"P{i}", InstanceSpec(f"P{i}", d.prefill_chips),
-                             FIFOPolicy(), self.sim_cfg, "prefill"))
+                             self._dispatch_policy(), self.sim_cfg,
+                             "prefill"))
             for i in range(d.decode_instances):
                 plan.append((f"D{i}", InstanceSpec(f"D{i}", d.decode_chips),
-                             FIFOPolicy(), self.sim_cfg, "decode"))
+                             self._dispatch_policy(), self.sim_cfg,
+                             "decode"))
         else:
             gated = d.mode == "static_colocate"
             sim_cfg = dataclasses.replace(self.sim_cfg, admission_gated=gated)
             for i in range(d.colocated_instances):
                 plan.append((f"C{i}", InstanceSpec(f"C{i}", d.colocated_chips),
-                             self._policy(), sim_cfg, "both"))
+                             self._dispatch_policy(), sim_cfg, "both"))
         policies = [p for _, _, p, _, _ in plan]
-        self.session = connect(
-            mode="sim", devices=len(plan),
-            backend=SimBackend(self.loop.clock),
-            policy=lambda i: policies[i])
+        if self.drive == "stepped":
+            backend = SimBackend(self.loop.clock)
+            self.session = connect(
+                mode="sim", devices=len(plan), backend=backend,
+                policy=lambda i: policies[i])
+        else:
+            # threaded: real daemon dispatch threads paced by the scaled
+            # wall clock (repro.serving.realtime)
+            from repro.serving.realtime import RealTimeSimBackend
+            backend = RealTimeSimBackend(self.loop.clock, self.loop.scale,
+                                         link_timer=self._link_timer)
+            self.session = connect(
+                mode="flex", devices=len(plan), backend=backend,
+                policy=lambda i: policies[i])
         for i, (name, spec, _, sim_cfg, role) in enumerate(plan):
             inst = SimInstance(name, spec, self.cost, self.loop,
                                self.session.device(i), self.session.daemon(i),
-                               sim_cfg, role=role)
+                               sim_cfg, role=role, lock=self._lock,
+                               drive=self.drive)
+            # dispatch policies see link-queueing pressure (PolicyContext)
+            self.session.daemon(i).link_stats_fn = self.link_model.stats
             inst.link_driver = self.link_driver
-            inst.on_cross_device = self._kick_all
-            if role == "prefill":
+            if self.drive == "stepped":
+                inst.on_cross_device = self._kick_all
+            if d.mode == "disagg":
+                # ANY disagg instance may hold the prefill role after a
+                # role switch — every prefill completion routes through the
+                # cluster's KV-transfer path
                 inst.on_prefill_done = self._transfer_to_decode
+            if role == "prefill":
                 self.prefill_pool.append(inst)
             elif role == "decode":
                 self.decode_pool.append(inst)
@@ -518,28 +660,33 @@ class Cluster:
 
     # ------------------------------------------------------------ routing
     def _healthy(self, pool: List[SimInstance]) -> List[SimInstance]:
-        ok = [i for i in pool if not i.failed]
-        if len(ok) <= 1:
-            return ok
-        # Straggler avoidance: exclude instances whose EWMA step time is
-        # >2.5x the pool median (they still drain their queues).
-        steps = sorted(i.ewma_step for i in ok if i.ewma_step > 0)
-        if steps:
-            med = steps[len(steps) // 2]
-            fast = [i for i in ok
-                    if i.ewma_step <= 2.5 * med or i.ewma_step == 0]
-            if fast:
-                return fast
-        return ok
+        return self.policy.healthy(pool)
 
     def submit(self, req: Request) -> None:
-        self.requests.append(req)
-        pool = self._healthy(self.prefill_pool)
-        if not pool:
-            req.state = RequestState.FAILED
+        with self._lock:
+            self.requests.append(req)
+            inst = self.policy.route_prefill(req, self.prefill_pool)
+            if inst is None:
+                req.state = RequestState.FAILED
+                return
+            inst.submit(req)
+            self._arm_tick()
+
+    # ------------------------------------------------- periodic policy tick
+    def _arm_tick(self) -> None:
+        iv = self.policy.tick_interval()
+        if iv <= 0 or self._tick_armed:
             return
-        inst = min(pool, key=lambda i: i.load())
-        inst.submit(req)
+        self._tick_armed = True
+        self.loop.after(iv, self._tick)
+
+    def _tick(self) -> None:
+        with self._lock:
+            self._tick_armed = False
+            self.policy.on_tick(self.loop.clock.t)
+            if self._outstanding():
+                self._arm_tick()   # re-arm only while work remains, so the
+                #                    stepped event loop can still drain
 
     def _kick_all(self) -> None:
         """A cross-device edge resolved (shared record / peer copy done):
@@ -547,105 +694,247 @@ class Cluster:
         for inst in self.instances:
             inst.kick()
 
-    def _transfer_to_decode(self, src: SimInstance, req: Request) -> None:
-        """Disaggregation: move KV from a prefill to a decode instance
-        through the source's copy-engine stream.  The transfer is a real
-        daemon op timed by the shared LinkModel, so concurrent transfers
-        into one decode instance contend for its ingress bandwidth — the
-        cost static disaggregation pays and dynamic co-location avoids.
+    def _transfer_to_decode(self, src: SimInstance, req: Request,
+                            tokens: Optional[int] = None) -> None:
+        """Move a request's KV to a decode instance through the source's
+        copy-engine stream.  Two callers: prefill completion (``tokens`` =
+        the prompt, as in v2) and decode-drain **migration** during a role
+        switch (``tokens`` = prompt + generated so far).  The transfer is a
+        real daemon op timed by the shared LinkModel, so concurrent
+        transfers into one decode instance contend for its ingress
+        bandwidth — the cost static disaggregation pays and dynamic
+        co-location avoids.
 
-        KV conservation: the source keeps the prompt's pages charged (in
+        KV conservation: the source keeps the pages charged (in
         ``kv_in_transit``) until the destination holds the copy; only then
         does the source free them and the destination charge its own."""
-        req.state = RequestState.TRANSFER
-        pool = self._healthy(self.decode_pool)
-        if not pool:
-            src.kv_used -= req.prompt_len
-            req.state = RequestState.FAILED
-            return
-        dst = min(pool, key=lambda i: i.load())
-        tokens = req.prompt_len
-        src.kv_in_transit += tokens
-        xid = next(self._transfer_ids)
-        self.inflight_transfers[xid] = {
-            "req": req, "src": src, "dst": dst, "tokens": tokens,
-            "aborted": False}
-        fut = src.client.memcpy_peer(
-            dst.daemon, None, None,
-            nbytes=int(tokens * self.cost.kv_bytes_per_token()),
-            vstream=src.stream_c, link=("ingress", dst.name),
-            meta={"req_id": req.req_id})
-        fut.add_done_callback(lambda f, x=xid: self._transfer_done(x, f))
-        src.kick()
+        with self._lock:
+            if tokens is None:
+                tokens = req.prompt_len
+            if src.role == "decode" and not src.failed:
+                # the source flipped back to decode while this prefill was
+                # in flight: keep the KV where it is — no transfer
+                self._admit_local(src, req)
+                return
+            req.state = RequestState.TRANSFER
+            dst = self.policy.route_decode(req, src, self.decode_pool)
+            if dst is None:
+                src.kv_used -= tokens
+                req.state = RequestState.FAILED
+                return
+            if dst is src:
+                self._admit_local(src, req)
+                return
+            src.kv_in_transit += tokens
+            xid = next(self._transfer_ids)
+            self.inflight_transfers[xid] = {
+                "req": req, "src": src, "dst": dst, "tokens": tokens,
+                "aborted": False}
+            fut = src.client.memcpy_peer(
+                dst.daemon, None, None,
+                nbytes=int(tokens * self.cost.kv_bytes_per_token()),
+                vstream=src.stream_c, link=("ingress", dst.name),
+                meta={"req_id": req.req_id})
+            fut.add_done_callback(lambda f, x=xid: self._transfer_done(x, f))
+            src.kick()
+
+    def _admit_local(self, inst: SimInstance, req: Request) -> None:
+        """Admit for decode on the instance that already holds the KV
+        (prefill finished on an instance that now serves decode).  The
+        prompt pages are charged since enqueue; only the generated tokens
+        (the first token emitted at prefill end) still need accounting."""
+        inst.kv_used += req.generated
+        inst.admit_decode(req, charge_kv=False)
 
     def _transfer_done(self, xid: int, fut) -> None:
-        entry = self.inflight_transfers.pop(xid, None)
-        if entry is None:
-            return                       # source failed: future never fired
-        req, src, dst = entry["req"], entry["src"], entry["dst"]
-        tokens = entry["tokens"]
-        if not src.failed:
-            # free the source copy only now that the destination has one
-            src.kv_in_transit -= tokens
-            src.kv_used -= tokens
-            assert src.kv_used >= 0 and src.kv_in_transit >= 0, \
-                (src.name, src.kv_used, src.kv_in_transit)
-            src._retry_parked()          # freed pages may admit parked work
-        failed_transfer = False
-        try:
-            fut.result()
-        except Exception:
-            failed_transfer = True       # transfer errored on the device
-        if entry["aborted"]:
-            return                       # fault handling already re-routed it
-        if failed_transfer or dst.failed:
-            # destination lost: nothing arrived; restart from prefill
-            self._reroute(req)
-            return
-        dst.admit_decode(req, charge_kv=True)
+        with self._lock:
+            entry = self.inflight_transfers.pop(xid, None)
+            if entry is None:
+                return                   # source failed: future never fired
+            req, src, dst = entry["req"], entry["src"], entry["dst"]
+            tokens = entry["tokens"]
+            if not src.failed:
+                # free the source copy only now that the destination has one
+                src.kv_in_transit -= tokens
+                src.kv_used -= tokens
+                assert src.kv_used >= 0 and src.kv_in_transit >= 0, \
+                    (src.name, src.kv_used, src.kv_in_transit)
+                src._retry_parked()      # freed pages may admit parked work
+            failed_transfer = False
+            try:
+                fut.result()
+            except Exception:
+                failed_transfer = True   # transfer errored on the device
+            if entry["aborted"]:
+                return                   # fault handling already re-routed it
+            if failed_transfer or dst.failed:
+                # destination lost: nothing arrived; restart from prefill
+                self._reroute(req)
+                return
+            if dst.role == "decode" or dst.role == "both":
+                dst.admit_decode(req, charge_kv=True)
+            else:
+                # dst flipped to prefill while the KV was in flight: the
+                # copy DID land (pages now charged here) — migrate onward
+                dst.kv_used += req.prompt_len + req.generated
+                self._transfer_to_decode(dst, req, tokens=req.total_tokens)
 
     def _reroute(self, req: Request) -> None:
-        req.reset_for_retry()
-        pool = self._healthy(self.prefill_pool)
-        if pool:
-            min(pool, key=lambda i: i.load()).submit(req)
-        else:
-            req.state = RequestState.FAILED
+        with self._lock:
+            req.reset_for_retry()
+            inst = self.policy.route_prefill(req, self.prefill_pool)
+            if inst is not None:
+                inst.submit(req)
+            else:
+                req.state = RequestState.FAILED
+
+    # ------------------------------------------------------ role switching
+    def switch_role(self, inst, new_role: str) -> bool:
+        """Dynamically flip a disaggregated instance between the prefill
+        and decode roles (ClusterPolicy's rebalancing verb).
+
+        decode -> prefill: the instance stops decoding; every queued/active
+        decode request drains to the remaining decode pool over the
+        copy-engine KV path (pages stay charged at the source until each
+        copy lands — ``check_kv_conservation`` holds THROUGH the flip).
+
+        prefill -> decode: not-yet-admitted prefills re-route to the
+        prefill pool; in-flight prefills finish and their KV stays local
+        (no transfer) since the instance now serves decode itself."""
+        with self._lock:
+            if isinstance(inst, str):
+                inst = next(i for i in self.instances if i.name == inst)
+            if (inst.failed or inst.role == new_role or inst.role == "both"
+                    or new_role not in ("prefill", "decode")):
+                return False
+            if new_role == "prefill":
+                if inst in self.decode_pool:
+                    self.decode_pool.remove(inst)
+                inst.role = "prefill"
+                if inst not in self.prefill_pool:
+                    self.prefill_pool.append(inst)
+                for req in inst.drain_decode():
+                    self._transfer_to_decode(inst, req,
+                                             tokens=req.total_tokens)
+                # spread router-visible prefill backlog onto the borrowed
+                # capacity (work already on a daemon queue cannot move)
+                self._rebalance_prefill_queues()
+            else:
+                if inst in self.prefill_pool:
+                    self.prefill_pool.remove(inst)
+                inst.role = "decode"
+                if inst not in self.decode_pool:
+                    self.decode_pool.append(inst)
+                # hand unstarted prefills back to the router; in-flight ones
+                # finish here and _transfer_to_decode admits them locally
+                waiting, inst.prefill_waiting = inst.prefill_waiting, []
+                for r in waiting:
+                    target = self.policy.route_prefill(r, self.prefill_pool)
+                    if target is not None:
+                        target.submit(r)
+                    else:
+                        r.state = RequestState.FAILED
+            self.role_flips += 1
+            return True
+
+    def _rebalance_prefill_queues(self) -> None:
+        """Re-route every not-yet-admitted prefill through the cluster
+        policy (arrival order preserved).  Cheap: waiting requests hold no
+        KV and no daemon state, so moving them is pure routing."""
+        with self._lock:
+            waiting: List[Request] = []
+            for i in self.prefill_pool:
+                if i.failed or not i.prefill_waiting:
+                    continue
+                moved, i.prefill_waiting = i.prefill_waiting, []
+                waiting.extend(moved)
+            waiting.sort(key=lambda r: r.arrival_time)
+            for r in waiting:
+                target = self.policy.route_prefill(r, self.prefill_pool)
+                if target is not None:
+                    target.submit(r)
+                else:
+                    r.state = RequestState.FAILED
 
     # -------------------------------------------------------------- runs
+    def _outstanding(self) -> bool:
+        with self._lock:
+            return bool(self.inflight_transfers) or any(
+                r.state not in (RequestState.DONE, RequestState.FAILED)
+                for r in self.requests)
+
     def run(self, workload: List[Request], until: float = math.inf) -> Dict:
         for req in workload:
             self.loop.at(req.arrival_time, lambda r=req: self.submit(r))
-        self.loop.run(until=until)
+        if self.drive == "threaded":
+            self.loop.run(until=until, idle=lambda: not self._outstanding())
+            self.close()   # stop daemon dispatch threads (leak-free)
+        else:
+            self.loop.run(until=until)
         from repro.serving.request import summarize
         out = summarize(self.requests)
         out["chips"] = self.deploy.total_chips
         out["mode"] = self.deploy.mode
+        out["drive"] = self.drive
         retries = sum(r.retries for r in self.requests)
         if retries:
             out["retries"] = retries
         if self.link_model.completed:
             out.update(self.link_model.stats())
+        out["policy"] = self.policy_telemetry()
         return out
+
+    def close(self) -> None:
+        """Stop daemon threads (threaded drive); idempotent."""
+        self.session.close()
+
+    def policy_telemetry(self) -> Dict:
+        """Control-plane observability: per-daemon dispatch debug state
+        (realized decode share, targets), cluster-policy state (role flips,
+        pressure), current roles, and queue depths.  Folded into ``run``
+        results so BENCH_*.json artifacts record policy *behavior*."""
+        dispatch = {}
+        for inst in self.instances:
+            st = inst.daemon.policy.debug_state()
+            if st:
+                dispatch[inst.name] = {k: round(float(v), 6)
+                                       for k, v in st.items()}
+        return {
+            "cluster_policy": type(self.policy).__name__,
+            "cluster": self.policy.debug_state(),
+            "role_flips": self.role_flips,
+            "roles": {i.name: i.role for i in self.instances},
+            "dispatch": dispatch,
+            "queue_depths": {
+                i.name: {"prefill_ops": i.daemon.backlog(Phase.PREFILL),
+                         "decode_ops": i.daemon.backlog(Phase.DECODE),
+                         "waiting": len(i.prefill_waiting),
+                         "decode_pending": len(i.decode_pending),
+                         "active": len(i.active)}
+                for i in self.instances},
+        }
 
     def check_kv_conservation(self) -> None:
         """Invariant: KV pages are never double-freed or dropped while a
-        transfer is in flight (satellite fix for the old path, which freed
-        the source pages at transfer START)."""
-        by_src: Dict[str, int] = {}
-        for entry in self.inflight_transfers.values():
-            # aborted entries (dst died) still hold source pages until the
-            # source-side copy op completes and settles them
-            by_src[entry["src"].name] = \
-                by_src.get(entry["src"].name, 0) + entry["tokens"]
-        for inst in self.instances:
-            assert inst.kv_used >= 0, (inst.name, inst.kv_used)
-            assert inst.kv_in_transit >= 0, (inst.name, inst.kv_in_transit)
-            assert inst.kv_used >= inst.kv_in_transit or inst.failed, \
-                (inst.name, inst.kv_used, inst.kv_in_transit)
-            if not inst.failed:
-                assert inst.kv_in_transit == by_src.get(inst.name, 0), \
-                    (inst.name, inst.kv_in_transit, by_src.get(inst.name, 0))
+        transfer is in flight — including migrations during a role switch
+        (the old path freed source pages at transfer START)."""
+        with self._lock:
+            by_src: Dict[str, int] = {}
+            for entry in self.inflight_transfers.values():
+                # aborted entries (dst died) still hold source pages until
+                # the source-side copy op completes and settles them
+                by_src[entry["src"].name] = \
+                    by_src.get(entry["src"].name, 0) + entry["tokens"]
+            for inst in self.instances:
+                assert inst.kv_used >= 0, (inst.name, inst.kv_used)
+                assert inst.kv_in_transit >= 0, (inst.name,
+                                                 inst.kv_in_transit)
+                assert inst.kv_used >= inst.kv_in_transit or inst.failed, \
+                    (inst.name, inst.kv_used, inst.kv_in_transit)
+                if not inst.failed:
+                    assert inst.kv_in_transit == by_src.get(inst.name, 0), \
+                        (inst.name, inst.kv_in_transit,
+                         by_src.get(inst.name, 0))
 
     # ------------------------------------------------------------- faults
     def fail_instance(self, name: str) -> int:
@@ -656,6 +945,10 @@ class Cluster:
         resolve — drop the registry entry); destination-side transfers keep
         their entry so the still-running source op settles its own KV
         accounting, but the request is re-routed immediately."""
+        with self._lock:
+            return self._fail_instance_locked(name)
+
+    def _fail_instance_locked(self, name: str) -> int:
         inst = next(i for i in self.instances if i.name == name)
         lost = inst.fail()
         n_lost = len(lost)
@@ -674,9 +967,9 @@ class Cluster:
                 self._reroute(entry["req"])
                 n_lost += 1
         for r in lost:
-            pool = self._healthy(self.prefill_pool)
-            if pool:
-                min(pool, key=lambda i: i.load()).submit(r)
+            target = self.policy.route_prefill(r, self.prefill_pool)
+            if target is not None:
+                target.submit(r)
             else:
                 r.state = RequestState.FAILED
         return n_lost

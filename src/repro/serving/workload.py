@@ -32,6 +32,35 @@ def make_workload(n: int, input_len: int, output_len: int, *,
             for i, o, t in zip(ins, outs, arrivals)]
 
 
+def bursty_phase_shift(n_bursts: int = 2, burst_gap_s: float = 20.0,
+                       n_prefill: int = 240, prefill_rate: float = 120.0,
+                       prefill_io=(2048, 64),
+                       n_decode: int = 80, decode_rate: float = 8.0,
+                       decode_io=(128, 1024), seed: int = 0
+                       ) -> List[Request]:
+    """Bursty, phase-shifted workload: each cycle opens with a dense
+    prefill-heavy burst (long prompts, short outputs, near-simultaneous
+    arrivals) and then shifts to a decode-heavy tail (short prompts, long
+    outputs).  Static deployments provisioned for the average mix are
+    mis-provisioned in BOTH halves of every cycle — the regime where
+    dynamic role-switching pays (paper's motivation for adapting the P/D
+    split at runtime)."""
+    reqs: List[Request] = []
+    for b in range(n_bursts):
+        t0 = b * 2 * burst_gap_s
+        burst = make_workload(n_prefill, *prefill_io, rate=prefill_rate,
+                              seed=seed + 2 * b, length_cv=0.2)
+        for r in burst:
+            r.arrival_time += t0
+        tail = make_workload(n_decode, *decode_io, rate=decode_rate,
+                             seed=seed + 2 * b + 1, length_cv=0.2)
+        for r in tail:
+            r.arrival_time += t0 + burst_gap_s
+        reqs.extend(burst)
+        reqs.extend(tail)
+    return sorted(reqs, key=lambda r: r.arrival_time)
+
+
 # --- the paper's workloads -------------------------------------------------
 
 def deepseek_1k1k(n: int = 2000, rate: float = 700.0, seed: int = 0):

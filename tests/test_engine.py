@@ -64,10 +64,14 @@ def test_engine_matches_reference(setup, mode):
 
 
 @pytest.mark.slow
+@pytest.mark.timing
 def test_dynamic_pd_improves_ttft_under_backlog(setup):
     """Table 4's qualitative claim on the REAL engine: with a deep backlog,
     dynamic PD co-location yields far lower TTFT than static co-location at
-    similar throughput."""
+    similar throughput.  Wall-clock thresholds scale with FLEX_TIMING_SLACK
+    (the ``timing`` marker: false-fails under CPU contention otherwise)."""
+    from conftest import timing_slack
+    slack = timing_slack()
     cfg, model, params = setup
     results = {}
     # short prompts + long outputs: decode occupancy (not prefill cost) is
@@ -82,8 +86,9 @@ def test_dynamic_pd_improves_ttft_under_backlog(setup):
             eng.shutdown()
     static_ttft = results["static_colocate"][0]["ttft_mean_s"]
     dyn_ttft = results["dynamic_pd"][0]["ttft_mean_s"]
-    assert dyn_ttft < static_ttft * 0.8, (dyn_ttft, static_ttft)
+    assert dyn_ttft < static_ttft * min(0.95, 0.8 * slack), \
+        (dyn_ttft, static_ttft, slack)
     # throughput comparable (within 40% on noisy CPU timing)
     st_tp = results["static_colocate"][0]["output_tokens_per_s"]
     dy_tp = results["dynamic_pd"][0]["output_tokens_per_s"]
-    assert dy_tp > 0.6 * st_tp
+    assert dy_tp > 0.6 / slack * st_tp, (dy_tp, st_tp, slack)

@@ -1,0 +1,366 @@
+"""Control-plane API v3 (repro.sched): registry resolution, PolicyContext,
+admission parity between the real engine and the simulator, and dynamic
+role-switching (drain correctness + the headline win) in both drive modes."""
+import copy
+
+import pytest
+from conftest import drive_modes, timing_slack
+
+from repro.core import Phase, connect
+from repro.sched import (AdmissionView, DispatchPolicy, DynamicPDPolicy,
+                         FIFOPolicy, GatedAdmission, LeastLoadedPolicy,
+                         PolicyContext, RoleSwitchPolicy, SchedulerPolicy,
+                         UngatedAdmission, list_policies, make_policy,
+                         policy_kind)
+from repro.serving import (Cluster, SimConfig, bursty_phase_shift,
+                           deployment_6p2d, deployment_role_switch)
+from repro.serving.request import RequestState
+
+
+# ------------------------------------------------------------------ registry
+def test_registry_resolves_every_layer():
+    assert policy_kind("dynamic_pd") == "dispatch"
+    assert policy_kind("gated") == "admission"
+    assert policy_kind("role_switch") == "cluster"
+    assert isinstance(make_policy("fifo"), FIFOPolicy)
+    assert isinstance(make_policy("least_loaded"), LeastLoadedPolicy)
+    assert isinstance(make_policy("ungated"), UngatedAdmission)
+    pol = make_policy("dynamic_pd", ttft_guard_s=0.07, decode_share=0.3)
+    assert isinstance(pol, DynamicPDPolicy)
+    assert pol.cfg.ttft_guard_s == 0.07 and pol.decode_share == 0.3
+    rs = make_policy("role_switch", ttft_hi_s=2.0, min_decode=2)
+    assert isinstance(rs, RoleSwitchPolicy)
+    assert rs.cfg.ttft_hi_s == 2.0 and rs.cfg.min_decode == 2
+    assert set(list_policies("dispatch")) >= {"fifo", "static_slice",
+                                              "dynamic_pd"}
+
+
+def test_registry_rejects_unknown_names_and_knobs():
+    with pytest.raises(KeyError, match="unknown policy"):
+        make_policy("nope")
+    with pytest.raises(TypeError, match="knobs"):
+        make_policy("dynamic_pd", not_a_knob=1)
+    ts = make_policy("static_slice", decode_share=0.8)
+    assert ts.decode_share == 0.8
+
+
+def test_dispatch_base_class_alias():
+    # the v2 name must keep working for isinstance checks and subclasses
+    assert SchedulerPolicy is DispatchPolicy
+    from repro.core.scheduler import SchedulerPolicy as shim
+    assert shim is DispatchPolicy
+
+
+# ------------------------------------------------------------ PolicyContext
+def test_policy_context_reaches_new_style_policies():
+    """Daemon-built contexts expose engine occupancy to pick(ctx); the
+    legacy 3-arg select() convention still drives the same policy."""
+    seen = {}
+
+    class Probe(DispatchPolicy):
+        def pick(self, ctx):
+            seen["free"] = dict(ctx.engine_free)
+            seen["slots"] = dict(ctx.engine_slots)
+            seen["backlog"] = ctx.backlog(Phase.PREFILL)
+            for ph in (Phase.OTHER, Phase.PREFILL, Phase.DECODE):
+                if ctx.get(ph):
+                    return ph
+            return None
+
+    from repro.core import FlexClient, FlexDaemon
+
+    class Tick:
+        def now(self):
+            return 0.0
+
+        def estimate(self, op):
+            return 1e-3
+
+    d = FlexDaemon(0, Tick(), Probe())
+    c = FlexClient(d)
+    s = c.create_stream(phase=Phase.PREFILL)
+    for _ in range(3):
+        c.launch(s, None, phase=Phase.PREFILL)
+    op = d.select_next(0.0)
+    assert op is not None
+    assert seen["backlog"] == 3
+    assert seen["slots"] == {"compute": 1, "copy": 1}
+    assert seen["free"] == {"compute": 1, "copy": 1}
+    # with the compute slot occupied, the context reports no free slot
+    assert d.select_next(0.0) is None
+    assert seen["free"]["compute"] == 0
+
+    # legacy direct-call convention (v2): plain dict of deques
+    from collections import deque
+    from repro.core.api import OpDescriptor, OpType
+    queues = {Phase.PREFILL: deque([OpDescriptor(OpType.LAUNCH,
+                                                 phase=Phase.PREFILL)]),
+              Phase.DECODE: deque(), Phase.OTHER: deque()}
+    assert Probe().select(queues, None, 0.0) == Phase.PREFILL
+
+
+def test_policy_context_link_stats_lazy():
+    calls = []
+    ctx = PolicyContext(queues={}, link_stats_fn=lambda: calls.append(1) or
+                        {"transfers": 7})
+    assert not calls                      # lazy: nothing until read
+    assert ctx.link_stats["transfers"] == 7 and calls == [1]
+    assert PolicyContext(queues={}).link_stats == {}
+
+
+# ----------------------------------------------------------------- admission
+def test_admission_parity_same_view_same_decision():
+    """ONE policy object answers for both runtimes: identical views must
+    produce identical decisions regardless of which engine built them."""
+    gated = GatedAdmission()
+    view = AdmissionView(waiting=1, next_prompt_len=16, active=1,
+                         decode_pending=1, prefilling=1, max_num_seqs=4)
+    assert gated.admit(view)
+    full = AdmissionView(waiting=1, next_prompt_len=16, active=2,
+                         decode_pending=1, prefilling=1, max_num_seqs=4)
+    assert not gated.admit(full)
+    # the simulator's historical gate ignores prefilling (KV accounting
+    # bounds prefill concurrency there) — explicit, not copy-pasted drift
+    assert GatedAdmission(count_prefilling=False).admit(full)
+    # KV gating only binds when the caller accounts tokens
+    kv = AdmissionView(waiting=1, next_prompt_len=100, active=0,
+                       decode_pending=0, prefilling=0, max_num_seqs=4,
+                       kv_free=64)
+    assert not gated.admit(kv)
+    assert gated.admit(
+        AdmissionView(waiting=1, next_prompt_len=100, active=0,
+                      decode_pending=0, prefilling=0, max_num_seqs=4,
+                      kv_free=None))
+    assert not UngatedAdmission().admit(
+        AdmissionView(waiting=0, next_prompt_len=0, active=9,
+                      decode_pending=9, prefilling=9, max_num_seqs=1))
+
+
+def test_engine_and_sim_build_equivalent_views():
+    """The two runtimes' AdmissionViews use the same fields with the same
+    meaning; the gated sim instance never exceeds its slot bound."""
+    from repro.configs import get_config
+    from repro.serving import DeploymentSpec, make_workload
+    sim = SimConfig(max_num_seqs=4)
+    cluster = Cluster(get_config("qwen2-vl-2b"),
+                      DeploymentSpec(mode="static_colocate",
+                                     colocated_instances=1,
+                                     colocated_chips=4), sim_cfg=sim)
+    inst = cluster.instances[0]
+    assert isinstance(inst.admission, GatedAdmission)
+    wl = make_workload(12, 64, 8, rate=20.0, seed=0)
+    peak = {"active": 0, "gated": 0}
+
+    def sample():
+        v = inst._admission_view()
+        peak["active"] = max(peak["active"], v.active)
+        # the slot bound the gate protects: decoding sequences
+        assert v.active <= sim.max_num_seqs
+        # decision-level parity: with slots full the shared policy refuses,
+        # exactly as it would for the real engine's view
+        if v.active + v.decode_pending >= sim.max_num_seqs:
+            v2 = AdmissionView(waiting=1, next_prompt_len=1,
+                               active=v.active,
+                               decode_pending=v.decode_pending,
+                               prefilling=v.prefilling,
+                               max_num_seqs=v.max_num_seqs,
+                               kv_free=v.kv_free)
+            assert not inst.admission.admit(v2)
+            peak["gated"] += 1
+    for t in [0.01 * i for i in range(1, 400)]:
+        cluster.loop.at(t, sample)
+    res = cluster.run(copy.deepcopy(wl), until=36000)
+    assert res["completed"] == 12
+    assert peak["active"] == sim.max_num_seqs    # the gate binds...
+    assert peak["gated"] > 0                     # ...and refuses when full
+
+
+# ------------------------------------------------------------- role switching
+def _bursty(n_prefill=150, n_decode=40):
+    return bursty_phase_shift(n_bursts=2, burst_gap_s=12.0,
+                              n_prefill=n_prefill, prefill_rate=600.0,
+                              prefill_io=(4096, 64), n_decode=n_decode,
+                              decode_rate=8.0, decode_io=(128, 512), seed=5)
+
+
+def _role_cluster(drive):
+    from repro.configs import get_config
+    return Cluster(get_config("mixtral-8x7b"),
+                   deployment_role_switch(ttft_hi_s=0.5, ttft_lo_s=0.2,
+                                          cooldown_s=2.0),
+                   sim_cfg=SimConfig(prefill_window=4), drive=drive,
+                   time_scale=0.1)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("drive", drive_modes())
+def test_role_switch_drain_correctness(drive):
+    """KV conservation holds THROUGH role flips (decode drain migrates KV
+    over the copy-engine path; pages stay charged at the source until each
+    copy lands), in both drive modes, and every request completes."""
+    cluster = _role_cluster(drive)
+    wl = _bursty()
+    samples = {"n": 0}
+
+    def check():
+        cluster.check_kv_conservation()
+        samples["n"] += 1
+    for i in range(1, 240):
+        cluster.loop.at(0.25 * i, check)
+    res = cluster.run(copy.deepcopy(wl), until=36000)
+    assert samples["n"] > 50
+    assert res["completed"] == len(wl)
+    assert all(r.state == RequestState.DONE for r in cluster.requests)
+    assert res["policy"]["role_flips"] >= 2          # borrowed and returned
+    assert res["policy"]["cluster"]["borrowed_now"] == 0
+    assert {i.role for i in cluster.decode_pool} == {"decode"}
+    cluster.check_kv_conservation()
+    assert not cluster.inflight_transfers
+    assert all(i.kv_in_transit == 0 for i in cluster.instances)
+
+
+@pytest.mark.slow
+def test_role_switch_beats_static_6p2d_stepped():
+    """The headline: on the bursty phase-shifted workload, dynamic role
+    switching matches static 6P2D throughput with a (much) lower p95 TTFT.
+    Stepped drive — fully deterministic, so the bound is strict."""
+    from repro.configs import get_config
+    wl = _bursty()
+    res = {}
+    for name, deploy in [("static", deployment_6p2d()),
+                         ("switch", deployment_role_switch(
+                             ttft_hi_s=0.5, ttft_lo_s=0.2, cooldown_s=2.0))]:
+        cluster = Cluster(get_config("mixtral-8x7b"), deploy,
+                          sim_cfg=SimConfig(prefill_window=4))
+        res[name] = cluster.run(copy.deepcopy(wl), until=36000)
+        cluster.check_kv_conservation()
+    assert res["switch"]["completed"] == res["static"]["completed"] == len(wl)
+    assert res["switch"]["requests_per_s"] >= \
+        0.99 * res["static"]["requests_per_s"]
+    assert res["switch"]["ttft_p95_s"] < 0.8 * res["static"]["ttft_p95_s"], \
+        (res["switch"]["ttft_p95_s"], res["static"]["ttft_p95_s"])
+    assert res["switch"]["policy"]["role_flips"] >= 2
+    assert res["static"]["policy"]["role_flips"] == 0
+
+
+@pytest.mark.slow
+@pytest.mark.timing
+def test_role_switch_no_worse_than_static_6p2d_threaded():
+    """Same comparison under the threaded drive (real daemon dispatch
+    threads on a scaled wall clock).  Real scheduling jitter inflates the
+    STATIC baseline nonlinearly on busy machines (backlog compounds) while
+    role switching self-corrects, so the deterministic 'strictly lower
+    p95' bound lives in the stepped test above; here we pin throughput >=
+    static and p95 within a bounded band, with thresholds scaled by
+    FLEX_TIMING_SLACK and one retry to ride out contention spikes."""
+    from repro.configs import get_config
+    slack = timing_slack()
+    wl = _bursty()
+
+    def run_pair():
+        res = {}
+        for name, deploy in [("static", deployment_6p2d()),
+                             ("switch", deployment_role_switch(
+                                 ttft_hi_s=0.5, ttft_lo_s=0.2,
+                                 cooldown_s=2.0))]:
+            cluster = Cluster(get_config("mixtral-8x7b"), deploy,
+                              sim_cfg=SimConfig(prefill_window=4),
+                              drive="threaded", time_scale=0.1)
+            res[name] = cluster.run(copy.deepcopy(wl), until=3000)
+            cluster.check_kv_conservation()
+        assert res["switch"]["completed"] \
+            == res["static"]["completed"] == len(wl)
+        assert res["switch"]["policy"]["role_flips"] >= 2
+        return (res["switch"]["requests_per_s"]
+                / res["static"]["requests_per_s"],
+                res["switch"]["ttft_p95_s"] / res["static"]["ttft_p95_s"])
+
+    rps_lo, p95_hi = 0.85 / slack, max(1.25, slack)
+    for attempt in range(2):
+        rps_ratio, p95_ratio = run_pair()
+        if rps_ratio > rps_lo and p95_ratio < p95_hi:
+            break
+    assert rps_ratio > rps_lo, (rps_ratio, slack)
+    assert p95_ratio < p95_hi, (p95_ratio, slack)
+
+
+def test_op_duration_unified_across_drives():
+    """One duration implementation for both drives: slow_factor applies,
+    the straggler EWMA updates, decode late-binds its batch, and
+    bookkeeping ops are never slowed (the DMA engine isn't a straggler)."""
+    from repro.configs import get_config
+    from repro.core.api import OpDescriptor, OpType
+    from repro.serving import deployment_dynamic
+    cluster = Cluster(get_config("mixtral-8x7b"), deployment_dynamic())
+    inst = cluster.instances[0]
+    inst.slow_factor = 3.0
+    op = OpDescriptor(OpType.LAUNCH, phase=Phase.PREFILL,
+                      meta={"est_duration": 1.0})
+    assert inst.op_duration(op) == pytest.approx(3.0)
+    assert inst.ewma_step > 0
+    other = OpDescriptor(OpType.RECORD_EVENT, meta={"est_duration": 1.0})
+    assert inst.op_duration(other) == pytest.approx(1.0)   # not slowed
+    # decode late-binds: duration computed from the CURRENT batch, not the
+    # estimate frozen into the op at enqueue
+    inst.slow_factor = 1.0
+    dec = OpDescriptor(OpType.LAUNCH, phase=Phase.DECODE,
+                       meta={"est_duration": 1e-9})
+    solo = inst.op_duration(dec)
+    from repro.serving.request import Request
+    inst.active = [Request(prompt_len=4096, max_new_tokens=1)
+                   for _ in range(64)]
+    assert inst.op_duration(dec) > solo
+    assert dec.meta["tokens"] == 64                        # decode_meta bound
+
+
+def test_switch_role_rejects_invalid_flips():
+    from repro.configs import get_config
+    cluster = Cluster(get_config("mixtral-8x7b"), deployment_6p2d(),
+                      sim_cfg=SimConfig(prefill_window=4))
+    d0 = next(i for i in cluster.instances if i.name == "D0")
+    assert not cluster.switch_role(d0, "decode")      # already decode
+    assert not cluster.switch_role(d0, "weights")     # unknown role
+    assert cluster.switch_role("D0", "prefill")       # by name works
+    assert d0 in cluster.prefill_pool and d0 not in cluster.decode_pool
+    assert cluster.switch_role(d0, "decode")
+    assert d0 in cluster.decode_pool
+    # colocated instances have no switchable role
+    from repro.serving import deployment_dynamic
+    co = Cluster(get_config("mixtral-8x7b"), deployment_dynamic())
+    assert not co.switch_role(co.instances[0], "prefill")
+
+
+def test_policy_telemetry_in_run_results():
+    """Cluster.run results carry control-plane telemetry (what the BENCH
+    artifacts record): dispatch debug state, roles, flips, queue depths."""
+    from repro.configs import get_config
+    from repro.serving import deployment_dynamic, make_workload
+    cluster = Cluster(get_config("mixtral-8x7b"), deployment_dynamic())
+    res = cluster.run(make_workload(40, 512, 128, rate=100.0, seed=1),
+                      until=36000)
+    tele = res["policy"]
+    assert tele["cluster_policy"] == "LeastLoadedPolicy"
+    assert tele["role_flips"] == 0
+    assert set(tele["roles"]) == {"C0", "C1", "C2"}
+    # dynamic_pd instances expose realized decode share
+    assert any("decode_share_realized" in st
+               for st in tele["dispatch"].values())
+    for depths in tele["queue_depths"].values():
+        assert {"prefill_ops", "decode_ops", "waiting", "active"} <= \
+            set(depths)
+
+
+@pytest.mark.parametrize("drive", drive_modes())
+def test_cluster_session_leak_free(drive):
+    """Both drives release their session cleanly (threaded stops daemon
+    threads in run(); stepped sessions close idempotently)."""
+    from repro.configs import get_config
+    from repro.serving import make_workload
+    cluster = Cluster(get_config("mixtral-8x7b"), deployment_6p2d(),
+                      sim_cfg=SimConfig(prefill_window=4), drive=drive,
+                      time_scale=0.05)
+    res = cluster.run(make_workload(20, 256, 32, rate=200.0, seed=2),
+                      until=3000)
+    assert res["completed"] == 20
+    cluster.close()
+    assert all(d.closed for d in cluster.session.daemons)
