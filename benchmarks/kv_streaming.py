@@ -1,0 +1,131 @@
+"""Chunked layer-wise KV streaming vs one-blob transfers, across topologies.
+
+The disaggregation KV path (repro.transport) is swept along two axes:
+
+  * **topology** — ``flat`` (destination-ingress contention only, the v2
+    model) vs ``shared_spine`` (source egress -> shared spine -> ingress;
+    every transfer occupies its full path, so cross-pair flows contend on
+    the spine — the dominant fabric cost at pod scale, cf. the
+    inter-core-connected-NPU studies in PAPERS.md);
+  * **chunking** — one blob per request (``kv_chunk_tokens=0``) vs
+    layer-wise chunks pipelined over ``memcpy_peer``.
+
+The deployment is sized so prefill-side KV capacity binds (7-chip prefill
+instances barely fit the weights): with one-blob transfers a slow spine
+holds every request's pages hostage for the whole transfer and parked
+prefills wait; chunked streaming frees source pages chunk-by-chunk and
+admits decode on the FIRST chunk.  Expected: chunked reduces TTFT (and
+time-to-second-token, the client-visible transfer cost) at equal
+throughput on the bandwidth-constrained spine, with the contention
+attributed to the spine segment in the per-link stats — and the decode
+stalls it introduces (decode outrunning the tail) made visible.
+"""
+from __future__ import annotations
+
+import copy
+
+# (topology name, knobs) — spine_bw chosen so the spine, not the ingress,
+# is the contended segment in the constrained sweep
+TOPOLOGIES = (
+    ("flat", {}),
+    ("shared_spine", dict(ingress_bw=50e9, egress_bw=50e9, spine_bw=1.5e9)),
+)
+CHUNK_TOKENS = (0, 512)
+
+
+def _deploy():
+    from repro.serving import DeploymentSpec
+    # 6P2D geometry with prefill instances sized to the KV-capacity edge
+    return DeploymentSpec(mode="disagg", prefill_instances=6,
+                          prefill_chips=7, decode_instances=2,
+                          decode_chips=144)
+
+
+def _workload(quick: bool):
+    from repro.serving import make_workload
+    # even the quick run must cross the prefill KV-capacity edge (~13
+    # parked 4096-token prompts per 7-chip instance) or the TTFT effect of
+    # per-chunk page freeing has nothing to bite on
+    n = 90 if quick else 120
+    return make_workload(n, 4096, 64, rate=1e5, seed=7)
+
+
+def run(quick: bool = False, chunks=CHUNK_TOKENS, topologies=TOPOLOGIES):
+    from repro.configs import get_config
+    from repro.serving import Cluster, SimConfig
+    from repro.transport import make_topology
+
+    cfg = get_config("mixtral-8x7b")
+    wl = _workload(quick)
+    rows = []
+    for topo_name, knobs in topologies:
+        baseline = None
+        for chunk in chunks:
+            sim = SimConfig(topology=make_topology(topo_name, **knobs),
+                            kv_chunk_tokens=chunk)
+            cluster = Cluster(cfg, _deploy(), sim_cfg=sim)
+            res = cluster.run(copy.deepcopy(wl), until=72000)
+            cluster.check_kv_conservation()
+            per_link = res.get("per_link", {})
+            spine_qd = sum(v["queue_delay_s"] for k, v in per_link.items()
+                           if k.startswith("spine:"))
+            ingress_qd = sum(v["queue_delay_s"] for k, v in per_link.items()
+                             if k.startswith("ingress:"))
+            derived = {
+                "topology": topo_name,
+                "kv_chunk_tokens": chunk,
+                "completed": res["completed"],
+                "rps": round(res["requests_per_s"], 3),
+                "ttft_mean_s": round(res["ttft_mean_s"], 3),
+                "ttft_p95_s": round(res["ttft_p95_s"], 3),
+                "ttst_mean_s": round(res["ttst_mean_s"], 3),
+                "ttst_p95_s": round(res["ttst_p95_s"], 3),
+                "transfers": res.get("transfers", 0),
+                "decode_stall_s": res.get("decode_stall_s", 0.0),
+                "decode_stalls": res.get("decode_stalls", 0),
+                # contention attribution: spine vs ingress queueing (the
+                # per-segment breakdown the flat model could not produce)
+                "spine_queue_delay_s": round(spine_qd, 3),
+                "ingress_queue_delay_s": round(ingress_qd, 3),
+            }
+            if baseline is None:
+                baseline = res
+            else:
+                derived["ttft_vs_blob"] = "{:+.2%}".format(
+                    res["ttft_mean_s"] / baseline["ttft_mean_s"] - 1)
+                derived["ttst_vs_blob"] = "{:+.2%}".format(
+                    res["ttst_mean_s"] / baseline["ttst_mean_s"] - 1)
+                derived["rps_vs_blob"] = "{:+.2%}".format(
+                    res["requests_per_s"] / baseline["requests_per_s"] - 1)
+            rows.append((f"kv_streaming.{topo_name}.chunk{chunk}",
+                         1e6 / max(res["requests_per_s"], 1e-9), derived))
+    return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    from benchmarks._cli import emit_rows
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny workload")
+    ap.add_argument("--chunks", default=",".join(map(str, CHUNK_TOKENS)),
+                    help="comma-separated kv_chunk_tokens values "
+                         "(0 = one blob; first is the comparison baseline)")
+    ap.add_argument("--topology", default="",
+                    help="run one topology only (flat | shared_spine)")
+    ap.add_argument("--json", default="",
+                    help="also write the rows to this JSON file")
+    args = ap.parse_args(argv)
+    topologies = tuple(t for t in TOPOLOGIES
+                       if not args.topology or t[0] == args.topology)
+    chunks = tuple(int(c) for c in args.chunks.split(",") if c != "")
+    rows = run(quick=args.quick or args.smoke, chunks=chunks,
+               topologies=topologies)
+    emit_rows(rows, args.json)
+
+
+if __name__ == "__main__":
+    main()

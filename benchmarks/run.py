@@ -25,6 +25,7 @@ MODULES = [
     ("fig2", "benchmarks.decode_bandwidth"),
     ("fig56", "benchmarks.timeslice_sweep"),
     ("role_switch", "benchmarks.role_switch"),
+    ("kv_streaming", "benchmarks.kv_streaming"),
     ("roofline", "benchmarks.roofline"),
     ("kernels", "benchmarks.kernels_microbench"),
 ]

@@ -2,17 +2,27 @@
 disaggregation vs FlexNPU dynamic PD co-location, 1K-1K and 1K-4K workloads
 — with a mid-run instance failure to exercise the fault-tolerance path.
 
+The KV transport layer is configurable: ``--topology shared_spine
+--spine-bw 2e9`` routes disaggregation transfers over a shared spine
+(path-aware contention) and ``--kv-chunk-tokens 512`` streams each
+request's KV as layer-wise chunks instead of one blob.  Control-plane v3
+policies are swept by registry name (``--cluster-policy role_switch``).
+
     PYTHONPATH=src python examples/cluster_sim_384.py [--arch grok-1-314b]
+        [--topology flat|shared_spine] [--kv-chunk-tokens N]
+        [--cluster-policy NAME] [--dispatch-policy NAME]
 """
 import argparse
 import copy
+import dataclasses
 import sys
 
 sys.path.insert(0, "src")
 
 from repro.configs import get_config
-from repro.serving import (Cluster, deployment_6p2d, deployment_dynamic,
-                           make_workload)
+from repro.serving import (Cluster, SimConfig, deployment_6p2d,
+                           deployment_dynamic, make_workload)
+from repro.transport import make_topology
 
 
 def main():
@@ -20,8 +30,28 @@ def main():
     ap.add_argument("--arch", default="mixtral-8x7b")
     ap.add_argument("--requests", type=int, default=600)
     ap.add_argument("--fail-instance", action="store_true")
+    # KV transport knobs (repro.transport)
+    ap.add_argument("--topology", default="flat",
+                    choices=["flat", "shared_spine"],
+                    help="interconnect topology for disagg KV transfers")
+    ap.add_argument("--spine-bw", type=float, default=4e9,
+                    help="shared-spine bandwidth, bytes/s")
+    ap.add_argument("--kv-chunk-tokens", type=int, default=0,
+                    help="layer-wise KV streaming granularity "
+                         "(0 = one blob per request)")
+    # control-plane v3 policy flags (repro.sched registry names)
+    ap.add_argument("--cluster-policy", default="",
+                    help="cluster policy (least_loaded, role_switch)")
+    ap.add_argument("--dispatch-policy", default="",
+                    help="per-daemon dispatch policy (fifo, static_slice, "
+                         "dynamic_pd)")
     args = ap.parse_args()
     cfg = get_config(args.arch)
+
+    topology = (make_topology("shared_spine", spine_bw=args.spine_bw)
+                if args.topology == "shared_spine" else None)
+    sim_cfg = SimConfig(topology=topology,
+                        kv_chunk_tokens=args.kv_chunk_tokens)
 
     for wl_name, i, o in (("1K-1K", 1024, 1024), ("1K-4K", 1024, 4096)):
         n = args.requests if o == 1024 else args.requests // 3
@@ -29,15 +59,22 @@ def main():
         results = {}
         for name, deploy in (("static 6P2D", deployment_6p2d()),
                              ("FlexNPU dynamic 3x128", deployment_dynamic())):
-            cluster = Cluster(cfg, deploy)
+            deploy = dataclasses.replace(
+                deploy, cluster_policy=args.cluster_policy,
+                dispatch_policy=args.dispatch_policy)
+            cluster = Cluster(cfg, deploy, sim_cfg=sim_cfg)
             if args.fail_instance:
                 victim = cluster.instances[0].name
                 cluster.loop.at(1.0, lambda c=cluster, v=victim:
                                 c.fail_instance(v))
             res = cluster.run(copy.deepcopy(wl), until=72000)
+            cluster.check_kv_conservation()
             results[name] = res
             extra = f" retries={res.get('retries', 0)}" if args.fail_instance \
                 else ""
+            if res.get("transfers"):
+                extra += (f" transfers={res['transfers']}"
+                          f" stall_s={res.get('decode_stall_s', 0):.1f}")
             print(f"[{wl_name}] {name:24s} rps={res['requests_per_s']:8.2f} "
                   f"tok/s={res['output_tokens_per_s']:10.0f}{extra}")
         gain = (results["FlexNPU dynamic 3x128"]["requests_per_s"]
@@ -45,6 +82,12 @@ def main():
         paper = "+26.33%" if wl_name == "1K-1K" else "+5.15%"
         print(f"[{wl_name}] dynamic vs disagg: {gain:+.2%} "
               f"(paper: {paper})\n")
+        per_link = results["static 6P2D"].get("per_link", {})
+        spine = {k: v for k, v in per_link.items() if k.startswith("spine:")}
+        if spine:
+            print(f"[{wl_name}] disagg spine contention: "
+                  + ", ".join(f"{k} queue_delay={v['queue_delay_s']:.2f}s"
+                              for k, v in spine.items()) + "\n")
 
 
 if __name__ == "__main__":

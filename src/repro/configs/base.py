@@ -169,7 +169,8 @@ class ModelConfig:
                 pass  # mamba2 blocks have no separate MLP
             elif is_moe:
                 assert self.moe is not None
-                total += self.moe.num_experts * mlp_params(gated) + d * self.moe.num_experts
+                total += self.moe.num_experts * mlp_params(gated) \
+                    + d * self.moe.num_experts
             else:
                 total += mlp_params(gated)
         for _ in range(self.encoder_layers):
@@ -195,7 +196,8 @@ class ModelConfig:
         """Smoke-test-scale config of the same family (CPU-runnable)."""
         kw = dict(
             name=self.name + "-smoke",
-            num_layers=min(self.num_layers, 4 if not self.attn_every else self.attn_every),
+            num_layers=min(self.num_layers,
+                           4 if not self.attn_every else self.attn_every),
             d_model=128,
             num_heads=4,
             num_kv_heads=min(self.num_kv_heads, 4) if self.num_kv_heads else 0,

@@ -11,8 +11,9 @@ from repro.core.client import FlexClient, PassthroughClient
 from repro.core.daemon import FlexDaemon, RealBackend
 from repro.core.handles import SharedEventTable
 from repro.core.profiler import Profiler
-# Dispatch policies live in repro.sched (control-plane API v3);
-# repro.core.scheduler remains as a deprecation shim for one release.
+# Dispatch policies live in repro.sched (control-plane API v3); the
+# repro.core.scheduler deprecation shim was removed after its one-release
+# window — import from repro.sched (see docs/api.md migration table).
 # Submodule imports (not the repro.sched package) keep the core <-> sched
 # import cycle acyclic: sched's own __init__ imports repro.core.api.
 from repro.sched.context import PolicyContext

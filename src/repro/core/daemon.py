@@ -126,7 +126,8 @@ class _ReadyView:
 
 
 class FlexDaemon:
-    def __init__(self, device_id: int, backend, policy: Optional[SchedulerPolicy] = None,
+    def __init__(self, device_id: int, backend,
+                 policy: Optional[SchedulerPolicy] = None,
                  profiler: Optional[Profiler] = None,
                  shared_events: Optional[SharedEventTable] = None):
         self.device_id = device_id
@@ -407,9 +408,7 @@ class FlexDaemon:
                              for e, n in self.engine_slots.items()},
                 engine_slots=dict(self.engine_slots),
                 link_stats_fn=self.link_stats_fn)
-            # legacy policies override select(queues, prof, now); the ctx
-            # duck-types as the queues mapping so both signatures work
-            phase = self.policy.select(ctx, self.profiler, now)
+            phase = self.policy.select(ctx)
             if phase is None or not ready[phase]:
                 return None
             op = ready[phase][0]

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import itertools
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 
 class HandleTable:

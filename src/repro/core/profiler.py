@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, Dict, Optional, Tuple
+from typing import Deque, Dict, Tuple
 
 from repro.core.api import OpDescriptor, OpType, Phase
 

@@ -11,8 +11,7 @@ resumes, optionally on a smaller elastic world size.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List
 
 from repro.checkpoint.checkpoint import Checkpointer
 

@@ -27,7 +27,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import MeshConfig, ModelConfig, ShapeConfig, ShapeKind
+from repro.configs.base import MeshConfig, ModelConfig
 
 # --------------------------------------------------------------------------
 # Annotated parameters

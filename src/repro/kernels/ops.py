@@ -10,7 +10,6 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.paged_attention import paged_attention_kernel

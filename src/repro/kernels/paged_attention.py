@@ -15,7 +15,6 @@ imbalance — is dominated by streaming the KV cache.  TPU-native design:
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

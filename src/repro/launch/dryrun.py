@@ -24,14 +24,12 @@ import time
 from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import (SHAPES, get_config, get_shape, list_archs,
                            shape_applicable)
 from repro.configs.base import ModelConfig, ShapeConfig, ShapeKind
-from repro.distributed.sharding import (axes_tree, make_rules, make_shardings,
+from repro.distributed.sharding import (make_rules, make_shardings,
                                         set_active, unbox)
 from repro.launch import hlo_analysis
 from repro.launch.mesh import make_production_mesh, mesh_config
@@ -134,7 +132,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                     mesh, rules.spec_for(ax, sds.shape)),
                 cache_sds, cache_ax,
                 is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
-            fn = lambda p, b, c: model.prefill(p, b, c)
+            def fn(p, b, c):
+                return model.prefill(p, b, c)
             jitted = jax.jit(fn, in_shardings=(params_sh, input_sh, cache_sh),
                              donate_argnums=(2,))
             lowered = jitted.lower(params_sds, inputs, cache_sds)
@@ -148,7 +147,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                     mesh, rules.spec_for(ax, sds.shape)),
                 cache_sds, cache_ax,
                 is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
-            fn = lambda p, toks, c, lens: model.decode(p, toks, c, lens)
+            def fn(p, toks, c, lens):
+                return model.decode(p, toks, c, lens)
             jitted = jax.jit(fn, in_shardings=(
                 params_sh, input_sh["tokens"], cache_sh, input_sh["lengths"]),
                 donate_argnums=(2,))
@@ -277,8 +277,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str,
         print(f"    memory_analysis: {mem}")
         print(f"    cost_analysis: flops={info['hlo_flops']:.3e} "
               f"bytes={info['hlo_bytes']:.3e}")
-        print(f"    collectives: { {k: f'{v:.2e}' for k, v in info['collective_bytes'].items()} }")
-        print(f"    roofline: { {k: (f'{v:.2e}' if isinstance(v, float) else v) for k, v in info['roofline'].items()} }")
+        coll = {k: f"{v:.2e}"
+                for k, v in info["collective_bytes"].items()}
+        print(f"    collectives: {coll}")
+        roof = {k: (f"{v:.2e}" if isinstance(v, float) else v)
+                for k, v in info["roofline"].items()}
+        print(f"    roofline: {roof}")
     os.makedirs(outdir, exist_ok=True)
     fname = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}.json"
     with open(os.path.join(outdir, fname), "w") as f:

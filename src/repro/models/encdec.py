@@ -3,7 +3,7 @@ frontend is a STUB per the assignment: inputs arrive as precomputed frame
 embeddings [B, S_enc, d_model]."""
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ same math (selected via ``attn_impl``).
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -223,9 +222,9 @@ def blocked_attention(q, k, v, *, causal: bool, scale: float,
 
         @jax.checkpoint
         def kv_block(acc, kv_in):
-            # checkpointed: scan AD then saves only the small (m, l, o)
+            # checkpointed: scan AD then saves only the small (m, lse, o)
             # carries per kv block instead of the [bq, bkv] fp32 scores
-            m, l, o = acc
+            m, lse, o = acc
             k_j, v_j, pos_j = kv_in             # [B,bkv,KVH,D], ..., [bkv]
             s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
                            preferred_element_type=jnp.float32) * scale
@@ -239,19 +238,19 @@ def blocked_attention(q, k, v, *, causal: bool, scale: float,
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + jnp.sum(p, axis=-1)
+            lse_new = lse * corr + jnp.sum(p, axis=-1)
             o_new = o * corr[..., None] + jnp.einsum(
                 "bhgqk,bkhd->bhgqd", p.astype(v_j.dtype), v_j,
                 preferred_element_type=jnp.float32)
-            return (m_new, l_new, o_new), None
+            return (m_new, lse_new, o_new), None
 
         m0 = jnp.full((B, KVH, G, block_q), -1e30, jnp.float32)
         l0 = jnp.zeros((B, KVH, G, block_q), jnp.float32)
         o0 = jnp.zeros((B, KVH, G, block_q, D), jnp.float32)
-        (m, l, o), _ = jax.lax.scan(
+        (m, lse, o), _ = jax.lax.scan(
             kv_block, (m0, l0, o0),
             (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kv_pos))
-        out = o / jnp.maximum(l[..., None], 1e-30)
+        out = o / jnp.maximum(lse[..., None], 1e-30)
         return None, out.astype(q.dtype)        # [B, KVH, G, bq, D]
 
     _, outs = jax.lax.scan(q_block, None,

@@ -69,10 +69,10 @@ def mamba_cache_axes() -> Dict[str, Tuple[Optional[str], ...]]:
 def _segsum(x):
     """x: [..., l] -> [..., l, l]; out[i,j] = sum_{k in (j, i]} x_k, -inf above
     the diagonal."""
-    l = x.shape[-1]
+    n = x.shape[-1]
     cs = jnp.cumsum(x, axis=-1)
     seg = cs[..., :, None] - cs[..., None, :]
-    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    mask = jnp.tril(jnp.ones((n, n), bool), k=0)
     return jnp.where(mask, seg, -jnp.inf)
 
 

@@ -15,14 +15,13 @@
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import Family, ModelConfig, PosEmb, ShapeConfig, ShapeKind
-from repro.distributed.sharding import Param, shard_act, unbox
+from repro.configs.base import Family, ModelConfig, ShapeConfig, ShapeKind
+from repro.distributed.sharding import shard_act
 from repro.models import encdec as ED
 from repro.models import layers as L
 from repro.models import transformer as T

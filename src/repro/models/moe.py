@@ -10,15 +10,14 @@ tensor-parallel ``mlp`` sharding inside every expert (Grok/Mixtral: 8e on a
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import Activation, ModelConfig
-from repro.distributed.sharding import Param, shard_act
+from repro.distributed.sharding import shard_act
 from repro.models.layers import dense_param
 
 

@@ -9,14 +9,13 @@ repeats so the compiled HLO contains each distinct block body exactly once
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import Family, ModelConfig
-from repro.distributed.sharding import prepend_axis, shard_act, unbox
+from repro.distributed.sharding import prepend_axis, shard_act
 from repro.models import layers as L
 from repro.models import mamba2 as M
 from repro.models import moe as MOE

@@ -11,8 +11,9 @@
 #                      instance role-switching.
 #
 # Everything is constructed through one registry: make_policy(name, **knobs).
-# The v2 entry points in repro.core.scheduler remain as deprecation shims
-# for one release (see docs/api.md for the migration table).
+# The repro.core.scheduler deprecation shim (and the legacy 3-argument
+# select convention) was removed after its one-release window — see the
+# migration table in docs/api.md.
 from repro.sched.admission import (AdmissionPolicy, GatedAdmission,
                                    UngatedAdmission)
 from repro.sched.cluster import (ClusterPolicy, LeastLoadedPolicy,

@@ -3,10 +3,11 @@
 ``PolicyContext`` is the one argument a :class:`DispatchPolicy` receives:
 the per-phase queue views the daemon already exposed, plus the profiler,
 the clock, per-engine occupancy, and (when the deployment wires one in)
-link-queueing statistics from the shared ``LinkModel``.  It also implements
-the old ``queues`` mapping protocol (``ctx[phase]`` / ``ctx.get(phase)``),
-so policies written against the v2 ``select(queues, prof, now)`` signature
-keep working unchanged while new policies read the richer signals.
+link-queueing statistics from the shared ``LinkModel``.  It implements the
+``queues`` mapping protocol (``ctx[phase]`` / ``ctx.get(phase)``) as a
+convenience for phase-indexed policies.  The v2 three-argument
+``select(queues, prof, now)`` convention and its coercion path were
+removed with the ``repro.core.scheduler`` shim.
 
 ``AdmissionView`` is the analogous snapshot for :class:`AdmissionPolicy`:
 both the real engine and the simulator instance build one from their own
@@ -40,8 +41,8 @@ class PolicyContext:
     # attached to a link model report {}
     link_stats_fn: Optional[Callable[[], Dict[str, float]]] = None
 
-    # -- legacy mapping protocol (v2 policies treated the first select()
-    # -- argument as the queues dict itself)
+    # -- queues mapping protocol (phase-indexed policies read the context
+    # -- like the per-phase queue dict it wraps)
     def __getitem__(self, phase):
         return self.queues[phase]
 
@@ -75,13 +76,6 @@ class PolicyContext:
     @property
     def link_stats(self) -> Dict[str, float]:
         return self.link_stats_fn() if self.link_stats_fn is not None else {}
-
-    @classmethod
-    def coerce(cls, queues, prof=None, now=None) -> "PolicyContext":
-        """Normalize either calling convention into a context object."""
-        if isinstance(queues, cls):
-            return queues
-        return cls(queues=queues, prof=prof, now=0.0 if now is None else now)
 
 
 @dataclasses.dataclass

@@ -21,10 +21,11 @@ Policies (registry names in parentheses):
     TTFT guard.
 
 v3 interface: policies implement ``pick(ctx)`` over a stable
-:class:`~repro.sched.context.PolicyContext`.  The base class ``select``
-accepts both the context object and the legacy v2
-``select(queues, prof, now)`` convention, so subclasses written against
-either signature drive the same daemon.
+:class:`~repro.sched.context.PolicyContext`; the daemon calls
+``select(ctx)``, which normalizes and delegates.  The legacy v2
+``select(queues, prof, now)`` convention (and the ``repro.core.scheduler``
+shim that carried it) was removed after its one-release deprecation
+window — see the migration table in docs/api.md.
 """
 from __future__ import annotations
 
@@ -40,13 +41,9 @@ SCHEDULABLE = (Phase.PREFILL, Phase.DECODE)
 class DispatchPolicy:
     """Returns which phase should dispatch next (None = nothing ready)."""
 
-    def select(self, queues, prof=None, now=None) -> Optional[Phase]:
-        """Entry point called by the daemon.
-
-        Accepts a :class:`PolicyContext` (v3) or the legacy
-        ``(queues, prof, now)`` triple (v2); either way ``pick`` sees one
-        normalized context.  Override ``pick``, not this."""
-        return self.pick(PolicyContext.coerce(queues, prof, now))
+    def select(self, ctx: PolicyContext) -> Optional[Phase]:
+        """Entry point called by the daemon.  Override ``pick``, not this."""
+        return self.pick(ctx)
 
     def pick(self, ctx: PolicyContext) -> Optional[Phase]:
         raise NotImplementedError

@@ -13,8 +13,7 @@ Phase behaviour (paper Figures 1-2):
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict, Hashable, Optional
+from typing import Dict, Optional
 
 from repro.configs.base import ModelConfig
 
@@ -167,122 +166,15 @@ class CostModel:
 
 
 # ===========================================================================
-# Link model: per-link bandwidth with occupancy (copy-engine transfers)
+# Link model: moved to the KV transport subsystem (repro.transport)
 # ===========================================================================
+# The per-link occupancy model grew into a path-aware, topology-driven
+# LinkModel (a transfer occupies source egress, shared spine, AND
+# destination ingress; rate = min over per-segment processor shares) and
+# now lives in repro.transport with the Topology and KVStreamer it works
+# with.  Re-exported here for one release (docs/api.md "KV transport &
+# topology" has the migration table).
+from repro.transport.links import LinkModel, LinkTransfer
 
-
-@dataclasses.dataclass(eq=False)
-class LinkTransfer:
-    """One in-flight transfer (identity equality: unique in-flight object)."""
-    link: Hashable
-    nbytes: float
-    remaining: float          # bytes still to move
-    start_t: float
-    done_t: float = -1.0
-
-    @property
-    def elapsed(self) -> float:
-        return self.done_t - self.start_t
-
-
-class LinkModel:
-    """Shared inter-device links with **occupancy**: concurrent transfers on
-    one link processor-share its bandwidth, so each sees
-    ``bw / n_active`` — the contention that static PD disaggregation pays
-    for KV movement and dynamic co-location avoids (paper §4 motivation;
-    cf. the inter-core-connected-NPU topology studies in PAPERS.md).
-
-    Pure state machine over a caller-supplied clock: ``start`` opens a
-    transfer, ``eta`` predicts its completion under CURRENT occupancy, and
-    ``poll`` advances progress and reports completion.  Because occupancy
-    changes move every peer's finish time, drivers must re-poll peers after
-    any start/finish (``LinkDriver`` in the simulator does this on the
-    discrete-event loop).  ``bw_by_link`` overrides the default bandwidth
-    for individual links (heterogeneous topologies)."""
-
-    def __init__(self, bw: float = ICI_BW, latency_s: float = 1e-3,
-                 bw_by_link: Optional[Dict[Hashable, float]] = None):
-        self.bw = float(bw)
-        self.latency_s = float(latency_s)
-        self.bw_by_link: Dict[Hashable, float] = dict(bw_by_link or {})
-        self._active: Dict[Hashable, Dict[LinkTransfer, None]] = {}
-        self._last_t: Dict[Hashable, float] = {}
-        # aggregate stats (benchmarks report transfer-queueing delay)
-        self.completed = 0
-        self.bytes_moved = 0.0
-        self.busy_time = 0.0           # sum of actual transfer durations
-        self.queueing_delay = 0.0      # sum of (actual - contention-free)
-        self.peak_concurrency: Dict[Hashable, int] = {}
-
-    def link_bw(self, link: Hashable) -> float:
-        return self.bw_by_link.get(link, self.bw)
-
-    def ideal_time(self, nbytes: float, link: Hashable = None) -> float:
-        """Contention-free reference duration of one transfer."""
-        return self.latency_s + nbytes / self.link_bw(link)
-
-    def active_count(self, link: Hashable) -> int:
-        return len(self._active.get(link, ()))
-
-    def active_on(self, link: Hashable):
-        return list(self._active.get(link, ()))
-
-    def _advance(self, link: Hashable, now: float) -> None:
-        """Drain progress since the last update at the SHARED rate."""
-        xs = self._active.get(link)
-        if not xs:
-            self._last_t[link] = now
-            return
-        dt = now - self._last_t.get(link, now)
-        if dt > 0:
-            share = self.link_bw(link) / len(xs)
-            for x in xs:
-                x.remaining = max(0.0, x.remaining - dt * share)
-        self._last_t[link] = now
-
-    def start(self, link: Hashable, nbytes: float, now: float) -> LinkTransfer:
-        self._advance(link, now)
-        x = LinkTransfer(link, float(nbytes), float(nbytes), now)
-        self._active.setdefault(link, {})[x] = None
-        n = len(self._active[link])
-        self.peak_concurrency[link] = max(
-            self.peak_concurrency.get(link, 0), n)
-        return x
-
-    def eta(self, x: LinkTransfer, now: float) -> float:
-        """Completion time under CURRENT occupancy (exact if it persists)."""
-        self._advance(x.link, now)
-        n = max(1, len(self._active.get(x.link, ())))
-        t_bytes = now + x.remaining * n / self.link_bw(x.link)
-        return max(x.start_t + self.latency_s, t_bytes)
-
-    def poll(self, x: LinkTransfer, now: float) -> bool:
-        """Advance the link; True (and retire the transfer) once done."""
-        self._advance(x.link, now)
-        if x.remaining > 1e-3 or now < x.start_t + self.latency_s - 1e-12:
-            return False
-        xs = self._active.get(x.link)
-        if xs is None or x not in xs:
-            return False               # stale poll of a retired transfer
-        del xs[x]
-        if not xs:
-            del self._active[x.link]
-        x.done_t = now
-        self.completed += 1
-        self.bytes_moved += x.nbytes
-        self.busy_time += x.elapsed
-        self.queueing_delay += max(
-            0.0, x.elapsed - self.ideal_time(x.nbytes, x.link))
-        return True
-
-    def stats(self) -> Dict[str, float]:
-        n = max(1, self.completed)
-        return {
-            "transfers": self.completed,
-            "bytes_moved": self.bytes_moved,
-            "transfer_time_mean_s": self.busy_time / n,
-            "transfer_queue_delay_mean_s": self.queueing_delay / n,
-            "transfer_queue_delay_total_s": self.queueing_delay,
-            "peak_link_concurrency": max(
-                self.peak_concurrency.values(), default=0),
-        }
+__all__ = ["CostModel", "InstanceSpec", "LinkModel", "LinkTransfer",
+           "PEAK_FLOPS", "HBM_BW", "ICI_BW", "HBM_PER_CHIP"]

@@ -26,6 +26,7 @@ heads (stream-ordered dispatch, daemon v2).
 """
 from __future__ import annotations
 
+import math
 import threading
 import time
 from typing import Dict, List, Optional
@@ -78,13 +79,20 @@ class RealEngine:
     def __init__(self, model: Model, params, *, mode: str = "dynamic_pd",
                  max_num_seqs: int = 4, max_len: int = 256,
                  policy=None, admission: Optional[AdmissionPolicy] = None,
-                 sample: str = "greedy"):
+                 sample: str = "greedy", kv_chunk_layers: int = 0):
         self.model = model
         self.params = params
         self.mode = mode
         self.max_num_seqs = max_num_seqs
         self.max_len = max_len
         self.sample = sample
+        # disagg KV transport: split the packed cache into this many
+        # layer-group chunks pipelined over memcpy_peer (0 = one blob).
+        # Chunks ride the same copy-engine stream, so they serialize on
+        # the DMA engine while the destination's readback starts as soon
+        # as the cross-device event edge for the LAST chunk resolves —
+        # outputs stay byte-identical to the one-blob path.
+        self.kv_chunk_layers = int(kv_chunk_layers)
         self._lock = threading.RLock()
         self._all_done = threading.Condition(self._lock)
         # control plane (v3): dispatch policies resolve through the registry
@@ -246,32 +254,62 @@ class RealEngine:
             self._ensure_decode_locked()
 
     # --------------------------------------------- disagg: KV cache transfer
+    def _kv_chunk_bounds(self, blob_nbytes: int, spec) -> List[tuple]:
+        """(offset, nbytes) per chunk: the packed blob split on LAYER
+        boundaries (pack order is the cache pytree's leaf order) into up
+        to ``kv_chunk_layers`` near-even groups — never mid-array."""
+        if self.kv_chunk_layers <= 1 or len(spec) <= 1:
+            return [(0, blob_nbytes)]
+        sizes = [int(np.prod(shape, dtype=np.int64))
+                 * np.dtype(dtype).itemsize for shape, dtype in spec]
+        n = min(self.kv_chunk_layers, len(sizes))
+        per = max(1, math.ceil(len(sizes) / n))
+        bounds, off = [], 0
+        for i in range(0, len(sizes), per):
+            nb = sum(sizes[i:i + per])
+            bounds.append((off, nb))
+            off += nb
+        return bounds
+
     def _transfer_kv(self, req: Request, single_cache, tok: int) -> None:
         """Move the prefilled KV cache from the prefill device (0) to the
         decode device (1) through backend-owned buffers: H2D on device 0,
-        ``memcpy_peer`` on the copy-engine stream, then a cross-device
-        (shared) event orders device 1's D2H readback after the peer copy —
-        the daemons' happens-before graph spans both devices."""
+        ``memcpy_peer`` on the copy-engine stream — chunked on layer
+        boundaries when ``kv_chunk_layers`` > 1, so the chunks pipeline on
+        the copy engine — then ONE cross-device (shared) event after the
+        last chunk orders device 1's D2H readbacks after every peer copy
+        (the daemons' happens-before graph spans both devices)."""
         blob, treedef, spec = _pack_cache(single_cache)
         cp, cd = self.client, self.client_d
         sp, sd = cp.copy_engine_stream(), cd.copy_engine_stream()
-        h_src = cp.malloc(blob.nbytes, tag="kv-transfer")
-        h_dst = cd.malloc(blob.nbytes, tag="kv-transfer")
         ev = self.session.create_shared_event()
-        cp.memcpy(h_src, blob, vstream=sp)
-        cp.memcpy_peer(self.session.daemon(1), h_dst, h_src, blob.nbytes,
-                       vstream=sp, meta={"req_id": req.req_id})
+        bounds = self._kv_chunk_bounds(blob.nbytes, spec)
+        handles = []
+        for i, (off, nb) in enumerate(bounds):
+            h_src = cp.malloc(nb, tag="kv-transfer")
+            h_dst = cd.malloc(nb, tag="kv-transfer")
+            handles.append((h_src, h_dst))
+            cp.memcpy(h_src, blob[off:off + nb], vstream=sp)
+            cp.memcpy_peer(self.session.daemon(1), h_dst, h_src, nb,
+                           vstream=sp,
+                           meta={"req_id": req.req_id, "kv_chunk": i,
+                                 "kv_chunks": len(bounds)})
         cp.record_event(ev, sp)
         cd.wait_event(ev, sd)               # released by device 0's record
-        fut = cd.memcpy(None, h_dst, blob.nbytes, vstream=sd)
-        fut.add_done_callback(
+        # same-stream FIFO: the LAST readback completes last, with every
+        # earlier chunk's future already resolved
+        futs = [cd.memcpy(None, h_dst, nb, vstream=sd)
+                for (_, h_dst), (_, nb) in zip(handles, bounds)]
+        futs[-1].add_done_callback(
             lambda f: self._kv_arrived(req, tok, treedef, spec,
-                                       h_src, h_dst, ev, f))
+                                       handles, ev, futs))
 
     def _kv_arrived(self, req: Request, tok: int, treedef, spec,
-                    h_src: int, h_dst: int, ev: int, fut) -> None:
+                    handles, ev: int, futs) -> None:
         try:
-            cache = _unpack_cache(fut.result(), treedef, spec)
+            parts = [np.asarray(f.result(), dtype=np.uint8) for f in futs]
+            blob = parts[0] if len(parts) == 1 else np.concatenate(parts)
+            cache = _unpack_cache(blob, treedef, spec)
         except Exception:
             with self._lock:
                 req.state = RequestState.FAILED
@@ -279,9 +317,10 @@ class RealEngine:
                 self._all_done.notify_all()
             return
         finally:
-            try:  # the peer copy completed before the readback (event edge)
-                self.client.free(h_src)
-                self.client_d.free(h_dst)
+            try:  # the peer copies completed before the readbacks (event edge)
+                for h_src, h_dst in handles:
+                    self.client.free(h_src)
+                    self.client_d.free(h_dst)
                 self.session.destroy_shared_event(ev)
             except Exception:
                 pass  # teardown race on shutdown: session close cleans up

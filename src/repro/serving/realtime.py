@@ -21,9 +21,11 @@ this mode carries real scheduling jitter; tests that assert on it use the
     threads make progress concurrently.
   * :class:`RealTimeSimBackend` — executes LAUNCH ops as scaled sleeps and
     paces non-launch data ops (the daemon's ``pace`` hook).
-  * :class:`ThreadedLinkTimer` — blocks a copy-engine thread for a
-    transfer's occupancy-aware duration on the shared ``LinkModel`` (the
-    threaded analogue of the stepped ``LinkDriver``).
+
+The occupancy-aware transfer timing this drive blocks its copy-engine
+threads on lives in the KV transport subsystem
+(:class:`repro.transport.ThreadedLinkTimer`, re-exported here for one
+release) — the threaded analogue of the stepped ``LinkDriver``.
 """
 from __future__ import annotations
 
@@ -36,7 +38,7 @@ from typing import Callable, List, Optional, Tuple
 
 from repro.core.api import OpDescriptor, OpType
 
-from repro.serving.costmodel import LinkModel
+from repro.transport import ThreadedLinkTimer  # noqa: F401  (re-export)
 
 
 class WallClock:
@@ -105,33 +107,6 @@ class RealTimeLoop:
                     continue
                 _, _, fn = heapq.heappop(self._heap)
             fn()
-
-
-class ThreadedLinkTimer:
-    """Occupancy-aware transfer timing for the threaded drive.
-
-    Blocks the calling (copy-engine) thread until the transfer completes on
-    the shared :class:`LinkModel` — the engine IS busy for the duration,
-    exactly like the stepped drive's one-op-per-engine rule.  Concurrent
-    transfers from other daemons' copy threads contend on the same link and
-    stretch each other's ETAs; each sleeper re-polls at its current ETA."""
-
-    def __init__(self, model: LinkModel, clock: WallClock, scale: float):
-        self.model = model
-        self.clock = clock
-        self.scale = float(scale)
-        self._lock = threading.Lock()
-
-    def transfer(self, link, nbytes: float) -> None:
-        with self._lock:
-            x = self.model.start(link, nbytes, self.clock.t)
-        while True:
-            with self._lock:
-                if self.model.poll(x, self.clock.t):
-                    return
-                eta = self.model.eta(x, self.clock.t)
-            wall = (eta - self.clock.t) * self.scale
-            time.sleep(max(wall, 1e-4))
 
 
 class RealTimeSimBackend:

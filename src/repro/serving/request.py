@@ -40,6 +40,10 @@ class Request:
     slot: int = -1
     generated: int = 0
     retries: int = 0
+    # chunked KV transport: True while this request's KV is streaming to a
+    # decode instance (set/cleared by the cluster; a request cannot retire
+    # or migrate while its pages are partly in flight)
+    kv_stream_pending: bool = False
 
     @property
     def ttft(self) -> float:
@@ -72,6 +76,7 @@ class Request:
         self.generated = 0
         self.token_times = []
         self.first_token_time = -1.0
+        self.kv_stream_pending = False
         self.retries += 1
 
     @property
@@ -88,6 +93,12 @@ def summarize(requests: List[Request]) -> dict:
     out_tokens = sum(r.generated for r in done)
     ttfts = sorted(r.ttft for r in done if r.first_token_time >= 0)
     tpots = sorted(r.tpot for r in done if len(r.token_times) >= 2)
+    # time to SECOND token: under disaggregation the first token comes out
+    # of prefill and the second only after the KV reaches a decode
+    # instance, so this is the client-visible cost of the KV transfer
+    # (what chunked streaming shrinks: decode starts on the first chunk)
+    ttsts = sorted(r.token_times[1] - r.arrival_time for r in done
+                   if len(r.token_times) >= 2)
 
     def pct(xs, q):
         if not xs:
@@ -106,4 +117,6 @@ def summarize(requests: List[Request]) -> dict:
         "ttft_p99_s": pct(ttfts, 0.99),
         "tpot_mean_s": sum(tpots) / len(tpots) if tpots else float("nan"),
         "tpot_p99_s": pct(tpots, 0.99),
+        "ttst_mean_s": sum(ttsts) / len(ttsts) if ttsts else float("nan"),
+        "ttst_p95_s": pct(ttsts, 0.95),
     }

@@ -58,9 +58,13 @@ from repro.sched import (AdmissionPolicy, AdmissionView, ClusterPolicy,
                          DynamicPDConfig, DynamicPDPolicy, FIFOPolicy,
                          GatedAdmission, UngatedAdmission, make_policy,
                          policy_kind)
-from repro.serving.costmodel import (CostModel, InstanceSpec, LinkModel,
-                                     LinkTransfer)
+from repro.serving.costmodel import CostModel, InstanceSpec
 from repro.serving.request import Request, RequestState
+# KV transport subsystem: topology-resolved multi-hop paths, the path-aware
+# link model, the stepped link driver, and chunked layer-wise KV streaming.
+# LinkDriver/LinkModel stay importable from here (one-release re-export).
+from repro.transport import (KVStreamer, LinkDriver, LinkModel,  # noqa: F401
+                             Topology)
 
 
 class SimClock:
@@ -126,43 +130,13 @@ class SimConfig:
     # switch can REBALANCE it onto a newly-borrowed instance (work already
     # on a daemon cannot move).  Work-conserving for any window >= 2.
     prefill_window: int = 0
-
-
-class LinkDriver:
-    """Glues a LinkModel onto the EventLoop.
-
-    Processor-shared links change EVERY active transfer's finish time when
-    one starts or completes, and the event loop cannot cancel scheduled
-    events — so the driver schedules a completion *poll* at each transfer's
-    current ETA and re-schedules all peers on every occupancy change.
-    Early (stale) polls are harmless: ``LinkModel.poll`` just reports
-    not-done and a later poll is already queued."""
-
-    def __init__(self, loop: EventLoop, model: LinkModel):
-        self.loop = loop
-        self.model = model
-        self._done_cbs: Dict[LinkTransfer, Callable] = {}
-
-    def start(self, link, nbytes: float, done_cb: Callable) -> LinkTransfer:
-        x = self.model.start(link, nbytes, self.loop.clock.t)
-        self._done_cbs[x] = done_cb
-        self._schedule_polls(link)
-        return x
-
-    def _schedule_polls(self, link) -> None:
-        now = self.loop.clock.t
-        for x in self.model.active_on(link):
-            self.loop.at(self.model.eta(x, now),
-                         lambda x=x: self._poll(x))
-
-    def _poll(self, x: LinkTransfer) -> None:
-        cb = self._done_cbs.get(x)
-        if cb is None:
-            return                     # already completed via an earlier poll
-        if self.model.poll(x, self.loop.clock.t):
-            del self._done_cbs[x]
-            self._schedule_polls(x.link)   # peers now finish earlier
-            cb(x)
+    # KV transport (repro.transport): the interconnect topology that
+    # resolves (src, dst) transfer paths (None = flat destination-ingress
+    # contention at transfer_bw, the v2 behavior), and the layer-wise
+    # streaming granularity in token-equivalents per chunk (0 = one blob
+    # per request, the v2 behavior).
+    topology: Optional[Topology] = None
+    kv_chunk_tokens: int = 0
 
 
 class SimInstance:
@@ -205,6 +179,12 @@ class SimInstance:
         self.prefilling: Dict[int, Request] = {}  # prefill queued/in-flight
         self.decode_pending: List[Request] = []    # prefilled, awaiting slot
         self.active: List[Request] = []            # decoding
+        # finished decoding but their KV tail is still streaming in: they
+        # cannot retire (pages partly in flight) until the stream completes
+        self.stalled: Dict[int, Request] = {}
+        self._stall_start: Dict[int, float] = {}
+        self.decode_stall_s = 0.0
+        self.stalls = 0
         self.kv_capacity = cost.kv_capacity_tokens(
             spec, sim_cfg.kv_reserve_frac)
         if self.kv_capacity <= 0:
@@ -290,6 +270,13 @@ class SimInstance:
 
     def _prefill_done(self, req: Request, fut) -> None:
         with self._lock:
+            if self.failed:
+                # threaded drive: an op already EXECUTING on its engine
+                # thread when the fault hit still completes — but its
+                # result is void and the request was re-routed by the
+                # fault handler (the stepped drive abandons such ops in
+                # _complete; this is the same rule at the callback level)
+                return
             self.prefilling.pop(req.req_id, None)
             try:
                 fut.result()
@@ -301,6 +288,11 @@ class SimInstance:
             if self.on_prefill_done is not None:
                 self.on_prefill_done(self, req)
             else:
+                # the token emitted at prefill end appends its KV here —
+                # without this, retirement (prompt + generated) frees one
+                # more token than was ever charged (the cluster's
+                # _admit_local does the same for routed admissions)
+                self.kv_used += req.generated
                 self.admit_decode(req)
 
     # ------------------------------------------------------------- decode
@@ -322,10 +314,19 @@ class SimInstance:
         prompt + generated tokens for each) — the cluster moves each one
         over the copy-engine path and only then frees the source copy, the
         same conservation rule as prefill-side transfers.  An in-flight
-        decode op settles harmlessly against the emptied active list."""
+        decode op settles harmlessly against the emptied active list.
+
+        Requests whose KV is still STREAMING IN are pinned here: their
+        pages are partly in flight from another source, so they cannot
+        migrate mid-stream — they finish decoding in place (in-flight work
+        completes, the same rule as prefills during a prefill->decode
+        flip)."""
         with self._lock:
-            drained = self.decode_pending + self.active
-            self.decode_pending, self.active = [], []
+            drained = [r for r in self.decode_pending + self.active
+                       if not r.kv_stream_pending]
+            self.decode_pending = [r for r in self.decode_pending
+                                   if r.kv_stream_pending]
+            self.active = [r for r in self.active if r.kv_stream_pending]
             return drained
 
     def _fill_slots(self) -> None:
@@ -382,6 +383,8 @@ class SimInstance:
     def _decode_done(self, fut) -> None:
         with self._lock:
             self._decode_op_inflight = False
+            if self.failed:
+                return  # void completion of an in-flight op (see above)
             try:
                 fut.result()
             except Exception:
@@ -395,15 +398,53 @@ class SimInstance:
                     finished.append(r)
             for r in finished:
                 self.active.remove(r)
-                self.kv_used -= r.total_tokens
-                r.state = RequestState.DONE
-                r.finish_time = self.now
-                if self.on_request_done is not None:
-                    self.on_request_done(self, r)
+                if r.kv_stream_pending:
+                    # decode outran the inbound KV stream: the request
+                    # cannot retire while its pages are partly in flight —
+                    # park it until the tail lands (decode stall)
+                    self.stalled[r.req_id] = r
+                    self._stall_start[r.req_id] = self.now
+                    self.stalls += 1
+                    continue
+                self._retire(r)
             if finished:
                 self._retry_parked()
             self._fill_slots()
             self._ensure_decode_op()
+
+    def _retire(self, r: Request) -> None:
+        """Free a finished request's pages and report completion."""
+        self.kv_used -= r.total_tokens
+        r.state = RequestState.DONE
+        r.finish_time = self.now
+        if self.on_request_done is not None:
+            self.on_request_done(self, r)
+
+    def finish_stalled(self, req: Request) -> None:
+        """The inbound KV stream completed: retire the request if decode
+        already finished (accounting the stall), else no-op — it is still
+        active/queued and will retire through ``_decode_done``."""
+        with self._lock:
+            r = self.stalled.pop(req.req_id, None)
+            if r is None:
+                return
+            self.decode_stall_s += self.now - self._stall_start.pop(
+                r.req_id, self.now)
+            self._retire(r)
+            self._retry_parked()
+            self._fill_slots()
+            self._ensure_decode_op()
+
+    def remove_request(self, req: Request) -> None:
+        """Drop a not-yet-finished request from every decode queue (its
+        inbound stream died with the source; the cluster re-routes it)."""
+        with self._lock:
+            if req in self.decode_pending:
+                self.decode_pending.remove(req)
+            if req in self.active:
+                self.active.remove(req)
+            if self.stalled.pop(req.req_id, None) is not None:
+                self._stall_start.pop(req.req_id, None)
 
     def _retry_parked(self) -> None:
         """Freed slots/KV may admit waiting or parked requests."""
@@ -462,8 +503,10 @@ class SimInstance:
             lost.extend(self.prefilling.values())  # ops queued or in flight
             lost.extend(self.decode_pending)
             lost.extend(self.active)
+            lost.extend(self.stalled.values())     # awaiting their KV tail
             self.prefill_waiting, self.decode_pending, self.active = [], [], []
             self.prefilling = {}
+            self.stalled, self._stall_start = {}, {}
             self.kv_used = 0
             self.kv_in_transit = 0
         self.daemon.fail(requeue_sink=lambda op: None)
@@ -484,7 +527,7 @@ class DeploymentSpec:
     The ``*_policy`` fields name control-plane policies from the
     ``repro.sched`` registry; empty strings pick the mode's historical
     default, so v2 specs behave identically."""
-    mode: str                        # disagg | static_colocate | dynamic_pd | static_slice
+    mode: str            # disagg | static_colocate | dynamic_pd | static_slice
     prefill_instances: int = 0       # disagg only
     prefill_chips: int = 0
     decode_instances: int = 0
@@ -549,9 +592,26 @@ class Cluster:
         # the threaded drive mutates state from daemon engine threads
         # (uncontended in the stepped drive)
         self._lock = threading.RLock()
-        # shared interconnect: one ingress link per instance, occupancy-aware
+        # KV transport subsystem: the topology resolves every (src, dst)
+        # pair to a multi-hop segment path (flat = destination ingress
+        # only, the v2 behavior), the path-aware LinkModel rates transfers
+        # at the min per-segment processor share, and the KVStreamer
+        # splits each request's KV into layer-wise chunks (0 = one blob)
+        # each cluster owns a COPY of the configured topology: fail_spine
+        # mutates routing state, and one SimConfig is routinely reused
+        # across a sweep of clusters
+        t = self.sim_cfg.topology
+        self.topology = dataclasses.replace(
+            t, bw_overrides=dict(t.bw_overrides),
+            failed_spines=set(t.failed_spines)) if t is not None \
+            else Topology.flat(bw=self.sim_cfg.transfer_bw)
         self.link_model = LinkModel(bw=self.sim_cfg.transfer_bw,
-                                    latency_s=self.sim_cfg.transfer_latency_s)
+                                    latency_s=self.sim_cfg.transfer_latency_s,
+                                    topology=self.topology)
+        self.streamer = KVStreamer(
+            self.cost.kv_bytes_per_token(),
+            chunk_tokens=self.sim_cfg.kv_chunk_tokens,
+            n_layers=max(1, cfg.num_attention_layers()))
         if drive == "stepped":
             self.loop = EventLoop()
             self.link_driver = LinkDriver(self.loop, self.link_model)
@@ -575,10 +635,11 @@ class Cluster:
         self.policy.bind(self)
         self.role_flips = 0
         self._tick_armed = False
-        # transfer-id -> {"req", "src", "dst", "tokens", "aborted"} while a
-        # KV transfer is in flight (fault handling + conservation checks).
+        # transfer-id -> {"req", "src", "dst", "tokens", "remaining",
+        # "dst_charged", "admitted", "aborted"} while a KV stream is in
+        # flight (fault handling + per-chunk conservation checks).
         # Keyed by a UNIQUE id, not req_id: a re-routed request may start a
-        # second transfer while its aborted first one is still settling.
+        # second stream while its aborted first one is still settling.
         self.inflight_transfers: Dict[int, Dict] = {}
         self._transfer_ids = itertools.count(1)
         self._build()
@@ -696,22 +757,34 @@ class Cluster:
 
     def _transfer_to_decode(self, src: SimInstance, req: Request,
                             tokens: Optional[int] = None) -> None:
-        """Move a request's KV to a decode instance through the source's
+        """Stream a request's KV to a decode instance through the source's
         copy-engine stream.  Two callers: prefill completion (``tokens`` =
         the prompt, as in v2) and decode-drain **migration** during a role
-        switch (``tokens`` = prompt + generated so far).  The transfer is a
-        real daemon op timed by the shared LinkModel, so concurrent
-        transfers into one decode instance contend for its ingress
-        bandwidth — the cost static disaggregation pays and dynamic
-        co-location avoids.
+        switch (``tokens`` = prompt + generated so far).
 
-        KV conservation: the source keeps the pages charged (in
-        ``kv_in_transit``) until the destination holds the copy; only then
-        does the source free them and the destination charge its own."""
+        The KV moves as layer-wise chunks (``KVStreamer``; one blob when
+        ``kv_chunk_tokens=0``), each a real daemon op on the copy engine
+        timed by the path-aware LinkModel: every chunk occupies the full
+        ``Topology``-resolved path (source egress -> spine -> destination
+        ingress) and contends with any transfer sharing ANY segment.  The
+        destination admits the request for decode as soon as the FIRST
+        chunk lands; the tail streams in underneath the early decode
+        steps.
+
+        KV conservation, now per chunk: the source keeps each chunk's
+        pages charged (``kv_in_transit``) until that chunk lands; only
+        then does the source free them and the destination charge its
+        own — ``check_kv_conservation`` holds at every mid-stream point."""
         with self._lock:
             if tokens is None:
                 tokens = req.prompt_len
-            if src.role == "decode" and not src.failed:
+            if src.failed:
+                # a failed source's ledgers are zeroed — charging a stream
+                # against them would leak kv_in_transit forever; the
+                # request's pages died with the instance, so restart it
+                self._reroute(req)
+                return
+            if src.role == "decode":
                 # the source flipped back to decode while this prefill was
                 # in flight: keep the KV where it is — no transfer
                 self._admit_local(src, req)
@@ -725,17 +798,28 @@ class Cluster:
             if dst is src:
                 self._admit_local(src, req)
                 return
+            path = self.topology.path(src.name, dst.name)
+            if any(s in self.link_model.failed_segments for s in path):
+                # the only route crosses a severed segment (every spine
+                # plane failed): KV cannot reach any decode instance —
+                # fail honestly instead of "delivering" over dead fabric
+                src.kv_used -= tokens
+                req.state = RequestState.FAILED
+                return
             src.kv_in_transit += tokens
             xid = next(self._transfer_ids)
             self.inflight_transfers[xid] = {
                 "req": req, "src": src, "dst": dst, "tokens": tokens,
-                "aborted": False}
-            fut = src.client.memcpy_peer(
-                dst.daemon, None, None,
-                nbytes=int(tokens * self.cost.kv_bytes_per_token()),
-                vstream=src.stream_c, link=("ingress", dst.name),
-                meta={"req_id": req.req_id})
-            fut.add_done_callback(lambda f, x=xid: self._transfer_done(x, f))
+                "remaining": tokens,   # token-equivalents not yet landed
+                "dst_charged": 0,      # token-equivalents charged at dst
+                "admitted": False,     # decode admission (first chunk)
+                "aborted": False, "path": path}
+            req.kv_stream_pending = True
+            self.streamer.stream(
+                src.client, dst.daemon, tokens, path=path,
+                vstream=src.stream_c, meta={"req_id": req.req_id},
+                on_chunk=lambda i, ctoks, last, f, x=xid:
+                    self._chunk_done(x, ctoks, last, f))
             src.kick()
 
     def _admit_local(self, inst: SimInstance, req: Request) -> None:
@@ -746,38 +830,94 @@ class Cluster:
         inst.kv_used += req.generated
         inst.admit_decode(req, charge_kv=False)
 
-    def _transfer_done(self, xid: int, fut) -> None:
+    def _chunk_done(self, xid: int, ctoks: int, last: bool, fut) -> None:
+        """One KV chunk's copy op settled.  Source pages for THIS chunk are
+        freed (whatever happens next — the copy either landed or the
+        request is being re-routed), the destination charges them if the
+        chunk landed, and the request is admitted for decode on the first
+        landed chunk / finalized on the last."""
         with self._lock:
-            entry = self.inflight_transfers.pop(xid, None)
+            entry = self.inflight_transfers.get(xid)
             if entry is None:
-                return                   # source failed: future never fired
+                return                   # source failed: registry entry
+                #                          dropped, accounting zeroed
             req, src, dst = entry["req"], entry["src"], entry["dst"]
-            tokens = entry["tokens"]
+            entry["remaining"] -= ctoks
             if not src.failed:
-                # free the source copy only now that the destination has one
-                src.kv_in_transit -= tokens
-                src.kv_used -= tokens
+                # free the source copy of this chunk only now that it is
+                # settled; freed pages may admit parked prefills — the
+                # capacity win of streaming over one-blob transfers
+                src.kv_in_transit -= ctoks
+                src.kv_used -= ctoks
                 assert src.kv_used >= 0 and src.kv_in_transit >= 0, \
                     (src.name, src.kv_used, src.kv_in_transit)
-                src._retry_parked()      # freed pages may admit parked work
-            failed_transfer = False
+                src._retry_parked()
+            failed_chunk = False
             try:
                 fut.result()
             except Exception:
-                failed_transfer = True   # transfer errored on the device
+                failed_chunk = True      # chunk errored on the device
+            if any(s in self.link_model.failed_segments
+                   for s in entry["path"]):
+                # the op drained over a severed segment (fail_spine tears
+                # flows down so copy engines never wedge) — the bytes were
+                # LOST, not delivered; never charge the destination
+                failed_chunk = True
+            if last:
+                self.inflight_transfers.pop(xid, None)
             if entry["aborted"]:
                 return                   # fault handling already re-routed it
-            if failed_transfer or dst.failed:
-                # destination lost: nothing arrived; restart from prefill
+            if failed_chunk or dst.failed:
+                # destination lost mid-stream: nothing more arrives.  Undo
+                # any partial landing (a failed dst zeroed its own ledger)
+                # and restart the request from prefill.
+                entry["aborted"] = True
+                if not dst.failed:
+                    self._evict_partial(entry)
                 self._reroute(req)
                 return
-            if dst.role == "decode" or dst.role == "both":
-                dst.admit_decode(req, charge_kv=True)
-            else:
-                # dst flipped to prefill while the KV was in flight: the
-                # copy DID land (pages now charged here) — migrate onward
-                dst.kv_used += req.prompt_len + req.generated
-                self._transfer_to_decode(dst, req, tokens=req.total_tokens)
+            # chunk landed: the destination now holds these pages
+            dst.kv_used += ctoks
+            entry["dst_charged"] += ctoks
+            if not entry["admitted"] and dst.role in ("decode", "both"):
+                # first landed chunk (or dst flipped back to decode
+                # mid-stream): begin decode under the incoming tail.  The
+                # transfer was sized at issue time — charge the tokens
+                # generated since (prefill's first token / none for a
+                # role-switch migration).
+                entry["admitted"] = True
+                dst.kv_used += req.prompt_len + req.generated \
+                    - entry["tokens"]
+                dst.admit_decode(req, charge_kv=False)
+            if last:
+                req.kv_stream_pending = False
+                if entry["admitted"]:
+                    dst.finish_stalled(req)   # retire if decode outran us
+                else:
+                    # dst flipped to prefill while the KV was in flight:
+                    # the full copy DID land (pages charged here via the
+                    # chunks) — top up to current size and migrate onward
+                    dst.kv_used += req.prompt_len + req.generated \
+                        - entry["tokens"]
+                    self._transfer_to_decode(dst, req,
+                                             tokens=req.total_tokens)
+
+    def _evict_partial(self, entry: Dict) -> None:
+        """Refund a live destination for a stream that died mid-flight:
+        every page charged there for this request (landed chunks, the
+        admission top-up, decode appends) comes back off its ledger, and
+        the request leaves its decode queues."""
+        req, dst = entry["req"], entry["dst"]
+        if entry["admitted"]:
+            # charged so far: dst_charged + (prompt + gen_admit - tokens)
+            # + decode appends = dst_charged - tokens + total_tokens
+            dst.kv_used -= (entry["dst_charged"] - entry["tokens"]
+                            + req.total_tokens)
+            dst.remove_request(req)
+        else:
+            dst.kv_used -= entry["dst_charged"]
+        assert dst.kv_used >= 0, (dst.name, dst.kv_used)
+        req.kv_stream_pending = False
 
     def _reroute(self, req: Request) -> None:
         with self._lock:
@@ -881,6 +1021,13 @@ class Cluster:
             out["retries"] = retries
         if self.link_model.completed:
             out.update(self.link_model.stats())
+            out["topology"] = self.topology.name
+            out["kv_chunk_tokens"] = self.sim_cfg.kv_chunk_tokens
+            # decode stalls: requests that finished decoding before their
+            # KV tail landed (visible cost of streaming too coarsely)
+            out["decode_stall_s"] = round(
+                sum(i.decode_stall_s for i in self.instances), 6)
+            out["decode_stalls"] = sum(i.stalls for i in self.instances)
         out["policy"] = self.policy_telemetry()
         return out
 
@@ -910,21 +1057,24 @@ class Cluster:
                          "decode_ops": i.daemon.backlog(Phase.DECODE),
                          "waiting": len(i.prefill_waiting),
                          "decode_pending": len(i.decode_pending),
-                         "active": len(i.active)}
+                         "active": len(i.active),
+                         "stalled": len(i.stalled)}
                 for i in self.instances},
         }
 
     def check_kv_conservation(self) -> None:
         """Invariant: KV pages are never double-freed or dropped while a
-        transfer is in flight — including migrations during a role switch
-        (the old path freed source pages at transfer START)."""
+        stream is in flight — at CHUNK granularity: a source's
+        ``kv_in_transit`` equals the not-yet-landed remainder of its
+        streams, so the check holds at every mid-stream point, including
+        migrations during a role switch and fault re-routing."""
         with self._lock:
             by_src: Dict[str, int] = {}
             for entry in self.inflight_transfers.values():
                 # aborted entries (dst died) still hold source pages until
-                # the source-side copy op completes and settles them
+                # each remaining chunk op completes and settles them
                 by_src[entry["src"].name] = \
-                    by_src.get(entry["src"].name, 0) + entry["tokens"]
+                    by_src.get(entry["src"].name, 0) + entry["remaining"]
             for inst in self.instances:
                 assert inst.kv_used >= 0, (inst.name, inst.kv_used)
                 assert inst.kv_in_transit >= 0, (inst.name,
@@ -954,16 +1104,27 @@ class Cluster:
         n_lost = len(lost)
         for xid, entry in list(self.inflight_transfers.items()):
             if entry["src"] is inst:
-                # the copy op was drained with the daemon: no completion
-                # callback will fire, and fail() zeroed the KV accounting.
-                # An already-aborted entry (its DESTINATION died first) was
-                # re-routed then — don't resubmit the request a second time
+                # the remaining chunk ops were drained with the daemon: no
+                # completion callbacks will fire, and fail() zeroed the
+                # source accounting.  Chunks that already LANDED charged
+                # the destination (and may have admitted the request for
+                # decode) — evict that partial state before re-routing.
+                # An already-aborted entry (its DESTINATION died first)
+                # was re-routed then — don't resubmit a second time.
                 del self.inflight_transfers[xid]
                 if not entry["aborted"]:
+                    if not entry["dst"].failed:
+                        self._evict_partial(entry)
                     self._reroute(entry["req"])
                     n_lost += 1
             elif entry["dst"] is inst and not entry["aborted"]:
-                entry["aborted"] = True   # source op settles its KV later
+                entry["aborted"] = True   # source chunks settle their KV
+                #                           later as each op completes
+                if entry["admitted"]:
+                    # the request was decoding at the dead destination: it
+                    # is in `lost` (fail() drained the decode queues) and
+                    # the loop below re-routes it — don't do it twice
+                    continue
                 self._reroute(entry["req"])
                 n_lost += 1
         for r in lost:
@@ -973,6 +1134,37 @@ class Cluster:
             else:
                 r.state = RequestState.FAILED
         return n_lost
+
+    def fail_spine(self, index: int = 0) -> int:
+        """Sever one spine plane mid-run.  In-flight streams crossing it
+        lose their remaining bytes: the chunk ops drain immediately (the
+        copy engines never wedge behind a dead link), each affected
+        request's partial landing is evicted from its destination, and the
+        request restarts from prefill.  NEW transfers stripe over the
+        surviving planes (``Topology.fail_spine``); with NO surviving
+        plane, transfers fail honestly (requests end FAILED) rather than
+        "delivering" KV over dead fabric.  Returns the number of
+        re-routed requests; ``check_kv_conservation`` holds throughout."""
+        with self._lock:
+            self.topology.fail_spine(index)
+            seg = ("spine", index)
+            n = 0
+            for entry in self.inflight_transfers.values():
+                if seg not in entry.get("path", ()) or entry["aborted"]:
+                    continue
+                entry["aborted"] = True
+                if not entry["dst"].failed:
+                    self._evict_partial(entry)
+                self._reroute(entry["req"])
+                n += 1
+            if self.link_driver is not None:
+                self.link_model.fail_segment(seg, self.loop.clock.t)
+                self.link_driver.repoll()   # torn-down transfers drain now
+            else:
+                # threaded: the copy-engine threads mutate the model under
+                # the ThreadedLinkTimer's lock — sever it under that lock
+                self._link_timer.fail_segment(seg, self.loop.clock.t)
+            return n
 
     def slow_instance(self, name: str, factor: float) -> None:
         inst = next(i for i in self.instances if i.name == name)

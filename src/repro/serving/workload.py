@@ -1,7 +1,7 @@
 """Workload generators matching the paper's evaluation setups."""
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 

@@ -8,7 +8,7 @@ moments would not fit HBM (DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +42,9 @@ def lr_at(cfg: AdamWConfig, step):
 
 def adamw_init(cfg: AdamWConfig, params) -> Dict[str, Any]:
     dt = jnp.dtype(cfg.moment_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

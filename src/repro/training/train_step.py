@@ -4,8 +4,6 @@ see repro.distributed.collectives for the wire-level shard_map variant)."""
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,101 @@
+"""Drivers gluing the path-aware :class:`LinkModel` onto both drive modes.
+
+Processor-shared segments change EVERY sharing transfer's finish time when
+one starts or completes — and with multi-hop paths the blast radius is any
+flow crossing any segment of the changed path.  Both drivers therefore
+re-poll broadly on occupancy change:
+
+  * :class:`LinkDriver` (stepped) schedules a completion *poll* at each
+    transfer's current ETA on the discrete-event loop and re-schedules all
+    active transfers whenever one starts or finishes.  Early (stale) polls
+    are harmless: ``LinkModel.poll`` just reports not-done and a later
+    poll is already queued.
+  * :class:`ThreadedLinkTimer` (threaded) blocks the calling copy-engine
+    thread until its transfer completes on the shared model — the engine
+    IS busy for the duration, exactly like the one-op-per-engine rule —
+    re-polling at its current ETA as contending flows stretch it.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict
+
+from repro.transport.links import LinkModel, LinkTransfer
+
+
+class LinkDriver:
+    """Stepped drive: completion polls on the discrete-event loop."""
+
+    def __init__(self, loop, model: LinkModel):
+        self.loop = loop
+        self.model = model
+        self._done_cbs: Dict[LinkTransfer, Callable] = {}
+
+    def start(self, link, nbytes: float, done_cb: Callable) -> LinkTransfer:
+        x = self.model.start(link, nbytes, self.loop.clock.t)
+        self._done_cbs[x] = done_cb
+        self._schedule_polls(x.path)
+        return x
+
+    def repoll(self) -> None:
+        """Re-evaluate every active transfer's ETA now — call after an
+        out-of-band model change (a segment failure, a bandwidth edit)."""
+        self._schedule_polls(None)
+
+    def _schedule_polls(self, path) -> None:
+        """Re-poll transfers whose ETA may have moved: only flows sharing
+        at least one segment with ``path`` (None = all flows).  Occupancy
+        is count-based, so a start/finish cannot move the ETA of a flow
+        with a disjoint path — scoping keeps event churn linear in the
+        number of SHARING flows, not all flows."""
+        now = self.loop.clock.t
+        segs = None if path is None else set(path)
+        counts = self.model.occupancy()   # one scan for the whole batch
+        for x in self.model.active_transfers():
+            if segs is not None and segs.isdisjoint(x.path):
+                continue
+            self.loop.at(self.model.eta(x, now, counts),
+                         lambda x=x: self._poll(x))
+
+    def _poll(self, x: LinkTransfer) -> None:
+        cb = self._done_cbs.get(x)
+        if cb is None:
+            return                     # already completed via an earlier poll
+        if self.model.poll(x, self.loop.clock.t):
+            del self._done_cbs[x]
+            self._schedule_polls(x.path)   # sharing peers now finish earlier
+            cb(x)
+
+
+class ThreadedLinkTimer:
+    """Threaded drive: block the copy-engine thread for the occupancy-aware
+    duration, re-polling at the current ETA (``scale`` converts virtual
+    seconds to wall seconds, as in ``repro.serving.realtime``)."""
+
+    def __init__(self, model: LinkModel, clock, scale: float):
+        self.model = model
+        self.clock = clock
+        self.scale = float(scale)
+        self._lock = threading.Lock()
+
+    def fail_segment(self, seg, now: float) -> None:
+        """Sever a segment under THIS timer's lock — the copy-engine
+        threads mutate the shared model under it, so an out-of-band
+        caller (the cluster's fault injector runs on another thread) must
+        not race their poll/advance iteration."""
+        with self._lock:
+            self.model.fail_segment(seg, now)
+
+    def transfer(self, link, nbytes: float) -> None:
+        with self._lock:
+            x = self.model.start(link, nbytes, self.clock.t)
+        while True:
+            with self._lock:
+                if self.model.poll(x, self.clock.t):
+                    return
+                eta = self.model.eta(x, self.clock.t)
+            # cap the sleep so out-of-band model changes (segment failure,
+            # bandwidth edits) are noticed within a bounded wall delay
+            wall = (eta - self.clock.t) * self.scale
+            time.sleep(min(max(wall, 1e-4), 0.05))

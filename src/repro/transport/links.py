@@ -1,0 +1,297 @@
+"""Path-aware link model: multi-segment transfers with processor sharing.
+
+One :class:`LinkModel` owns the whole fabric.  A transfer occupies EVERY
+segment on its path (see :mod:`repro.transport.topology`) and its
+instantaneous rate is the **minimum over per-segment processor shares**:
+each segment splits its bandwidth evenly among the transfers crossing it,
+and a flow moves at its tightest segment's share.  Two flows that share
+only the spine slow each other down even though their endpoints differ —
+the contention the v2 destination-ingress-keyed model could not see.
+
+Pure state machine over a caller-supplied clock, same driving contract as
+v2: ``start`` opens a transfer, ``eta`` predicts completion under CURRENT
+occupancy, ``poll`` advances progress and reports completion.  Occupancy
+changes move every sharing peer's finish time, so drivers re-poll peers
+after any start/finish (``LinkDriver`` stepped / ``ThreadedLinkTimer``
+threaded, both in :mod:`repro.transport.drivers`).
+
+Paths: ``start`` accepts a single segment key (any hashable — the v2
+calling convention, including tuple keys like ``("ingress", "D0")``) or a
+multi-segment path as a **list** of segment keys / a tuple of ``(kind,
+name)`` segment tuples (what ``Topology.path`` returns).
+
+Stats are kept globally AND per segment (bytes carried, queueing delay
+attributed to the bottleneck segment, peak concurrency), so a benchmark
+can tell spine contention from ingress contention.
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, List, Optional, Tuple
+
+from repro.transport.topology import DEFAULT_LINK_BW, Topology
+
+
+def as_path(link) -> Tuple[Hashable, ...]:
+    """Normalize a link argument into a tuple of segment keys.
+
+    Lists are always paths; tuples are a path only when every element is
+    itself a ``(kind, name)`` segment tuple (a ``Topology.path`` result) —
+    otherwise the tuple IS one segment key (v2 used ``("ingress", name)``)."""
+    if isinstance(link, list):
+        return tuple(link)
+    if (isinstance(link, tuple) and link
+            and all(isinstance(s, tuple) and len(s) == 2 for s in link)):
+        return link
+    return (link,)
+
+
+def seg_key(seg: Hashable) -> str:
+    """Stable, JSON-friendly name for one segment ("spine:0", "ingress:D1")."""
+    if isinstance(seg, tuple) and len(seg) == 2:
+        return f"{seg[0]}:{seg[1]}"
+    return str(seg)
+
+
+class LinkTransfer:
+    """One in-flight transfer (identity equality: unique in-flight object)."""
+
+    __slots__ = ("path", "nbytes", "remaining", "start_t", "done_t", "lost")
+
+    def __init__(self, path: Tuple[Hashable, ...], nbytes: float,
+                 start_t: float):
+        self.path = path
+        self.nbytes = float(nbytes)
+        self.remaining = float(nbytes)
+        self.start_t = start_t
+        self.done_t = -1.0
+        self.lost = 0.0        # bytes declared lost to a severed segment
+
+    @property
+    def link(self) -> Hashable:
+        """Primary (destination-side) segment — the v2 single-link view."""
+        return self.path[-1]
+
+    @property
+    def elapsed(self) -> float:
+        return self.done_t - self.start_t
+
+
+class _SegStats:
+    __slots__ = ("nbytes", "queue_delay_s", "peak_concurrency", "transfers")
+
+    def __init__(self):
+        self.nbytes = 0.0
+        self.queue_delay_s = 0.0
+        self.peak_concurrency = 0
+        self.transfers = 0
+
+
+class LinkModel:
+    """Shared multi-segment interconnect with per-segment occupancy."""
+
+    def __init__(self, bw: float = DEFAULT_LINK_BW, latency_s: float = 1e-3,
+                 bw_by_link: Optional[Dict[Hashable, float]] = None,
+                 topology: Optional[Topology] = None):
+        self.bw = float(bw)
+        self.latency_s = float(latency_s)
+        self.bw_by_link: Dict[Hashable, float] = dict(bw_by_link or {})
+        self.topology = topology
+        self._active: Dict[LinkTransfer, None] = {}   # insertion-ordered set
+        self._last_t: Optional[float] = None
+        self.failed_segments: set = set()
+        # aggregate stats (benchmarks report transfer-queueing delay)
+        self.completed = 0             # DELIVERED transfers only
+        self.bytes_moved = 0.0         # bytes that actually crossed links
+        self.busy_time = 0.0           # sum of actual transfer durations
+        self.queueing_delay = 0.0      # sum of (actual - contention-free)
+        self.torn_down = 0             # transfers killed by fail_segment
+        self.bytes_lost = 0.0          # their undelivered remainders
+        self._seg_stats: Dict[Hashable, _SegStats] = {}
+
+    # ----------------------------------------------------------- bandwidth
+    def link_bw(self, seg: Hashable) -> float:
+        if seg in self.bw_by_link:
+            return self.bw_by_link[seg]
+        if self.topology is not None:
+            bw = self.topology.segment_bw(seg)
+            if bw is not None:
+                return bw
+        return self.bw
+
+    def _solo_bw(self, path: Tuple[Hashable, ...]) -> float:
+        return min(self.link_bw(s) for s in path)
+
+    def ideal_time(self, nbytes: float, link: Hashable = None) -> float:
+        """Contention-free reference duration of one transfer."""
+        path = as_path(link) if link is not None else None
+        bw = self._solo_bw(path) if path else self.bw
+        return self.latency_s + nbytes / bw
+
+    # ----------------------------------------------------------- occupancy
+    def _seg_counts(self) -> Dict[Hashable, int]:
+        counts: Dict[Hashable, int] = {}
+        for x in self._active:
+            for s in x.path:
+                counts[s] = counts.get(s, 0) + 1
+        return counts
+
+    def _rate(self, x: LinkTransfer, counts: Dict[Hashable, int]) -> float:
+        return min(self.link_bw(s) / counts[s] for s in x.path)
+
+    def _bottleneck(self, x: LinkTransfer,
+                    counts: Dict[Hashable, int]) -> Hashable:
+        return min(x.path, key=lambda s: self.link_bw(s) / counts[s])
+
+    def active_count(self, seg: Hashable) -> int:
+        return sum(1 for x in self._active if seg in x.path)
+
+    def active_on(self, seg: Hashable) -> List[LinkTransfer]:
+        return [x for x in self._active if seg in x.path]
+
+    def active_transfers(self) -> List[LinkTransfer]:
+        return list(self._active)
+
+    def _seg(self, seg: Hashable) -> _SegStats:
+        st = self._seg_stats.get(seg)
+        if st is None:
+            st = self._seg_stats[seg] = _SegStats()
+        return st
+
+    # ------------------------------------------------------------ dynamics
+    def _advance(self, now: float) -> None:
+        """Drain progress since the last update at each flow's min share.
+
+        Queueing delay is attributed to each flow's BOTTLENECK segment:
+        the extra time to move the bytes it moved this interval, relative
+        to its contention-free (solo) rate over the same path."""
+        if self.failed_segments:
+            for x in self._active:
+                if x.remaining > 0 and any(
+                        s in self.failed_segments for s in x.path):
+                    self._tear_down(x)  # drains at the next poll
+        if self._last_t is None:
+            self._last_t = now
+            return
+        dt = now - self._last_t
+        self._last_t = max(self._last_t, now)
+        if dt <= 0 or not self._active:
+            return
+        counts = self._seg_counts()
+        for x in self._active:
+            if x.remaining <= 0:
+                continue
+            rate = self._rate(x, counts)
+            moved = min(x.remaining, dt * rate)
+            x.remaining -= moved
+            if moved <= 0:
+                continue
+            for s in x.path:
+                self._seg(s).nbytes += moved
+            solo = self._solo_bw(x.path)
+            lost = moved / rate - moved / solo
+            if lost > 0:
+                self._seg(self._bottleneck(x, counts)).queue_delay_s += lost
+
+    def start(self, link, nbytes: float, now: float) -> LinkTransfer:
+        self._advance(now)
+        x = LinkTransfer(as_path(link), nbytes, now)
+        self._active[x] = None
+        counts = self._seg_counts()
+        for s in x.path:
+            st = self._seg(s)
+            st.transfers += 1
+            st.peak_concurrency = max(st.peak_concurrency, counts[s])
+        return x
+
+    def occupancy(self) -> Dict[Hashable, int]:
+        """Per-segment active-flow counts (a snapshot drivers may pass
+        back into ``eta`` to batch-estimate many flows without recomputing
+        the counts per call)."""
+        return self._seg_counts()
+
+    def eta(self, x: LinkTransfer, now: float,
+            counts: Optional[Dict[Hashable, int]] = None) -> float:
+        """Completion time under CURRENT occupancy (exact if it persists).
+        ``counts`` short-circuits the per-call occupancy scan when the
+        caller already holds a fresh ``occupancy()`` snapshot."""
+        self._advance(now)
+        if x not in self._active:
+            return max(now, x.done_t)
+        if counts is None:
+            counts = self._seg_counts()
+        if x.remaining <= 0:
+            return max(x.start_t + self.latency_s, now)
+        t_bytes = now + x.remaining / self._rate(x, counts)
+        return max(x.start_t + self.latency_s, t_bytes)
+
+    def _tear_down(self, x: LinkTransfer) -> None:
+        """Declare a flow's remaining bytes lost (severed segment): it
+        drains at the next poll but retires as torn-down, not delivered."""
+        x.lost += x.remaining
+        x.remaining = 0.0
+
+    def fail_segment(self, seg: Hashable, now: float) -> None:
+        """Sever one segment: transfers crossing it tear down (their
+        remaining bytes are LOST at the modeling level — the daemon op
+        completes so the copy engine is not wedged, and the caller aborts
+        the affected streams and re-routes their requests).  Later
+        transfers routed over the dead segment tear down the same way, so
+        a stale path cannot wedge a copy engine either."""
+        self._advance(now)
+        self.failed_segments.add(seg)
+        for x in self._active:
+            if seg in x.path and x.remaining > 0:
+                self._tear_down(x)
+
+    def poll(self, x: LinkTransfer, now: float) -> bool:
+        """Advance the fabric; True (and retire the transfer) once done."""
+        self._advance(now)
+        if x.remaining > 1e-3 or now < x.start_t + self.latency_s - 1e-12:
+            return False
+        if x not in self._active:
+            return False               # stale poll of a retired transfer
+        del self._active[x]
+        x.done_t = now
+        if x.lost > 0:
+            # torn down by a segment failure: the undelivered remainder is
+            # LOST, not moved — keep it out of the delivery aggregates so
+            # fault runs don't report lost bytes as throughput
+            self.torn_down += 1
+            self.bytes_lost += x.lost
+            self.bytes_moved += x.nbytes - x.lost
+            return True
+        self.completed += 1
+        self.bytes_moved += x.nbytes
+        self.busy_time += x.elapsed
+        self.queueing_delay += max(
+            0.0, x.elapsed - self.ideal_time(x.nbytes, x.path))
+        return True
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, float]:
+        n = max(1, self.completed)
+        per_link = {
+            seg_key(seg): {
+                "bytes": st.nbytes,
+                "transfers": st.transfers,
+                "queue_delay_s": round(st.queue_delay_s, 6),
+                "peak_concurrency": st.peak_concurrency,
+            }
+            for seg, st in sorted(self._seg_stats.items(),
+                                  key=lambda kv: seg_key(kv[0]))
+        }
+        out = {
+            "transfers": self.completed,
+            "bytes_moved": self.bytes_moved,
+            "transfer_time_mean_s": self.busy_time / n,
+            "transfer_queue_delay_mean_s": self.queueing_delay / n,
+            "transfer_queue_delay_total_s": self.queueing_delay,
+            "peak_link_concurrency": max(
+                (st.peak_concurrency for st in self._seg_stats.values()),
+                default=0),
+            "per_link": per_link,
+        }
+        if self.torn_down:
+            out["transfers_torn_down"] = self.torn_down
+            out["bytes_lost"] = self.bytes_lost
+        return out

@@ -386,10 +386,12 @@ def test_double_fault_dst_then_src_no_duplicate_request():
 
 # ------------------------------------------------- real engine disagg mode
 @pytest.mark.slow
-def test_engine_disagg_kv_transfer_matches_dynamic():
+@pytest.mark.parametrize("kv_chunk_layers", [0, 4])
+def test_engine_disagg_kv_transfer_matches_dynamic(kv_chunk_layers):
     """RealEngine mode='disagg': the KV cache crosses devices through
-    malloc/H2D/memcpy_peer/shared-event/D2H — and greedy outputs are
-    byte-identical to single-device dynamic co-location."""
+    malloc/H2D/memcpy_peer/shared-event/D2H — as one blob or pipelined
+    layer-group chunks — and greedy outputs are byte-identical to
+    single-device dynamic co-location."""
     import jax
     from repro.configs import get_config
     from repro.distributed.sharding import unbox
@@ -410,7 +412,7 @@ def test_engine_disagg_kv_transfer_matches_dynamic():
     outs = {}
     for mode in ("dynamic_pd", "disagg"):
         eng = RealEngine(model, params, mode=mode, max_num_seqs=2,
-                         max_len=32)
+                         max_len=32, kv_chunk_layers=kv_chunk_layers)
         if mode == "disagg":
             assert eng.session.device_count() == 2
         try:

@@ -10,7 +10,8 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.api import OpDescriptor, OpType, Phase
 from repro.core.profiler import Profiler
-from repro.core.scheduler import DynamicPDPolicy, StaticTimeSlicePolicy
+from repro.sched import (DynamicPDPolicy, PolicyContext,
+                         StaticTimeSlicePolicy)
 from repro.serving.kvcache import OutOfPages, PagedAllocator
 from repro.training.optimizer import AdamWConfig, lr_at
 
@@ -75,7 +76,7 @@ def test_deficit_rr_share_convergence(share, arrivals):
     now = 0.0
     for _ in range(400):
         refill()
-        ph = pol.select(queues, prof, now)
+        ph = pol.select(PolicyContext(queues=queues, prof=prof, now=now))
         op = queues[ph].popleft()
         pol.on_dispatch(op, durations[ph])
         now += durations[ph]
@@ -95,17 +96,17 @@ def test_scheduler_work_conserving(share):
               Phase.OTHER: deque()}
     queues[Phase.DECODE].append(OpDescriptor(OpType.LAUNCH,
                                              phase=Phase.DECODE))
-    assert pol.select(queues, prof, 0.0) == Phase.DECODE
+    assert pol.select(PolicyContext(queues=queues, prof=prof)) == Phase.DECODE
     queues[Phase.DECODE].clear()
     queues[Phase.PREFILL].append(OpDescriptor(OpType.LAUNCH,
                                               phase=Phase.PREFILL))
-    assert pol.select(queues, prof, 0.0) == Phase.PREFILL
+    assert pol.select(PolicyContext(queues=queues, prof=prof)) == Phase.PREFILL
 
 
 def test_dynamic_ttft_guard_prevents_starvation():
     """A prefill older than the guard always dispatches next."""
     from collections import deque
-    from repro.core.scheduler import DynamicPDConfig
+    from repro.sched import DynamicPDConfig
     pol = DynamicPDPolicy(DynamicPDConfig(ttft_guard_s=0.5), decode_share=0.95)
     prof = Profiler()
     old_prefill = OpDescriptor(OpType.LAUNCH, phase=Phase.PREFILL)
@@ -114,7 +115,8 @@ def test_dynamic_ttft_guard_prevents_starvation():
               Phase.DECODE: deque([OpDescriptor(OpType.LAUNCH,
                                                 phase=Phase.DECODE)]),
               Phase.OTHER: deque()}
-    assert pol.select(queues, prof, now=1.0) == Phase.PREFILL
+    assert pol.select(
+        PolicyContext(queues=queues, prof=prof, now=1.0)) == Phase.PREFILL
 
 
 # ------------------------------------------------------------ lr schedule

@@ -47,14 +47,17 @@ def test_registry_rejects_unknown_names_and_knobs():
 def test_dispatch_base_class_alias():
     # the v2 name must keep working for isinstance checks and subclasses
     assert SchedulerPolicy is DispatchPolicy
-    from repro.core.scheduler import SchedulerPolicy as shim
-    assert shim is DispatchPolicy
+    # the repro.core.scheduler deprecation shim's one-release window ended
+    # with PR 3: the module is gone, not silently redirecting
+    with pytest.raises(ModuleNotFoundError):
+        import repro.core.scheduler  # noqa: F401
 
 
 # ------------------------------------------------------------ PolicyContext
 def test_policy_context_reaches_new_style_policies():
-    """Daemon-built contexts expose engine occupancy to pick(ctx); the
-    legacy 3-arg select() convention still drives the same policy."""
+    """Daemon-built contexts expose engine occupancy to pick(ctx); a
+    hand-built PolicyContext over a plain dict of deques drives the same
+    policy (the test-harness convention)."""
     seen = {}
 
     class Probe(DispatchPolicy):
@@ -90,13 +93,13 @@ def test_policy_context_reaches_new_style_policies():
     assert d.select_next(0.0) is None
     assert seen["free"]["compute"] == 0
 
-    # legacy direct-call convention (v2): plain dict of deques
+    # direct-call convention: a context over a plain dict of deques
     from collections import deque
     from repro.core.api import OpDescriptor, OpType
     queues = {Phase.PREFILL: deque([OpDescriptor(OpType.LAUNCH,
                                                  phase=Phase.PREFILL)]),
               Phase.DECODE: deque(), Phase.OTHER: deque()}
-    assert Probe().select(queues, None, 0.0) == Phase.PREFILL
+    assert Probe().select(PolicyContext(queues=queues)) == Phase.PREFILL
 
 
 def test_policy_context_link_stats_lazy():

@@ -436,10 +436,10 @@ def test_policy_sees_full_backlog_depth():
     seen = {}
 
     class Spy(FIFOPolicy):
-        def select(self, queues, prof, now):
-            seen["depth"] = len(queues[Phase.PREFILL])
-            seen["ready"] = sum(1 for _ in queues[Phase.PREFILL])
-            return super().select(queues, prof, now)
+        def pick(self, ctx):
+            seen["depth"] = len(ctx.queues[Phase.PREFILL])
+            seen["ready"] = sum(1 for _ in ctx.queues[Phase.PREFILL])
+            return super().pick(ctx)
 
     class Tick:
         t = 0.0

@@ -4,7 +4,7 @@ import copy
 import pytest
 
 from repro.configs import get_config
-from repro.core.scheduler import DynamicPDConfig
+from repro.sched import DynamicPDConfig
 from repro.serving import (Cluster, DeploymentSpec, deployment_6p2d,
                            deployment_dynamic, make_workload)
 from repro.serving.request import RequestState
