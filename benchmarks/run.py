@@ -26,6 +26,7 @@ MODULES = [
     ("fig56", "benchmarks.timeslice_sweep"),
     ("role_switch", "benchmarks.role_switch"),
     ("kv_streaming", "benchmarks.kv_streaming"),
+    ("microbatch_prefill", "benchmarks.microbatch_prefill"),
     ("roofline", "benchmarks.roofline"),
     ("kernels", "benchmarks.kernels_microbench"),
 ]

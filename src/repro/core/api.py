@@ -49,6 +49,7 @@ class OpType(str, enum.Enum):
     MEMCPY_PEER = "memcpy_peer"    # cross-device D2D through the copy engine
     CREATE_STREAM = "create_stream"
     DESTROY_STREAM = "destroy_stream"
+    BIND_STREAM_QUEUE = "bind_stream_queue"  # pin a stream to one exec queue
     CREATE_EVENT = "create_event"
     DESTROY_EVENT = "destroy_event"
     RECORD_EVENT = "record_event"
@@ -60,8 +61,8 @@ class OpType(str, enum.Enum):
 # Verbs that only mutate handle tables: they complete inline at enqueue and
 # never wait behind compute (cheap bookkeeping, paper §3.2).
 CONTROL_OPS = (OpType.MALLOC, OpType.FREE, OpType.CREATE_STREAM,
-               OpType.DESTROY_STREAM, OpType.CREATE_EVENT,
-               OpType.DESTROY_EVENT)
+               OpType.DESTROY_STREAM, OpType.BIND_STREAM_QUEUE,
+               OpType.CREATE_EVENT, OpType.DESTROY_EVENT)
 
 
 class MemcpyKind(str, enum.Enum):
@@ -84,10 +85,11 @@ MEMCPY_LATENCY_S = 2e-6
 
 
 # Engine classes: every virtual stream maps onto one of the device's
-# execution engines.  A device has one compute queue and one DMA/copy
-# engine; ops on different engines may execute concurrently (the threaded
-# daemon and the stepped simulator both honour the per-engine slots), while
-# ops that share an engine still serialize.
+# execution-queue classes.  A device exposes a configurable set of
+# execution queues per class (default one compute queue and one DMA/copy
+# queue — see repro.core.queues); ops on different queues may execute
+# concurrently (the threaded daemon and the stepped simulator both honour
+# the per-queue slots), while ops that share a queue still serialize.
 ENGINE_COMPUTE = "compute"
 ENGINE_COPY = "copy"
 
@@ -241,10 +243,22 @@ class RuntimeAPI:
 
     # -- streams ------------------------------------------------------------
     def create_stream(self, *, phase: Phase = Phase.OTHER,
-                      engine: str = ENGINE_COMPUTE) -> int:
+                      engine: str = ENGINE_COMPUTE,
+                      queue: Optional[int] = None) -> int:
+        """Create a virtual stream on ``engine`` (its execution-queue
+        class).  ``queue`` pins the stream to one specific queue of that
+        class (by index); unpinned streams dispatch on any free queue of
+        the class."""
         raise NotImplementedError
 
     def destroy_stream(self, vstream: int) -> None:
+        raise NotImplementedError
+
+    def bind_stream_queue(self, vstream: int,
+                          queue: Optional[int]) -> None:
+        """Re-pin a stream to one execution queue of its engine class
+        (``None`` unpins it).  Ops already enqueued dispatch on the new
+        binding; in-flight ops are unaffected."""
         raise NotImplementedError
 
     # -- events -------------------------------------------------------------

@@ -99,11 +99,19 @@ class FlexClient(RuntimeAPI):
 
     # -- streams ------------------------------------------------------------
     def create_stream(self, *, phase: Phase = Phase.OTHER,
-                      engine: str = ENGINE_COMPUTE) -> int:
+                      engine: str = ENGINE_COMPUTE,
+                      queue: Optional[int] = None) -> int:
         op = OpDescriptor(OpType.CREATE_STREAM,
                           meta={"phase": phase, "engine": engine,
+                                "queue": queue,
                                 "instance": self.instance})
         return self.daemon.enqueue(op).result()
+
+    def bind_stream_queue(self, vstream: int,
+                          queue: Optional[int]) -> None:
+        op = OpDescriptor(OpType.BIND_STREAM_QUEUE, vhandles=(vstream,),
+                          meta={"queue": queue, "instance": self.instance})
+        self.daemon.enqueue(op).result()
 
     def copy_engine_stream(self) -> int:
         """This client's dedicated copy-engine vstream (created lazily).
@@ -320,10 +328,15 @@ class PassthroughClient(RuntimeAPI):
 
     # -- streams ------------------------------------------------------------
     def create_stream(self, *, phase: Phase = Phase.OTHER,
-                      engine: str = ENGINE_COMPUTE) -> int:
+                      engine: str = ENGINE_COMPUTE,
+                      queue: Optional[int] = None) -> int:
         h = self._handle()
         self._streams[h] = phase
         return h
+
+    def bind_stream_queue(self, vstream: int,
+                          queue: Optional[int]) -> None:
+        pass  # one physical stream backs every vstream: binding is moot
 
     def destroy_stream(self, vstream: int) -> None:
         self._streams.pop(vstream, None)

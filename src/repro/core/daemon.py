@@ -19,15 +19,20 @@ set**, so phase-aware time slicing and stream-ordered dispatch compose: the
 policy decides *which stream head* runs next, never *whether* program order
 within a stream is respected.
 
-Copy-engine streams (v3): every stream belongs to an execution **engine** —
-``compute`` (default) or ``copy`` (the DMA engine).  The daemon allows one
-op in flight *per engine*, so a copy-engine memcpy overlaps with a compute
-launch in both drive modes: the threaded loop dispatches each engine on its
-own worker thread, and ``select_next`` hands the stepped simulator up to one
-ready op per free engine slot.  Events may also be **session-scoped**
-(negative handles from a ``SharedEventTable``): a record completing on
-device A releases a wait queued on device B, which is how cross-device KV
-transfers are ordered.
+Execution queues (v4): every stream belongs to an execution-queue **class**
+— ``compute`` (default) or ``copy`` (the DMA engine) — and each device
+exposes a configurable number of queues per class (``repro.core.queues``;
+default ``compute x 1, copy x 1``, the v3 engine-slot semantics).  The
+daemon allows one op in flight *per queue*, so a copy-engine memcpy
+overlaps with a compute launch, and on a multi-queue device two compute
+ops (a prefill chunk and a decode step) overlap too: the threaded loop
+dispatches each queue on its own worker thread, and ``select_next`` hands
+the stepped simulator up to one ready op per free queue.  A stream may be
+**pinned** to one queue of its class (``create_stream(queue=i)`` /
+``bind_stream_queue``); unpinned streams dispatch on any free queue of
+their class.  Events may also be **session-scoped** (negative handles from
+a ``SharedEventTable``): a record completing on device A releases a wait
+queued on device B, which is how cross-device KV transfers are ordered.
 
 Op effects (``memcpy`` payload movement, event signalling, synchronize
 markers) are applied inside ``mark_complete`` so threaded and stepped drive
@@ -48,10 +53,12 @@ from typing import Any, Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.api import (CONTROL_OPS, ENGINE_COMPUTE, ENGINE_COPY, Future,
+from repro.core.api import (CONTROL_OPS, ENGINE_COMPUTE, Future,
                             MemcpyKind, OpDescriptor, OpType, Phase,
                             memcpy_model_time)
 from repro.core.handles import HandleTable, SharedEventTable
+from repro.core.queues import (QueueId, parse_queue_spec, queue_key,
+                               validate_queue_binding)
 from repro.core.profiler import Profiler
 # import from the submodules, not the repro.sched package: the daemon loads
 # while repro.sched's own __init__ may still be executing (sched.cluster ->
@@ -129,7 +136,8 @@ class FlexDaemon:
     def __init__(self, device_id: int, backend,
                  policy: Optional[SchedulerPolicy] = None,
                  profiler: Optional[Profiler] = None,
-                 shared_events: Optional[SharedEventTable] = None):
+                 shared_events: Optional[SharedEventTable] = None,
+                 queues=None):
         self.device_id = device_id
         self.backend = backend
         self.policy = policy or FIFOPolicy()
@@ -153,12 +161,14 @@ class FlexDaemon:
         self._thread: Optional[threading.Thread] = None
         self._stop = False
         self._inflight: set = set()           # dispatched-not-yet-complete
-        # --- engine slots (v3): one op in flight per engine, so copy-engine
-        # memcpys overlap with compute launches in both drive modes
-        self.engine_slots: Dict[str, int] = {ENGINE_COMPUTE: 1, ENGINE_COPY: 1}
-        self._engine_inflight: Dict[str, int] = {}
-        self._engine_queues: Dict[str, "queue.Queue"] = {}
-        self._engine_threads: List[threading.Thread] = []
+        # --- execution queues (v4): one op in flight per queue.  The
+        # default spec (compute x 1, copy x 1) is the v3 engine-slot
+        # behavior: copy-engine memcpys overlap compute launches; extra
+        # compute queues let compute ops overlap each other too.
+        self.queue_slots: Dict[str, int] = parse_queue_spec(queues)
+        self._queue_inflight: Dict[QueueId, OpDescriptor] = {}
+        self._queue_workers: Dict[QueueId, "queue.Queue"] = {}
+        self._queue_threads: List[threading.Thread] = []
         # --- ordering state (v2) ---
         # per-vstream FIFO of enqueued-not-yet-dispatched ops
         self._stream_pending: Dict[int, Deque[OpDescriptor]] = {}
@@ -293,10 +303,24 @@ class FlexDaemon:
                 self.allocated_by_instance.get(owner, 0) - rec["nbytes"]
             return None
         if op.op == OpType.CREATE_STREAM:
+            engine = op.meta.get("engine", ENGINE_COMPUTE)
+            q = op.meta.get("queue")
+            validate_queue_binding(self.queue_slots, engine, q)
             return self.streams.create(
                 {"phase": op.meta.get("phase", Phase.OTHER),
-                 "engine": op.meta.get("engine", ENGINE_COMPUTE),
+                 "engine": engine,
+                 "queue": None if q is None else int(q),
                  "instance": instance})
+        if op.op == OpType.BIND_STREAM_QUEUE:
+            vs = op.vhandles[0]
+            rec = self.streams.resolve(vs)
+            q = op.meta.get("queue")
+            validate_queue_binding(self.queue_slots, rec.get(
+                "engine", ENGINE_COMPUTE), q)
+            with self._cv:
+                rec["queue"] = None if q is None else int(q)
+                self._cv.notify_all()   # a re-pin may unblock pending heads
+            return None
         if op.op == OpType.DESTROY_STREAM:
             vs = op.vhandles[0]
             with self._cv:
@@ -347,6 +371,49 @@ class FlexDaemon:
         except KeyError:
             return ENGINE_COMPUTE
 
+    def stream_queue(self, vstream: int) -> Optional[int]:
+        """The queue index a stream is pinned to (None = any free queue
+        of its engine class)."""
+        try:
+            return self.streams.resolve(vstream).get("queue")
+        except KeyError:
+            return None
+
+    # ----------------------------------------------------- queue occupancy
+    @property
+    def engine_slots(self) -> Dict[str, int]:
+        """Per-class queue counts (the v3 name, kept for policy views)."""
+        return dict(self.queue_slots)
+
+    def _free_queues(self) -> Dict[str, List[int]]:
+        """Free queue indices per class.  Caller holds ``_cv``."""
+        return {cls: [i for i in range(n)
+                      if (cls, i) not in self._queue_inflight]
+                for cls, n in self.queue_slots.items()}
+
+    def _engine_free(self) -> Dict[str, int]:
+        """Free dispatch slots per class.  Caller holds ``_cv``."""
+        busy: Dict[str, int] = {}
+        for (cls, _i) in self._queue_inflight:
+            busy[cls] = busy.get(cls, 0) + 1
+        return {cls: n - busy.get(cls, 0)
+                for cls, n in self.queue_slots.items()}
+
+    def _queue_occupancy_locked(self) -> Dict[str, Optional[str]]:
+        """Queue key -> phase of the op in flight there (None = idle).
+        Caller holds ``_cv``."""
+        return {queue_key(cls, i):
+                (self._queue_inflight[(cls, i)].phase.value
+                 if (cls, i) in self._queue_inflight else None)
+                for cls, n in self.queue_slots.items()
+                for i in range(n)}
+
+    def queue_occupancy(self) -> Dict[str, Optional[str]]:
+        """Locked snapshot of :meth:`_queue_occupancy_locked` (policy
+        views and telemetry read this from other threads)."""
+        with self._cv:
+            return self._queue_occupancy_locked()
+
     def _remote_edge_pending(self) -> bool:
         """True if any stream head waits on a session-scoped event — its
         release may come from a PEER daemon, which never notifies our cv
@@ -370,13 +437,14 @@ class FlexDaemon:
     def _ready_heads(self) -> List[OpDescriptor]:
         """Heads of all streams whose next op may legally dispatch now."""
         heads = []
-        free = {e: n - self._engine_inflight.get(e, 0)
-                for e, n in self.engine_slots.items()}
+        free = self._free_queues()
         for vs, q in self._stream_pending.items():
             if not q or self._stream_inflight.get(vs, 0):
                 continue
-            if free.get(self.stream_engine(vs), 1) <= 0:
-                continue  # this execution engine has no free slot
+            free_cls = free.get(self.stream_engine(vs), [0])
+            pinned = self.stream_queue(vs)
+            if (not free_cls) if pinned is None else (pinned not in free_cls):
+                continue  # no free queue this stream may dispatch on
             op = q[0]
             if op.op == OpType.WAIT_EVENT:
                 st = self._event_progress(op.vhandles[0])
@@ -392,8 +460,9 @@ class FlexDaemon:
         """Pop the next *ready* op per policy (simulator / loop driver).
 
         May be called repeatedly before any completion: it hands out at most
-        one op per free engine slot, so a driver that loops until ``None``
-        gets a compute op AND a copy-engine op to run concurrently."""
+        one op per free execution queue, so a driver that loops until
+        ``None`` gets a compute op AND a copy-engine op (and, on a
+        multi-queue device, several compute ops) to run concurrently."""
         with self._cv:
             if self.failed:
                 return None
@@ -404,9 +473,9 @@ class FlexDaemon:
                 for p in Phase}
             ctx = PolicyContext(
                 queues=ready, prof=self.profiler, now=now,
-                engine_free={e: n - self._engine_inflight.get(e, 0)
-                             for e, n in self.engine_slots.items()},
-                engine_slots=dict(self.engine_slots),
+                engine_free=self._engine_free(),
+                engine_slots=dict(self.queue_slots),
+                queue_occupancy=self._queue_occupancy_locked(),
                 link_stats_fn=self.link_stats_fn)
             phase = self.policy.select(ctx)
             if phase is None or not ready[phase]:
@@ -417,8 +486,14 @@ class FlexDaemon:
             self._stream_inflight[op.vstream] = \
                 self._stream_inflight.get(op.vstream, 0) + 1
             eng = self.stream_engine(op.vstream)
-            self._engine_inflight[eng] = self._engine_inflight.get(eng, 0) + 1
-            op.meta["_engine"] = eng   # resolved once: survives stream destroy
+            pinned = self.stream_queue(op.vstream)
+            idx = pinned if pinned is not None else \
+                min(i for i in range(self.queue_slots.get(eng, 1))
+                    if (eng, i) not in self._queue_inflight)
+            self._queue_inflight[(eng, idx)] = op
+            # resolved once: survives stream destroy / re-binding
+            op.meta["_engine"] = eng
+            op.meta["_queue"] = (eng, idx)
             op.dispatch_time = now
             self.policy.on_dispatch(op, self.backend.estimate(op))
             self._inflight.add(op)
@@ -451,19 +526,16 @@ class FlexDaemon:
             op.future.set_error(error)
         else:
             op.future.set_result(result)
-        # The ENGINE slot frees only after the future's callbacks ran:
+        # The execution QUEUE frees only after the future's callbacks ran:
         # callbacks enqueue follow-up work (continuous batching), and the
         # threaded dispatcher must not race ahead of them and pick from a
         # queue that is about to receive the follow-up — policy decisions
         # would otherwise see stale per-phase state (the stepped drivers
         # call select_next after mark_complete returns, same property).
         with self._cv:
-            eng = op.meta.get("_engine", ENGINE_COMPUTE)
-            ne = self._engine_inflight.get(eng, 0)
-            if ne > 1:
-                self._engine_inflight[eng] = ne - 1
-            else:
-                self._engine_inflight.pop(eng, None)
+            qid = op.meta.get("_queue")
+            if qid is not None and self._queue_inflight.get(qid) is op:
+                del self._queue_inflight[qid]
             self._inflight.discard(op)
             self._cv.notify_all()
 
@@ -597,7 +669,7 @@ class FlexDaemon:
                 q.clear()
             self._stream_pending.clear()
             self._stream_inflight.clear()
-            self._engine_inflight.clear()
+            self._queue_inflight.clear()
             self._event_state.clear()
             self._mem_refs.clear()
             self._cv.notify_all()
@@ -612,14 +684,18 @@ class FlexDaemon:
     # -------------------------------------------------------- thread drive
     def start(self):
         self._stop = False
-        # one executor thread per engine: ops on different engines (compute
-        # vs copy) execute concurrently; ops sharing an engine serialize
-        self._engine_queues = {e: queue.Queue() for e in self.engine_slots}
-        self._engine_threads = [
-            threading.Thread(target=self._engine_loop, args=(e,), daemon=True,
-                             name=f"flexd-{self.device_id}-{e}")
-            for e in self.engine_slots]
-        for t in self._engine_threads:
+        # one executor thread per execution queue: ops on different queues
+        # (compute vs copy, or two compute queues) execute concurrently;
+        # ops sharing a queue serialize
+        qids = [(cls, i) for cls, n in self.queue_slots.items()
+                for i in range(n)]
+        self._queue_workers = {qid: queue.Queue() for qid in qids}
+        self._queue_threads = [
+            threading.Thread(target=self._queue_loop, args=(qid,),
+                             daemon=True,
+                             name=f"flexd-{self.device_id}-{qid[0]}{qid[1]}")
+            for qid in qids]
+        for t in self._queue_threads:
             t.start()
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name=f"flexd-{self.device_id}")
@@ -631,14 +707,14 @@ class FlexDaemon:
             self._cv.notify_all()
         if self._thread is not None:
             self._thread.join(timeout=5)
-        for q in self._engine_queues.values():
+        for q in self._queue_workers.values():
             q.put(None)                       # workers drain, then exit
-        for t in self._engine_threads:
+        for t in self._queue_threads:
             t.join(timeout=5)
-        self._engine_threads = []
+        self._queue_threads = []
 
     def _loop(self):
-        """Dispatcher: pops ready ops and routes each to its engine worker."""
+        """Dispatcher: pops ready ops and routes each to its queue worker."""
         while True:
             with self._cv:
                 while not self._stop and self.pending_count() == 0:
@@ -660,10 +736,10 @@ class FlexDaemon:
                     self._cv.wait(
                         0.001 if self._remote_edge_pending() else 0.1)
                 continue
-            self._engine_queues[op.meta.get("_engine", ENGINE_COMPUTE)].put(op)
+            self._queue_workers[op.meta["_queue"]].put(op)
 
-    def _engine_loop(self, engine: str):
-        q = self._engine_queues[engine]
+    def _queue_loop(self, qid: QueueId):
+        q = self._queue_workers[qid]
         while True:
             op = q.get()
             if op is None:

@@ -1,0 +1,101 @@
+"""Execution-queue layer: the device's dispatch slots as first-class objects.
+
+A device no longer exposes hard-coded engine *slots* (one compute, one
+copy): it exposes a configurable set of **execution queues**, each belonging
+to an engine class (``compute`` | ``copy``).  A queue is identified by
+``(cls, index)``; at most one op is in flight per queue, so a device with
+``compute x 2, copy x 1`` runs up to two compute-class ops and one
+copy-class op concurrently — micro-batched prefill chunks on one compute
+queue overlap decode steps pinned to another.
+
+The default spec (``compute x 1, copy x 1``) reproduces the v3 engine-slot
+semantics bit-for-bit: one op per engine class, the copy engine overlapping
+compute.
+
+Specs are written three ways, all normalized by :func:`parse_queue_spec`:
+
+  * ``None``                          -> the default (``compute:1, copy:1``)
+  * ``{"compute": 2, "copy": 1}``     -> explicit per-class counts
+  * ``"compute:2,copy:1"``            -> the CLI/string form
+
+Timing under concurrency is the *contention model's* job, not this
+module's: concurrent compute-queue ops on one device split the modeled
+FLOP throughput by processor sharing (each op carries a ``compute share``
+— its compute-boundedness), mirroring how :class:`repro.transport.links.
+LinkModel` shares link segments.  The sharing itself is implemented by
+``LinkModel`` transfers with fractional shares over a per-device
+``("flops", <name>)`` segment; see ``repro.serving.simulator`` (stepped)
+and ``repro.serving.realtime`` (threaded).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Union
+
+from repro.core.api import ENGINE_COMPUTE, ENGINE_COPY
+
+# a queue's identity: (engine class, index within the class)
+QueueId = Tuple[str, int]
+
+QUEUE_CLASSES = (ENGINE_COMPUTE, ENGINE_COPY)
+
+QueueSpec = Union[None, str, Dict[str, int]]
+
+
+def default_queues() -> Dict[str, int]:
+    """The v3-equivalent config: one queue per engine class."""
+    return {ENGINE_COMPUTE: 1, ENGINE_COPY: 1}
+
+
+def parse_queue_spec(spec: QueueSpec) -> Dict[str, int]:
+    """Normalize a queue spec into ``{class: count}`` (validated copy).
+
+    Unmentioned classes default to 1 queue so ``"compute:4"`` still has a
+    copy engine; a class can not have zero queues (ops of that class would
+    never dispatch)."""
+    out = default_queues()
+    if spec is None:
+        return out
+    if isinstance(spec, str):
+        parsed: Dict[str, int] = {}
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            cls, sep, n = part.partition(":")
+            parsed[cls.strip()] = int(n) if sep else 1
+        spec = parsed
+    for cls, n in spec.items():
+        if cls not in QUEUE_CLASSES:
+            raise ValueError(
+                f"unknown queue class {cls!r}; expected one of "
+                f"{QUEUE_CLASSES}")
+        n = int(n)
+        if n < 1:
+            raise ValueError(f"queue class {cls!r} needs >= 1 queue, got {n}")
+        out[cls] = n
+    return out
+
+
+def queue_key(cls: str, index: int) -> str:
+    """Stable, JSON-friendly name for one queue ("compute:0", "copy:1")."""
+    return f"{cls}:{index}"
+
+
+def flops_key(name) -> Tuple[str, object]:
+    """Contention-model segment key for one device's FLOP throughput."""
+    return ("flops", name)
+
+
+def validate_queue_binding(slots: Dict[str, int], cls: str,
+                           index: Optional[int]) -> None:
+    """Reject a stream->queue binding outside the device's queue set."""
+    if cls not in slots:
+        raise ValueError(
+            f"unknown queue class {cls!r}; device has {sorted(slots)}")
+    if index is None:
+        return
+    n = slots[cls]
+    if not 0 <= int(index) < n:
+        raise ValueError(
+            f"queue {cls}:{index} out of range (device has {n} "
+            f"{cls} queue{'s' if n != 1 else ''})")

@@ -138,9 +138,14 @@ class Session(RuntimeAPI):
             meta=meta)
 
     def create_stream(self, *, phase: Phase = Phase.OTHER,
-                      engine: str = ENGINE_COMPUTE) -> int:
-        return self._clients[self._current].create_stream(phase=phase,
-                                                          engine=engine)
+                      engine: str = ENGINE_COMPUTE,
+                      queue: Optional[int] = None) -> int:
+        return self._clients[self._current].create_stream(
+            phase=phase, engine=engine, queue=queue)
+
+    def bind_stream_queue(self, vstream: int,
+                          queue: Optional[int]) -> None:
+        self._clients[self._current].bind_stream_queue(vstream, queue)
 
     def copy_engine_stream(self) -> int:
         return self._clients[self._current].copy_engine_stream()
@@ -231,15 +236,19 @@ class Session(RuntimeAPI):
 
 def connect(mode: str = "flex", devices: int = 1, *,
             policy: Union[SchedulerPolicy, Callable, None] = None,
-            backend=None, instance: str = "") -> Session:
+            backend=None, instance: str = "", queues=None) -> Session:
     """Open a session over ``devices`` virtual NPUs.
 
     ``policy`` may be a SchedulerPolicy prototype (deep-copied per device so
     per-device scheduling state stays independent) or a factory
     ``callable(device_id) -> SchedulerPolicy``.  ``backend`` likewise: a
     shared backend object (e.g. one simulator clock facade) or a factory.
-    ``mode='sim'`` requires a caller-supplied backend and leaves the daemons
-    stepped (never threaded); the simulator drives them."""
+    ``queues`` configures each device's execution queues (a
+    ``repro.core.queues`` spec — ``{"compute": 2, "copy": 1}`` or
+    ``"compute:2,copy:1"`` — or a factory ``callable(device_id) -> spec``;
+    None = one queue per engine class, the v3 behavior).  ``mode='sim'``
+    requires a caller-supplied backend and leaves the daemons stepped
+    (never threaded); the simulator drives them."""
     if mode not in MODES:
         raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
     if devices < 1:
@@ -256,7 +265,8 @@ def connect(mode: str = "flex", devices: int = 1, *,
             daemons.append(None)
             continue
         d = FlexDaemon(i, _backend_for(backend, i),
-                       policy=_policy_for(policy, i), shared_events=shared)
+                       policy=_policy_for(policy, i), shared_events=shared,
+                       queues=queues(i) if callable(queues) else queues)
         if mode == "flex":
             d.start()
         clients.append(FlexClient(d, instance=instance))

@@ -16,8 +16,9 @@
 # migration table in docs/api.md.
 from repro.sched.admission import (AdmissionPolicy, GatedAdmission,
                                    UngatedAdmission)
-from repro.sched.cluster import (ClusterPolicy, LeastLoadedPolicy,
-                                 RoleSwitchConfig, RoleSwitchPolicy)
+from repro.sched.cluster import (ClusterPolicy, LeastContendedPolicy,
+                                 LeastLoadedPolicy, RoleSwitchConfig,
+                                 RoleSwitchPolicy)
 from repro.sched.context import AdmissionView, PolicyContext
 from repro.sched.dispatch import (SCHEDULABLE, DispatchPolicy,
                                   DynamicPDConfig, DynamicPDPolicy,
@@ -31,7 +32,8 @@ SchedulerPolicy = DispatchPolicy
 
 __all__ = [
     "AdmissionPolicy", "GatedAdmission", "UngatedAdmission",
-    "ClusterPolicy", "LeastLoadedPolicy", "RoleSwitchConfig",
+    "ClusterPolicy", "LeastContendedPolicy", "LeastLoadedPolicy",
+    "RoleSwitchConfig",
     "RoleSwitchPolicy", "AdmissionView", "PolicyContext", "SCHEDULABLE",
     "DispatchPolicy", "DynamicPDConfig", "DynamicPDPolicy", "FIFOPolicy",
     "StaticTimeSlicePolicy", "SchedulerPolicy", "list_policies",

@@ -11,6 +11,12 @@ Policies (registry names in parentheses):
   * ``LeastLoadedPolicy`` (``least_loaded``) — v2 behavior: route to the
     least-loaded healthy instance, avoid stragglers (>2.5x pool-median
     EWMA step time).
+  * ``LeastContendedPolicy`` (``least_contended``) — topology-aware decode
+    routing: picks the destination whose ``Topology``-resolved path from
+    the source is least contended (live flows crossing each segment, plus
+    the accumulated per-segment queueing delay from
+    ``LinkModel.stats()["per_link"]``), so KV streams spread over spine
+    planes instead of piling onto one; prefill routing stays least-loaded.
   * ``RoleSwitchPolicy`` (``role_switch``)   — least-loaded routing plus
     **dynamic role-switching** for disaggregated deployments: a decode
     instance under prefill backlog flips role to prefill — draining its
@@ -89,6 +95,45 @@ class LeastLoadedPolicy(ClusterPolicy):
 
     def route_decode(self, req, src, pool):
         return self._least_loaded(pool)
+
+
+class LeastContendedPolicy(LeastLoadedPolicy):
+    """Topology-aware decode routing: minimize spine contention.
+
+    For each healthy decode candidate, the (src, dst) transfer path is
+    resolved through the cluster's ``Topology`` and scored by how
+    contended its segments are RIGHT NOW (live flows crossing each
+    segment, the dominant term) plus how contended they have BEEN
+    (per-segment ``queue_delay_s`` from ``LinkModel.stats()["per_link"]``
+    — a slow-moving tiebreak that learns persistently hot planes).  Ties
+    fall back to instance load, so with an idle fabric this degrades to
+    least-loaded routing.  Bound clusters without a topology (or unit
+    tests routing bare pools) also degrade to least-loaded."""
+
+    # one live flow on a segment outweighs any accumulated-delay tiebreak
+    _LIVE_FLOW_WEIGHT = 1e3
+
+    def route_decode(self, req, src, pool):
+        ok = self.healthy(pool)
+        if not ok:
+            return None
+        c = getattr(self, "cluster", None)
+        topo = getattr(c, "topology", None)
+        lm = getattr(c, "link_model", None)
+        if topo is None or lm is None:
+            return min(ok, key=lambda i: i.load())
+        from repro.transport.links import seg_key
+        per_link = lm.stats().get("per_link", {})
+
+        def contention(dst) -> float:
+            score = 0.0
+            for seg in topo.path(src.name, dst.name):
+                score += lm.active_count(seg) * self._LIVE_FLOW_WEIGHT
+                score += per_link.get(seg_key(seg), {}).get(
+                    "queue_delay_s", 0.0)
+            return score
+
+        return min(ok, key=lambda i: (contention(i), i.load()))
 
 
 @dataclasses.dataclass

@@ -33,10 +33,17 @@ class PolicyContext:
     queues: Mapping
     prof: Any = None                 # repro.core.profiler.Profiler
     now: float = 0.0
-    # per-engine occupancy: free dispatch slots and configured slot counts
-    # (a device has one compute queue and one DMA/copy engine)
+    # per-class occupancy: free dispatch slots and configured queue counts
+    # (default one compute queue and one DMA/copy queue per device; v4
+    # devices may expose several queues per class)
     engine_free: Dict[str, int] = dataclasses.field(default_factory=dict)
     engine_slots: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # per-QUEUE occupancy: queue key ("compute:0", "copy:0") -> the phase
+    # of the op in flight there (None = idle).  Lets a policy steer phases
+    # to queues — e.g. prefer co-locating a prefill beside a running
+    # decode rather than a second prefill.
+    queue_occupancy: Dict[str, Optional[str]] = \
+        dataclasses.field(default_factory=dict)
     # lazily-evaluated link-queueing stats (LinkModel.stats()); daemons not
     # attached to a link model report {}
     link_stats_fn: Optional[Callable[[], Dict[str, float]]] = None
@@ -72,6 +79,13 @@ class PolicyContext:
         """Full queue depth of one phase (ready + blocked ops)."""
         q = self.queues.get(phase)
         return len(q) if q is not None else 0
+
+    def phases_in_flight(self, cls: str = "compute") -> set:
+        """The phases currently occupying ``cls``-class queues (empty set
+        when occupancy is not reported — single-queue daemons pre-v4 and
+        hand-built test contexts)."""
+        return {p for k, p in self.queue_occupancy.items()
+                if p is not None and k.startswith(cls + ":")}
 
     @property
     def link_stats(self) -> Dict[str, float]:

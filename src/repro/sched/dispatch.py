@@ -32,7 +32,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional
 
-from repro.core.api import OpDescriptor, Phase
+from repro.core.api import ENGINE_COMPUTE, OpDescriptor, Phase
 from repro.sched.context import PolicyContext
 
 SCHEDULABLE = (Phase.PREFILL, Phase.DECODE)
@@ -185,6 +185,15 @@ class DynamicPDPolicy(_TimeSliceBase):
         oldest_prefill = ctx.queues[Phase.PREFILL][0]
         if ctx.now - oldest_prefill.enqueue_time > self.cfg.ttft_guard_s:
             return Phase.PREFILL
+        # Multi-queue devices (v4): steer toward heterogeneous co-location
+        # — hand the free compute queue to the phase NOT already running on
+        # another queue (prefill beside decode shares complementary
+        # bottlenecks; a second prefill beside a prefill just splits FLOPs).
+        if ctx.engine_slots.get(ENGINE_COMPUTE, 1) > 1:
+            running = ctx.phases_in_flight(ENGINE_COMPUTE)
+            idle = [p for p in candidates if p.value not in running]
+            if running and len(idle) == 1:
+                return idle[0]
         return self._pick_by_deficit(candidates)
 
     def debug_state(self):

@@ -20,8 +20,8 @@ import dataclasses
 from typing import Callable, Dict, List, NamedTuple
 
 from repro.sched.admission import GatedAdmission, UngatedAdmission
-from repro.sched.cluster import (LeastLoadedPolicy, RoleSwitchConfig,
-                                 RoleSwitchPolicy)
+from repro.sched.cluster import (LeastContendedPolicy, LeastLoadedPolicy,
+                                 RoleSwitchConfig, RoleSwitchPolicy)
 from repro.sched.dispatch import (DynamicPDConfig, DynamicPDPolicy,
                                   FIFOPolicy, StaticTimeSlicePolicy)
 
@@ -91,5 +91,6 @@ register_policy("gated", "admission", GatedAdmission,
                 knobs=("count_prefilling",))
 # --- cluster ---------------------------------------------------------------
 register_policy("least_loaded", "cluster", LeastLoadedPolicy)
+register_policy("least_contended", "cluster", LeastContendedPolicy)
 register_policy("role_switch", "cluster", _role_switch,
                 knobs=_cfg_knobs(RoleSwitchConfig))

@@ -1,18 +1,21 @@
-from repro.serving.costmodel import (CostModel, InstanceSpec, LinkModel,
-                                     LinkTransfer)
+from repro.serving.costmodel import CostModel, InstanceSpec
 from repro.serving.kvcache import OutOfPages, PagedAllocator, PagedKVStore
 from repro.serving.request import Request, RequestState, summarize
 from repro.serving.simulator import (Cluster, DeploymentSpec, EventLoop,
-                                     LinkDriver, SimConfig, SimInstance,
+                                     SimConfig, SimInstance,
                                      deployment_6p2d, deployment_dynamic,
                                      deployment_role_switch)
 from repro.serving.workload import (bursty_phase_shift, deepseek_1k1k,
                                     deepseek_1k4k, make_workload, qwen_grid)
 
+# The link/transport classes (LinkModel, LinkTransfer, LinkDriver,
+# ThreadedLinkTimer) live in repro.transport; their one-release re-exports
+# from this package were removed — import from repro.transport[.drivers].
+
 __all__ = [
-    "CostModel", "InstanceSpec", "LinkModel", "LinkTransfer", "OutOfPages",
+    "CostModel", "InstanceSpec", "OutOfPages",
     "PagedAllocator", "PagedKVStore", "Request", "RequestState", "summarize",
-    "Cluster", "DeploymentSpec", "EventLoop", "LinkDriver", "SimConfig",
+    "Cluster", "DeploymentSpec", "EventLoop", "SimConfig",
     "SimInstance", "deployment_6p2d", "deployment_dynamic",
     "deployment_role_switch", "bursty_phase_shift", "deepseek_1k1k",
     "deepseek_1k4k", "make_workload", "qwen_grid",

@@ -88,9 +88,9 @@ class CostModel:
         return self.n_params * self.bytes_per_param
 
     # --------------------------------------------------------- step times
-    def prefill_time(self, spec: InstanceSpec, tokens: int,
-                     context: int = 0) -> float:
-        """One prefill launch over `tokens` prompt tokens (sum over batch)."""
+    def _prefill_terms(self, spec: InstanceSpec, tokens: int,
+                       context: int = 0) -> "tuple[float, float]":
+        """(t_compute, t_memory) of one prefill launch (roofline terms)."""
         cfg = self.cfg
         flops = 2.0 * self.n_active * tokens * self.calibration_flops
         # attention flops (causal): 2 * 2 * tokens * ctx/2 * H * D per layer
@@ -99,22 +99,53 @@ class CostModel:
         flops += 2.0 * n_attn * tokens * ctx * cfg.num_heads * cfg.head_dim
         bytes_ = (self.weights_bytes()
                   + tokens * self.kv_bytes_per_token()) * self.calibration_bytes
-        t_compute = flops / (spec.chips * PEAK_FLOPS * spec.compute_eff)
-        t_memory = bytes_ / (spec.chips * HBM_BW * spec.bw_eff)
-        t = max(t_compute, t_memory)
+        return (flops / (spec.chips * PEAK_FLOPS * spec.compute_eff),
+                bytes_ / (spec.chips * HBM_BW * spec.bw_eff))
+
+    def _decode_terms(self, spec: InstanceSpec, batch: int,
+                      avg_context: int) -> "tuple[float, float]":
+        """(t_compute, t_memory) of one decode step (roofline terms)."""
+        flops = 2.0 * self.n_active * batch * self.calibration_flops
+        bytes_ = (self.weights_bytes()
+                  + batch * self.kv_bytes_total(avg_context)
+                  + batch * self.ssm_state_bytes()) * self.calibration_bytes
+        return (flops / (spec.chips * PEAK_FLOPS * spec.compute_eff),
+                bytes_ / (spec.chips * HBM_BW * spec.bw_eff))
+
+    def prefill_time(self, spec: InstanceSpec, tokens: int,
+                     context: int = 0) -> float:
+        """One prefill launch over `tokens` prompt tokens (sum over batch)."""
+        t = max(self._prefill_terms(spec, tokens, context))
         return t * (1 + spec.collective_frac) + spec.launch_overhead_s
 
     def decode_time(self, spec: InstanceSpec, batch: int,
                     avg_context: int) -> float:
         """One decode step for a batch of sequences at `avg_context`."""
-        flops = 2.0 * self.n_active * batch * self.calibration_flops
-        bytes_ = (self.weights_bytes()
-                  + batch * self.kv_bytes_total(avg_context)
-                  + batch * self.ssm_state_bytes()) * self.calibration_bytes
-        t_compute = flops / (spec.chips * PEAK_FLOPS * spec.compute_eff)
-        t_memory = bytes_ / (spec.chips * HBM_BW * spec.bw_eff)
-        t = max(t_compute, t_memory)
+        t = max(self._decode_terms(spec, batch, avg_context))
         return t * (1 + spec.collective_frac) + spec.launch_overhead_s
+
+    # ---------------------------------------------- compute-demand shares
+    # An op's "compute share" is its compute-boundedness: the fraction of
+    # the device's FLOP throughput it actually converts into progress
+    # (t_compute / max(t_compute, t_memory)).  The execution-queue
+    # contention model splits FLOP throughput among concurrent compute-
+    # queue ops in proportion to these shares, so a bandwidth-bound decode
+    # step (share << 1) rides beside a compute-bound prefill chunk
+    # (share ~= 1) nearly for free — the paper's co-location claim.
+    MIN_COMPUTE_SHARE = 0.05
+
+    @classmethod
+    def _share(cls, t_compute: float, t_memory: float) -> float:
+        t = max(t_compute, t_memory, 1e-12)
+        return min(1.0, max(cls.MIN_COMPUTE_SHARE, t_compute / t))
+
+    def prefill_compute_share(self, spec: InstanceSpec, tokens: int,
+                              context: int = 0) -> float:
+        return self._share(*self._prefill_terms(spec, tokens, context))
+
+    def decode_compute_share(self, spec: InstanceSpec, batch: int,
+                             avg_context: int) -> float:
+        return self._share(*self._decode_terms(spec, batch, avg_context))
 
     # ------------------------------------------------ phase meta for ops
     def decode_meta(self, spec: InstanceSpec, batch: int, avg_context: int) -> Dict:
@@ -165,16 +196,8 @@ class CostModel:
         return t_m / max(t_c, t_m)
 
 
-# ===========================================================================
-# Link model: moved to the KV transport subsystem (repro.transport)
-# ===========================================================================
-# The per-link occupancy model grew into a path-aware, topology-driven
-# LinkModel (a transfer occupies source egress, shared spine, AND
-# destination ingress; rate = min over per-segment processor shares) and
-# now lives in repro.transport with the Topology and KVStreamer it works
-# with.  Re-exported here for one release (docs/api.md "KV transport &
-# topology" has the migration table).
-from repro.transport.links import LinkModel, LinkTransfer
-
-__all__ = ["CostModel", "InstanceSpec", "LinkModel", "LinkTransfer",
+# The per-link occupancy model (LinkModel/LinkTransfer) lives in
+# repro.transport; its one-release re-export from this module was removed
+# — import from repro.transport (docs/api.md "KV transport & topology").
+__all__ = ["CostModel", "InstanceSpec",
            "PEAK_FLOPS", "HBM_BW", "ICI_BW", "HBM_PER_CHIP"]

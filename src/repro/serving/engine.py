@@ -3,7 +3,7 @@
 Continuous batching over slot-structured dense KV caches.  ALL device work is
 issued through the session-based v2 ``RuntimeAPI`` verbs: the engine opens a
 ``repro.core.connect(...)`` session and speaks only to its device-scoped
-client — it is byte-identical under ``mode="passthrough"`` (paper's native
+clients — it is byte-identical under ``mode="passthrough"`` (paper's native
 passthrough) and the interposed FlexDaemon modes, which is the transparency
 claim of the paper made concrete.
 
@@ -13,16 +13,35 @@ Modes:
                           decode slot (head-of-line blocking; Table 4 baseline).
   * ``dynamic_pd``      — FlexNPU: prefill and decode as separate logical
                           instances over one daemon with DynamicPDPolicy.
-  * ``disagg``          — static PD disaggregation over a 2-device session:
-                          prefill on device 0, decode on device 1, and the
-                          KV cache moved between them by ``memcpy_peer`` on
-                          the copy-engine stream, ordered by a cross-device
-                          (shared) event — the real-execution analogue of
-                          the cluster simulator's disagg deployments.
+  * ``disagg``          — static PD disaggregation over a 2-device pair:
+                          prefill on one device, decode on the other, and
+                          the KV cache moved between them by ``memcpy_peer``
+                          on the copy-engine stream, ordered by a
+                          cross-device (shared) event — the real-execution
+                          analogue of the cluster simulator's disagg
+                          deployments.
 
-Prefill and decode each run on their own virtual stream; the daemon enforces
-per-stream FIFO order while the phase policy arbitrates between the stream
-heads (stream-ordered dispatch, daemon v2).
+Data parallelism (v4): the engine is **multi-device** — ``replicas=R``
+opens ONE session spanning R replicas (R devices, or R prefill/decode
+device pairs under disagg), each with its own slot cache and decode batch.
+Requests are routed to replicas by a :class:`~repro.sched.ClusterPolicy`
+from the v3 registry (``cluster_policy="least_loaded"`` by default), so
+the same routing layer fronts the real engine and the cluster simulator.
+``replicas=1`` (the default) is the v3 single-device engine, byte-for-byte.
+
+Execution queues (v4): each device exposes ``compute_queues`` compute
+queues (plus a copy queue).  With more than one, decode is PINNED to the
+highest-index compute queue and prefill launches round-robin over streams
+bound to the remaining queues — prefills of different requests overlap
+each other and never block decode.  Real-model prompt chunking is not
+micro-batched here (the dense prefill writes its KV from position 0, so a
+prompt is one launch — per-request outputs stay byte-identical); the
+cluster simulator's ``chunk_prefill_tokens`` models intra-request
+micro-batching.
+
+Prefill and decode each run on their own virtual stream; the daemon
+enforces per-stream FIFO order while the phase policy arbitrates between
+the stream heads (stream-ordered dispatch, daemon v2).
 """
 from __future__ import annotations
 
@@ -37,9 +56,10 @@ import numpy as np
 
 from repro.core.api import Phase
 from repro.core.session import connect
-from repro.sched import (AdmissionPolicy, AdmissionView, DynamicPDConfig,
-                         DynamicPDPolicy, FIFOPolicy, GatedAdmission,
-                         UngatedAdmission, make_policy)
+from repro.sched import (AdmissionPolicy, AdmissionView, ClusterPolicy,
+                         DynamicPDConfig, DynamicPDPolicy, FIFOPolicy,
+                         GatedAdmission, UngatedAdmission, make_policy,
+                         policy_kind)
 from repro.models.model import Model
 from repro.serving.request import Request, RequestState, summarize
 
@@ -75,17 +95,79 @@ def _insert_slot(full_cache, one_cache, slot):
     return jax.tree.map(one, full_cache, one_cache)
 
 
+class _Replica:
+    """One data-parallel replica: a session device (or a prefill/decode
+    device PAIR under disagg) with its own streams, slot cache, and decode
+    batch.  Duck-types the routing view a :class:`ClusterPolicy` expects
+    (``failed`` / ``ewma_step`` / ``load()``), so cluster policies route
+    real-engine replicas exactly like simulator instances."""
+
+    def __init__(self, engine: "RealEngine", index: int,
+                 client, daemon, client_d, daemon_d):
+        self.engine = engine
+        self.index = index
+        self.name = f"replica{index}"
+        self.client = client          # prefill-side client
+        self.daemon = daemon
+        self.client_d = client_d      # decode-side client (disagg: peer dev)
+        self.daemon_d = daemon_d
+        cq = engine.compute_queues
+        if cq > 1:
+            # decode owns the last compute queue outright; prefill streams
+            # spread over the rest, requests round-robining across them
+            self.streams_p = [client.create_stream(phase=Phase.PREFILL,
+                                                   queue=i)
+                              for i in range(cq - 1)]
+            self.stream_d = client_d.create_stream(phase=Phase.DECODE,
+                                                   queue=cq - 1)
+        else:
+            self.streams_p = [client.create_stream(phase=Phase.PREFILL)]
+            self.stream_d = client_d.create_stream(phase=Phase.DECODE)
+        self.stream_p = self.streams_p[0]
+        self._rr = 0
+        # device state
+        self.slot_cache = engine.model.init_cache(engine.max_num_seqs,
+                                                  engine.max_len)
+        self.lengths = np.zeros((engine.max_num_seqs,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * engine.max_num_seqs
+        self.next_tokens = np.zeros((engine.max_num_seqs,), np.int32)
+        self.decode_pending: List[tuple] = []   # (req, single_cache, tok)
+        self.prefilling_count = 0               # admitted, prefill running
+        self.active_count = 0
+        self.decode_inflight = False
+        # routing view (ClusterPolicy duck-typing)
+        self.failed = False
+        self.ewma_step = 0.0
+
+    def load(self) -> float:
+        """Router load signal: work resident on this replica."""
+        return float(self.prefilling_count + len(self.decode_pending)
+                     + self.active_count)
+
+    def observe_step(self, dur: float) -> None:
+        self.ewma_step = 0.8 * self.ewma_step + 0.2 * dur \
+            if self.ewma_step else dur
+
+    def next_prefill_stream(self) -> int:
+        s = self.streams_p[self._rr % len(self.streams_p)]
+        self._rr += 1
+        return s
+
+
 class RealEngine:
     def __init__(self, model: Model, params, *, mode: str = "dynamic_pd",
                  max_num_seqs: int = 4, max_len: int = 256,
                  policy=None, admission: Optional[AdmissionPolicy] = None,
-                 sample: str = "greedy", kv_chunk_layers: int = 0):
+                 sample: str = "greedy", kv_chunk_layers: int = 0,
+                 replicas: int = 1, cluster_policy=None,
+                 compute_queues: int = 1):
         self.model = model
         self.params = params
         self.mode = mode
         self.max_num_seqs = max_num_seqs
         self.max_len = max_len
         self.sample = sample
+        self.compute_queues = max(1, int(compute_queues))
         # disagg KV transport: split the packed cache into this many
         # layer-group chunks pipelined over memcpy_peer (0 = one blob).
         # Chunks ride the same copy-engine stream, so they serialize on
@@ -93,13 +175,15 @@ class RealEngine:
         # as the cross-device event edge for the LAST chunk resolves —
         # outputs stay byte-identical to the one-blob path.
         self.kv_chunk_layers = int(kv_chunk_layers)
+        if replicas < 1:
+            raise ValueError("the engine needs at least one replica")
+        self.n_replicas = int(replicas)
         self._lock = threading.RLock()
         self._all_done = threading.Condition(self._lock)
         # control plane (v3): dispatch policies resolve through the registry
         # by name; admission is a shared AdmissionPolicy (the same object
         # type the cluster simulator uses — no copy-pasted gating)
         if isinstance(policy, str):
-            from repro.sched import policy_kind
             if policy_kind(policy) != "dispatch":
                 raise ValueError(
                     f"policy {policy!r} is a {policy_kind(policy)} policy; "
@@ -109,48 +193,64 @@ class RealEngine:
         self.admission = admission or (
             GatedAdmission() if mode == "static_colocate"
             else UngatedAdmission())
+        # replica routing (v4): the same ClusterPolicy layer the simulator
+        # uses, resolved through the registry by name
+        if cluster_policy is None or isinstance(cluster_policy, str):
+            name = cluster_policy or "least_loaded"
+            if policy_kind(name) != "cluster":
+                raise ValueError(
+                    f"policy {name!r} is a {policy_kind(name)} policy; "
+                    f"RealEngine's cluster_policy= takes a cluster policy "
+                    f"(least_loaded, least_contended, ...)")
+            self.router: ClusterPolicy = make_policy(name)
+        else:
+            self.router = cluster_policy
+        self.router.bind(self)
 
+        queues = {"compute": self.compute_queues, "copy": 1}
         if mode == "passthrough":
-            self.session = connect(mode="passthrough")
+            self.session = connect(mode="passthrough",
+                                   devices=self.n_replicas)
         elif mode == "disagg":
-            # device 0 prefills, device 1 decodes; each side is single-phase
-            # so FIFO order suffices (the simulator's disagg instances too)
-            self.session = connect(mode="flex", devices=2,
+            # each replica is a device PAIR: device 2i prefills, 2i+1
+            # decodes; each side is single-phase so FIFO order suffices
+            # (the simulator's disagg instances too)
+            self.session = connect(mode="flex", devices=2 * self.n_replicas,
                                    policy=policy or FIFOPolicy(),
-                                   instance="engine")
+                                   instance="engine", queues=queues)
         else:
             policy = policy or (FIFOPolicy() if mode == "static_colocate"
                                 else DynamicPDPolicy(
                                     DynamicPDConfig(ttft_guard_s=0.05,
                                                     adjust_interval_s=0.01)))
-            self.session = connect(mode="flex", policy=policy,
-                                   instance="engine")
-        self.client = self.session.device(0)
-        self.daemon = self.session.daemon(0)
-        # decode-side client: device 1 under disagg, device 0 otherwise
-        self.client_d = self.session.device(1) if mode == "disagg" \
-            else self.client
-        self.stream_p = self.client.create_stream(phase=Phase.PREFILL)
-        self.stream_d = self.client_d.create_stream(phase=Phase.DECODE)
+            self.session = connect(mode="flex", devices=self.n_replicas,
+                                   policy=policy, instance="engine",
+                                   queues=queues)
+        self.replicas: List[_Replica] = []
+        for r in range(self.n_replicas):
+            if mode == "disagg":
+                p_dev, d_dev = 2 * r, 2 * r + 1
+            else:
+                p_dev = d_dev = r
+            self.replicas.append(_Replica(
+                self, r, self.session.device(p_dev),
+                self.session.daemon(p_dev), self.session.device(d_dev),
+                self.session.daemon(d_dev)))
+        # single-replica conveniences (the v3 attribute names)
+        self.client = self.replicas[0].client
+        self.daemon = self.replicas[0].daemon
+        self.client_d = self.replicas[0].client_d
+        self.stream_p = self.replicas[0].stream_p
+        self.stream_d = self.replicas[0].stream_d
 
-        # device state
-        self.slot_cache = model.init_cache(max_num_seqs, max_len)
-        self.lengths = np.zeros((max_num_seqs,), np.int32)
-        self.slot_req: List[Optional[Request]] = [None] * max_num_seqs
-        self.next_tokens = np.zeros((max_num_seqs,), np.int32)
-
-        # jitted steps
+        # jitted steps (shared: replicas run the same program)
         self._prefill_jit = jax.jit(
             lambda p, toks, cache: model.prefill(p, {"tokens": toks}, cache))
         self._decode_jit = jax.jit(
             lambda p, toks, cache, lens: model.decode(p, toks, cache, lens))
 
-        # engine queues
+        # engine-level queues
         self.waiting_admission: List[Request] = []   # awaiting admission
-        self.decode_pending: List[tuple] = []        # (req, single_cache, tok)
-        self.prefilling_count = 0                    # admitted, prefill running
-        self.active_count = 0
-        self.decode_inflight = False
         self.outstanding = 0
         self.finished: List[Request] = []
 
@@ -183,54 +283,65 @@ class RealEngine:
 
     def shutdown(self):
         try:  # release the engine's stream handles (leak-free tables)
-            self.client.synchronize(None)
-            if self.client_d is not self.client:
-                self.client_d.synchronize(None)
-                self.client_d.destroy_stream(self.stream_d)
-            else:
-                self.client.destroy_stream(self.stream_d)
-            self.client.destroy_stream(self.stream_p)
-            for c in (self.client, self.client_d):
-                if getattr(c, "_copy_stream", None) is not None:
-                    c.destroy_stream(c._copy_stream)
+            for rep in self.replicas:
+                rep.client.synchronize(None)
+                if rep.client_d is not rep.client:
+                    rep.client_d.synchronize(None)
+                rep.client_d.destroy_stream(rep.stream_d)
+                for s in rep.streams_p:
+                    rep.client.destroy_stream(s)
+                for c in (rep.client, rep.client_d):
+                    if getattr(c, "_copy_stream", None) is not None:
+                        c.destroy_stream(c._copy_stream)
         except Exception:
             pass  # dirty shutdown (timeout/fault): session teardown suffices
         self.session.close()
 
     # ------------------------------------------------------------ prefill
-    def _admission_view(self) -> AdmissionView:
+    def _admission_view(self, rep: _Replica) -> AdmissionView:
         head = self.waiting_admission[0] if self.waiting_admission else None
         return AdmissionView(
             waiting=len(self.waiting_admission),
             next_prompt_len=head.prompt_len if head else 0,
-            active=self.active_count,
-            decode_pending=len(self.decode_pending),
-            prefilling=self.prefilling_count,
+            active=rep.active_count,
+            decode_pending=len(rep.decode_pending),
+            prefilling=rep.prefilling_count,
             max_num_seqs=self.max_num_seqs,
             kv_free=None)      # dense slot caches: no token accounting
 
     def _drain_admission_locked(self):
-        while self.admission.admit(self._admission_view()):
+        while self.waiting_admission:
+            # route first, then gate against the TARGET replica's occupancy
+            # — one admission implementation for any replica count
+            rep = self.router.route_prefill(self.waiting_admission[0],
+                                            self.replicas)
+            if rep is None or not self.admission.admit(
+                    self._admission_view(rep)):
+                return
             req = self.waiting_admission.pop(0)
-            self.prefilling_count += 1
-            self._launch_prefill(req)
+            rep.prefilling_count += 1
+            self._launch_prefill(rep, req)
 
-    def _launch_prefill(self, req: Request) -> None:
+    def _launch_prefill(self, rep: _Replica, req: Request) -> None:
         req.state = RequestState.PREFILLING
+        req.instance = rep.name
         toks = jnp.asarray(np.asarray(req.prompt_tokens, np.int32))[None, :]
         cache = self.model.init_cache(1, self.max_len)
-        fut = self.client.launch(
-            self.stream_p, self._prefill_jit, self.params, toks, cache,
-            phase=Phase.PREFILL,
+        t0 = time.monotonic()
+        fut = rep.client.launch(
+            rep.next_prefill_stream(), self._prefill_jit, self.params, toks,
+            cache, phase=Phase.PREFILL,
             meta={"tokens": req.prompt_len, "req_id": req.req_id})
-        fut.add_done_callback(lambda f, r=req: self._prefill_done(r, f))
+        fut.add_done_callback(
+            lambda f, r=req, rp=rep, t=t0: self._prefill_done(rp, r, f, t))
 
-    def _prefill_done(self, req: Request, fut) -> None:
+    def _prefill_done(self, rep: _Replica, req: Request, fut,
+                      t0: float) -> None:
         try:
             logits, single_cache, lens = fut.result()
         except Exception:
             with self._lock:
-                self.prefilling_count = max(0, self.prefilling_count - 1)
+                rep.prefilling_count = max(0, rep.prefilling_count - 1)
                 req.state = RequestState.FAILED
                 self.outstanding -= 1
                 self._drain_admission_locked()
@@ -239,19 +350,20 @@ class RealEngine:
         tok = int(np.argmax(np.asarray(logits[0])))
         now = time.monotonic()
         with self._lock:
-            self.prefilling_count = max(0, self.prefilling_count - 1)
+            rep.prefilling_count = max(0, rep.prefilling_count - 1)
+            rep.observe_step(now - t0)
             req.record_token(now)
             req.output_tokens.append(tok)
             if req.done_decoding:
                 self._finish_locked(req)
                 return
         if self.mode == "disagg":
-            self._transfer_kv(req, single_cache, tok)
+            self._transfer_kv(rep, req, single_cache, tok)
             return
         with self._lock:
-            self.decode_pending.append((req, single_cache, tok))
-            self._fill_slots_locked()
-            self._ensure_decode_locked()
+            rep.decode_pending.append((req, single_cache, tok))
+            self._fill_slots_locked(rep)
+            self._ensure_decode_locked(rep)
 
     # --------------------------------------------- disagg: KV cache transfer
     def _kv_chunk_bounds(self, blob_nbytes: int, spec) -> List[tuple]:
@@ -271,16 +383,18 @@ class RealEngine:
             off += nb
         return bounds
 
-    def _transfer_kv(self, req: Request, single_cache, tok: int) -> None:
-        """Move the prefilled KV cache from the prefill device (0) to the
-        decode device (1) through backend-owned buffers: H2D on device 0,
-        ``memcpy_peer`` on the copy-engine stream — chunked on layer
-        boundaries when ``kv_chunk_layers`` > 1, so the chunks pipeline on
-        the copy engine — then ONE cross-device (shared) event after the
-        last chunk orders device 1's D2H readbacks after every peer copy
-        (the daemons' happens-before graph spans both devices)."""
+    def _transfer_kv(self, rep: _Replica, req: Request, single_cache,
+                     tok: int) -> None:
+        """Move the prefilled KV cache from the replica's prefill device to
+        its decode device through backend-owned buffers: H2D on the
+        source, ``memcpy_peer`` on the copy-engine stream — chunked on
+        layer boundaries when ``kv_chunk_layers`` > 1, so the chunks
+        pipeline on the copy engine — then ONE cross-device (shared) event
+        after the last chunk orders the decode side's D2H readbacks after
+        every peer copy (the daemons' happens-before graph spans both
+        devices)."""
         blob, treedef, spec = _pack_cache(single_cache)
-        cp, cd = self.client, self.client_d
+        cp, cd = rep.client, rep.client_d
         sp, sd = cp.copy_engine_stream(), cd.copy_engine_stream()
         ev = self.session.create_shared_event()
         bounds = self._kv_chunk_bounds(blob.nbytes, spec)
@@ -290,22 +404,22 @@ class RealEngine:
             h_dst = cd.malloc(nb, tag="kv-transfer")
             handles.append((h_src, h_dst))
             cp.memcpy(h_src, blob[off:off + nb], vstream=sp)
-            cp.memcpy_peer(self.session.daemon(1), h_dst, h_src, nb,
+            cp.memcpy_peer(rep.daemon_d, h_dst, h_src, nb,
                            vstream=sp,
                            meta={"req_id": req.req_id, "kv_chunk": i,
                                  "kv_chunks": len(bounds)})
         cp.record_event(ev, sp)
-        cd.wait_event(ev, sd)               # released by device 0's record
+        cd.wait_event(ev, sd)               # released by the source's record
         # same-stream FIFO: the LAST readback completes last, with every
         # earlier chunk's future already resolved
         futs = [cd.memcpy(None, h_dst, nb, vstream=sd)
                 for (_, h_dst), (_, nb) in zip(handles, bounds)]
         futs[-1].add_done_callback(
-            lambda f: self._kv_arrived(req, tok, treedef, spec,
+            lambda f: self._kv_arrived(rep, req, tok, treedef, spec,
                                        handles, ev, futs))
 
-    def _kv_arrived(self, req: Request, tok: int, treedef, spec,
-                    handles, ev: int, futs) -> None:
+    def _kv_arrived(self, rep: _Replica, req: Request, tok: int, treedef,
+                    spec, handles, ev: int, futs) -> None:
         try:
             parts = [np.asarray(f.result(), dtype=np.uint8) for f in futs]
             blob = parts[0] if len(parts) == 1 else np.concatenate(parts)
@@ -319,77 +433,80 @@ class RealEngine:
         finally:
             try:  # the peer copies completed before the readbacks (event edge)
                 for h_src, h_dst in handles:
-                    self.client.free(h_src)
-                    self.client_d.free(h_dst)
+                    rep.client.free(h_src)
+                    rep.client_d.free(h_dst)
                 self.session.destroy_shared_event(ev)
             except Exception:
                 pass  # teardown race on shutdown: session close cleans up
         with self._lock:
-            self.decode_pending.append((req, cache, tok))
-            self._fill_slots_locked()
-            self._ensure_decode_locked()
+            rep.decode_pending.append((req, cache, tok))
+            self._fill_slots_locked(rep)
+            self._ensure_decode_locked(rep)
 
     # ------------------------------------------------------------- decode
-    def _fill_slots_locked(self):
-        if self.decode_inflight:
+    def _fill_slots_locked(self, rep: _Replica):
+        if rep.decode_inflight:
             # the in-flight decode holds a snapshot of slot_cache; inserting
             # now would be overwritten when it completes (lost update)
             return
         for slot in range(self.max_num_seqs):
-            if not self.decode_pending:
+            if not rep.decode_pending:
                 break
-            if self.slot_req[slot] is not None:
+            if rep.slot_req[slot] is not None:
                 continue
-            req, single_cache, tok = self.decode_pending.pop(0)
-            self.slot_cache = _insert_slot(self.slot_cache, single_cache, slot)
-            self.slot_req[slot] = req
-            self.lengths[slot] = req.prompt_len
-            self.next_tokens[slot] = tok
+            req, single_cache, tok = rep.decode_pending.pop(0)
+            rep.slot_cache = _insert_slot(rep.slot_cache, single_cache, slot)
+            rep.slot_req[slot] = req
+            rep.lengths[slot] = req.prompt_len
+            rep.next_tokens[slot] = tok
             req.slot = slot
             req.state = RequestState.DECODING
-            self.active_count += 1
+            rep.active_count += 1
 
-    def _ensure_decode_locked(self):
-        if self.decode_inflight or self.active_count == 0:
+    def _ensure_decode_locked(self, rep: _Replica):
+        if rep.decode_inflight or rep.active_count == 0:
             return
-        self.decode_inflight = True
-        toks = jnp.asarray(self.next_tokens)
-        lens = jnp.asarray(self.lengths)
-        fut = self.client_d.launch(
-            self.stream_d, self._decode_jit, self.params, toks,
-            self.slot_cache, lens, phase=Phase.DECODE,
-            meta={"tokens": self.active_count})
-        fut.add_done_callback(self._decode_done)
+        rep.decode_inflight = True
+        toks = jnp.asarray(rep.next_tokens)
+        lens = jnp.asarray(rep.lengths)
+        t0 = time.monotonic()
+        fut = rep.client_d.launch(
+            rep.stream_d, self._decode_jit, self.params, toks,
+            rep.slot_cache, lens, phase=Phase.DECODE,
+            meta={"tokens": rep.active_count})
+        fut.add_done_callback(
+            lambda f, rp=rep, t=t0: self._decode_done(rp, f, t))
 
-    def _decode_done(self, fut) -> None:
+    def _decode_done(self, rep: _Replica, fut, t0: float) -> None:
         try:
             logits, new_cache = fut.result()
         except Exception:
             with self._lock:
-                self.decode_inflight = False
+                rep.decode_inflight = False
             return
         now = time.monotonic()
         toks = np.argmax(np.asarray(logits), axis=-1)
         with self._lock:
-            self.slot_cache = new_cache
-            self.decode_inflight = False
+            rep.slot_cache = new_cache
+            rep.decode_inflight = False
+            rep.observe_step(now - t0)
             for slot in range(self.max_num_seqs):
-                req = self.slot_req[slot]
+                req = rep.slot_req[slot]
                 if req is None:
                     continue
-                self.lengths[slot] += 1
+                rep.lengths[slot] += 1
                 tok = int(toks[slot])
                 req.record_token(now)
                 req.output_tokens.append(tok)
-                self.next_tokens[slot] = tok
+                rep.next_tokens[slot] = tok
                 if req.done_decoding:
-                    self.slot_req[slot] = None
-                    self.lengths[slot] = 0
-                    self.active_count -= 1
+                    rep.slot_req[slot] = None
+                    rep.lengths[slot] = 0
+                    rep.active_count -= 1
                     self._finish_locked(req)
             self._drain_admission_locked()
-            self._fill_slots_locked()
-            self._ensure_decode_locked()
+            self._fill_slots_locked(rep)
+            self._ensure_decode_locked(rep)
 
     def _finish_locked(self, req: Request):
         req.state = RequestState.DONE

@@ -53,6 +53,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.api import OpDescriptor, OpType, Phase
+from repro.core.queues import flops_key
 from repro.core.session import connect
 from repro.sched import (AdmissionPolicy, AdmissionView, ClusterPolicy,
                          DynamicPDConfig, DynamicPDPolicy, FIFOPolicy,
@@ -61,10 +62,12 @@ from repro.sched import (AdmissionPolicy, AdmissionView, ClusterPolicy,
 from repro.serving.costmodel import CostModel, InstanceSpec
 from repro.serving.request import Request, RequestState
 # KV transport subsystem: topology-resolved multi-hop paths, the path-aware
-# link model, the stepped link driver, and chunked layer-wise KV streaming.
-# LinkDriver/LinkModel stay importable from here (one-release re-export).
-from repro.transport import (KVStreamer, LinkDriver, LinkModel,  # noqa: F401
-                             Topology)
+# link model (also reused, with fractional demand shares, as the per-device
+# compute-contention model), the stepped drivers, and chunked layer-wise KV
+# streaming.  The one-release re-exports from this module were removed —
+# import these from repro.transport[.drivers] directly.
+from repro.transport import KVStreamer, LinkModel, Topology
+from repro.transport.drivers import LinkDriver
 
 
 class SimClock:
@@ -123,7 +126,20 @@ class SimConfig:
     transfer_bw: float = 50e9          # disaggregation KV link (per link)
     transfer_latency_s: float = 1e-3   # fixed per-transfer launch latency
     admission_gated: bool = False      # static co-location: prefill needs slot
-    chunk_prefill_tokens: int = 0      # 0 = whole-prompt prefill ops
+    # micro-batched prefill: split each prompt into launches of at most
+    # this many tokens (0 = one whole-prompt op).  Chunks of one request
+    # ride ONE prefill stream, so they stay FIFO; between chunks the
+    # dispatch policy may interleave decode — and on a multi-queue device
+    # (compute_queues > 1) decode overlaps the chunks outright.
+    chunk_prefill_tokens: int = 0
+    # execution queues per device (repro.core.queues): compute_queues > 1
+    # lets compute ops overlap on one device — decode is pinned to the
+    # highest-index compute queue, prefill streams spread over the rest —
+    # with concurrent compute ops splitting modeled FLOP throughput by
+    # their compute-boundedness (processor sharing, like LinkModel).
+    # The default (1, 1) is the v3 engine-slot behavior, bit-for-bit.
+    compute_queues: int = 1
+    copy_queues: int = 1
     # max prefills enqueued-but-incomplete per instance (0 = unbounded).
     # A small window keeps excess prefill backlog in the instance's
     # router-visible waiting queue instead of the device queue, so a role
@@ -168,12 +184,34 @@ class SimInstance:
         self._lock = lock or threading.RLock()
         self.client = client
         self.daemon = daemon
-        self.stream_p = client.create_stream(phase=Phase.PREFILL)
-        self.stream_d = client.create_stream(phase=Phase.DECODE)
+        # execution queues (v4): with one compute queue this is exactly the
+        # v3 stream layout (one prefill + one decode stream, any-queue).
+        # With compute_queues > 1, decode is PINNED to the highest-index
+        # compute queue (prefill can never occupy it) and prefill streams
+        # spread over the remaining queues, requests round-robining across
+        # them — micro-batched prefill chunks then overlap decode steps.
+        cq = max(1, sim_cfg.compute_queues)
+        if cq > 1:
+            self.streams_p = [client.create_stream(phase=Phase.PREFILL,
+                                                   queue=i)
+                              for i in range(cq - 1)]
+            self.stream_d = client.create_stream(phase=Phase.DECODE,
+                                                 queue=cq - 1)
+        else:
+            self.streams_p = [client.create_stream(phase=Phase.PREFILL)]
+            self.stream_d = client.create_stream(phase=Phase.DECODE)
+        self.stream_p = self.streams_p[0]
         self.stream_c = client.copy_engine_stream()   # KV transfers
+        self._rr_prefill = 0           # round-robin over prefill streams
         self.slow_factor = 1.0
         self.failed = False
         self.link_driver: Optional[LinkDriver] = None  # set by the Cluster
+        # compute-contention model (set by the Cluster when the device has
+        # >1 compute queue): concurrent compute ops on this device split
+        # modeled FLOP throughput by their compute shares
+        self.compute_key = flops_key(name)
+        self.compute_driver = None     # stepped drive (LinkDriver)
+        self.shares_compute = cq > 1   # threaded drive routes through timer
         # request state
         self.prefill_waiting: List[Request] = []   # awaiting admission (gated)
         self.prefilling: Dict[int, Request] = {}  # prefill queued/in-flight
@@ -251,6 +289,21 @@ class SimInstance:
             self._enqueue_prefill(req)
             n -= 1
 
+    def _prefill_chunks(self, prompt_len: int) -> List[tuple]:
+        """(tokens, context_offset) per micro-batch chunk: the prompt split
+        into at most ``chunk_prefill_tokens``-token launches (one chunk
+        when 0).  Chunks of one request ride one prefill stream, so they
+        dispatch FIFO within their queue class."""
+        c = self.sim_cfg.chunk_prefill_tokens
+        if c <= 0 or prompt_len <= c:
+            return [(prompt_len, 0)]
+        out, off = [], 0
+        while off < prompt_len:
+            n = min(c, prompt_len - off)
+            out.append((n, off))
+            off += n
+        return out
+
     def _enqueue_prefill(self, req: Request) -> None:
         if self.kv_free() < req.prompt_len:
             # No KV room: park until decode frees memory.
@@ -259,12 +312,23 @@ class SimInstance:
         self.kv_used += req.prompt_len
         req.state = RequestState.PREFILLING
         self.prefilling[req.req_id] = req
-        fut = self.client.launch(
-            self.stream_p, None, phase=Phase.PREFILL,
-            meta={"req": req, "tokens": req.prompt_len, "_sim_inst": self,
-                  **self.cost.prefill_meta(self.spec, req.prompt_len),
-                  "est_duration": self.cost.prefill_time(
-                      self.spec, req.prompt_len)})
+        # requests round-robin across the device's prefill streams (one
+        # per non-decode compute queue); all chunks of ONE request share a
+        # stream so program order holds without event edges
+        stream = self.streams_p[self._rr_prefill % len(self.streams_p)]
+        self._rr_prefill += 1
+        chunks = self._prefill_chunks(req.prompt_len)
+        for i, (ctoks, off) in enumerate(chunks):
+            fut = self.client.launch(
+                stream, None, phase=Phase.PREFILL,
+                meta={"req": req, "tokens": ctoks, "ctx": off + ctoks,
+                      "chunk": i, "chunks": len(chunks), "_sim_inst": self,
+                      **self.cost.prefill_meta(self.spec, ctoks),
+                      "est_duration": self.cost.prefill_time(
+                          self.spec, ctoks, context=off + ctoks)})
+        # the request's prefill completes with its LAST chunk (a failed
+        # device errors/abandons every chunk, so the callback still sees
+        # the fault through the final chunk's future)
         fut.add_done_callback(lambda f, r=req: self._prefill_done(r, f))
         self.kick()
 
@@ -380,6 +444,24 @@ class SimInstance:
                 if self.ewma_step else dur
             return dur
 
+    def op_compute_share(self, op: OpDescriptor) -> float:
+        """The op's demand on the device's FLOP throughput (its compute-
+        boundedness, from the cost model) — the weight the contention
+        model shares FLOPs by when compute ops overlap on a multi-queue
+        device.  Late-bound like ``op_duration`` (decode's batch forms at
+        execution time)."""
+        with self._lock:
+            if op.phase == Phase.DECODE:
+                b = max(1, len(self.active))
+                ctx = (sum(r.total_tokens for r in self.active) // b) \
+                    if self.active else 1024
+                return self.cost.decode_compute_share(self.spec, b, ctx)
+            if op.phase == Phase.PREFILL:
+                return self.cost.prefill_compute_share(
+                    self.spec, int(op.meta.get("tokens", 1)),
+                    context=int(op.meta.get("ctx", 0)))
+            return 1.0
+
     def _decode_done(self, fut) -> None:
         with self._lock:
             self._decode_op_inflight = False
@@ -474,6 +556,20 @@ class SimInstance:
             self.link_driver.start(op.meta["link"],
                                    float(op.meta.get("nbytes", 0)),
                                    lambda x, o=op: self._complete(o))
+            return
+        # Multi-queue devices: concurrent compute ops split modeled FLOP
+        # throughput — route launches through the compute-contention model
+        # (work = solo duration x share; weighted processor sharing, so a
+        # bandwidth-bound decode stretches a co-located prefill only by
+        # its small compute share).  Single-queue devices (the default)
+        # never see compute concurrency and keep the fixed-duration path.
+        if (op.op == OpType.LAUNCH and self.compute_driver is not None
+                and op.phase in (Phase.PREFILL, Phase.DECODE)):
+            dur = self.op_duration(op)
+            share = self.op_compute_share(op)
+            self.compute_driver.start(self.compute_key, dur * share,
+                                      lambda x, o=op: self._complete(o),
+                                      share=share)
             return
         self.loop.after(self.op_duration(op), lambda o=op: self._complete(o))
 
@@ -612,16 +708,39 @@ class Cluster:
             self.cost.kv_bytes_per_token(),
             chunk_tokens=self.sim_cfg.kv_chunk_tokens,
             n_layers=max(1, cfg.num_attention_layers()))
+        # Compute-contention model (execution queues, v4): one shared
+        # LinkModel whose segments are per-device ("flops", name) keys with
+        # capacity 1.0 work-unit/s — concurrent compute-queue ops on one
+        # device split modeled FLOP throughput in proportion to their
+        # compute shares.  Only built when devices actually expose >1
+        # compute queue, so the default config's event stream (and thus
+        # its outputs) is bit-identical to the single-slot engine model.
+        self.compute_model: Optional[LinkModel] = None
+        self.compute_driver: Optional[LinkDriver] = None
+        self._compute_timer = None
+        shared_flops = self.sim_cfg.compute_queues > 1
         if drive == "stepped":
             self.loop = EventLoop()
             self.link_driver = LinkDriver(self.loop, self.link_model)
+            if shared_flops:
+                self.compute_model = LinkModel(bw=1.0, latency_s=0.0)
+                self.compute_driver = LinkDriver(self.loop,
+                                                 self.compute_model)
         else:
             from repro.serving.realtime import (RealTimeLoop,
-                                                ThreadedLinkTimer)
+                                                calibrate_dispatch_overhead)
+            from repro.transport.drivers import ThreadedLinkTimer
             self.loop = RealTimeLoop(time_scale)
             self.link_driver = None
+            overhead = calibrate_dispatch_overhead()
             self._link_timer = ThreadedLinkTimer(self.link_model,
-                                                 self.loop.clock, time_scale)
+                                                 self.loop.clock, time_scale,
+                                                 sleep_overhead_s=overhead)
+            if shared_flops:
+                self.compute_model = LinkModel(bw=1.0, latency_s=0.0)
+                self._compute_timer = ThreadedLinkTimer(
+                    self.compute_model, self.loop.clock, time_scale,
+                    sleep_overhead_s=overhead)
         # control plane (v3): the cluster policy owns routing, migration,
         # and role switching; built by registry name from the deployment
         for name, want in ((deploy.cluster_policy, "cluster"),
@@ -679,20 +798,24 @@ class Cluster:
                 plan.append((f"C{i}", InstanceSpec(f"C{i}", d.colocated_chips),
                              self._dispatch_policy(), sim_cfg, "both"))
         policies = [p for _, _, p, _, _ in plan]
+        queue_spec = {"compute": max(1, self.sim_cfg.compute_queues),
+                      "copy": max(1, self.sim_cfg.copy_queues)}
         if self.drive == "stepped":
             backend = SimBackend(self.loop.clock)
             self.session = connect(
                 mode="sim", devices=len(plan), backend=backend,
-                policy=lambda i: policies[i])
+                policy=lambda i: policies[i], queues=queue_spec)
         else:
             # threaded: real daemon dispatch threads paced by the scaled
             # wall clock (repro.serving.realtime)
             from repro.serving.realtime import RealTimeSimBackend
             backend = RealTimeSimBackend(self.loop.clock, self.loop.scale,
-                                         link_timer=self._link_timer)
+                                         link_timer=self._link_timer,
+                                         compute_timer=self._compute_timer)
+            self._backend = backend
             self.session = connect(
                 mode="flex", devices=len(plan), backend=backend,
-                policy=lambda i: policies[i])
+                policy=lambda i: policies[i], queues=queue_spec)
         for i, (name, spec, _, sim_cfg, role) in enumerate(plan):
             inst = SimInstance(name, spec, self.cost, self.loop,
                                self.session.device(i), self.session.daemon(i),
@@ -701,6 +824,7 @@ class Cluster:
             # dispatch policies see link-queueing pressure (PolicyContext)
             self.session.daemon(i).link_stats_fn = self.link_model.stats
             inst.link_driver = self.link_driver
+            inst.compute_driver = self.compute_driver
             if self.drive == "stepped":
                 inst.on_cross_device = self._kick_all
             if d.mode == "disagg":
@@ -1028,6 +1152,17 @@ class Cluster:
             out["decode_stall_s"] = round(
                 sum(i.decode_stall_s for i in self.instances), 6)
             out["decode_stalls"] = sum(i.stalls for i in self.instances)
+        if self.sim_cfg.compute_queues > 1 or self.sim_cfg.copy_queues > 1 \
+                or self.sim_cfg.chunk_prefill_tokens:
+            out["queues"] = {
+                "compute": max(1, self.sim_cfg.compute_queues),
+                "copy": max(1, self.sim_cfg.copy_queues),
+                "chunk_prefill_tokens": self.sim_cfg.chunk_prefill_tokens}
+        if self.drive == "threaded":
+            # per-op dispatch-overhead calibration (measured at backend
+            # startup, folded into the wall-clock pacing) — recorded so
+            # BENCH artifacts show how faithful the threaded timing was
+            out["calibration"] = self._backend.calibration()
         out["policy"] = self.policy_telemetry()
         return out
 

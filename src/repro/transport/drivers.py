@@ -1,5 +1,13 @@
 """Drivers gluing the path-aware :class:`LinkModel` onto both drive modes.
 
+The same two drivers also drive the **compute-contention model** (a
+``LinkModel`` over per-device ``("flops", name)`` segments with
+fractional demand shares): concurrent compute-queue ops on one device
+split modeled FLOP throughput exactly like concurrent transfers split a
+link, so both drive modes honor execution-queue contention through one
+mechanism (``share`` below is the flow's demand weight; 1.0 for plain
+link transfers).
+
 Processor-shared segments change EVERY sharing transfer's finish time when
 one starts or completes — and with multi-hop paths the blast radius is any
 flow crossing any segment of the changed path.  Both drivers therefore
@@ -32,8 +40,9 @@ class LinkDriver:
         self.model = model
         self._done_cbs: Dict[LinkTransfer, Callable] = {}
 
-    def start(self, link, nbytes: float, done_cb: Callable) -> LinkTransfer:
-        x = self.model.start(link, nbytes, self.loop.clock.t)
+    def start(self, link, nbytes: float, done_cb: Callable,
+              share: float = 1.0) -> LinkTransfer:
+        x = self.model.start(link, nbytes, self.loop.clock.t, share=share)
         self._done_cbs[x] = done_cb
         self._schedule_polls(x.path)
         return x
@@ -69,14 +78,24 @@ class LinkDriver:
 
 
 class ThreadedLinkTimer:
-    """Threaded drive: block the copy-engine thread for the occupancy-aware
-    duration, re-polling at the current ETA (``scale`` converts virtual
-    seconds to wall seconds, as in ``repro.serving.realtime``)."""
+    """Threaded drive: block the calling engine thread for the
+    occupancy-aware duration, re-polling at the current ETA (``scale``
+    converts virtual seconds to wall seconds, as in
+    ``repro.serving.realtime``).
 
-    def __init__(self, model: LinkModel, clock, scale: float):
+    ``sleep_overhead_s`` is the calibrated wall overhead each
+    ``time.sleep`` adds on this host (timer granularity + scheduler
+    wakeup); it is subtracted from every poll sleep so short transfers —
+    in particular the compute-contention model's per-op work, whose
+    modeled durations rival the sleep overshoot at small time scales —
+    do not inflate virtual time."""
+
+    def __init__(self, model: LinkModel, clock, scale: float,
+                 sleep_overhead_s: float = 0.0):
         self.model = model
         self.clock = clock
         self.scale = float(scale)
+        self.sleep_overhead_s = float(sleep_overhead_s)
         self._lock = threading.Lock()
 
     def fail_segment(self, seg, now: float) -> None:
@@ -87,15 +106,16 @@ class ThreadedLinkTimer:
         with self._lock:
             self.model.fail_segment(seg, now)
 
-    def transfer(self, link, nbytes: float) -> None:
+    def transfer(self, link, nbytes: float, share: float = 1.0) -> None:
         with self._lock:
-            x = self.model.start(link, nbytes, self.clock.t)
+            x = self.model.start(link, nbytes, self.clock.t, share=share)
         while True:
             with self._lock:
                 if self.model.poll(x, self.clock.t):
                     return
                 eta = self.model.eta(x, self.clock.t)
             # cap the sleep so out-of-band model changes (segment failure,
-            # bandwidth edits) are noticed within a bounded wall delay
-            wall = (eta - self.clock.t) * self.scale
-            time.sleep(min(max(wall, 1e-4), 0.05))
+            # bandwidth edits) are noticed within a bounded wall delay;
+            # subtract the per-sleep overshoot so short transfers pace true
+            wall = (eta - self.clock.t) * self.scale - self.sleep_overhead_s
+            time.sleep(min(wall, 0.05) if wall > 0 else 0)

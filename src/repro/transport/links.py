@@ -53,18 +53,28 @@ def seg_key(seg: Hashable) -> str:
 
 
 class LinkTransfer:
-    """One in-flight transfer (identity equality: unique in-flight object)."""
+    """One in-flight transfer (identity equality: unique in-flight object).
 
-    __slots__ = ("path", "nbytes", "remaining", "start_t", "done_t", "lost")
+    ``share`` (default 1.0) is the flow's **demand weight** for weighted
+    processor sharing: a flow never moves faster than ``share`` of a
+    segment's bandwidth, and contending flows split each segment's
+    bandwidth in proportion to their shares.  Link transfers use 1.0 (the
+    classic even split); the compute-contention model reuses this machinery
+    with fractional shares — an op's compute-boundedness — so a
+    bandwidth-bound decode step barely slows a co-located prefill chunk."""
+
+    __slots__ = ("path", "nbytes", "remaining", "start_t", "done_t", "lost",
+                 "share")
 
     def __init__(self, path: Tuple[Hashable, ...], nbytes: float,
-                 start_t: float):
+                 start_t: float, share: float = 1.0):
         self.path = path
         self.nbytes = float(nbytes)
         self.remaining = float(nbytes)
         self.start_t = start_t
         self.done_t = -1.0
         self.lost = 0.0        # bytes declared lost to a severed segment
+        self.share = float(share)
 
     @property
     def link(self) -> Hashable:
@@ -121,26 +131,36 @@ class LinkModel:
     def _solo_bw(self, path: Tuple[Hashable, ...]) -> float:
         return min(self.link_bw(s) for s in path)
 
-    def ideal_time(self, nbytes: float, link: Hashable = None) -> float:
-        """Contention-free reference duration of one transfer."""
+    def ideal_time(self, nbytes: float, link: Hashable = None,
+                   share: float = 1.0) -> float:
+        """Contention-free reference duration of one transfer (a flow with
+        a fractional demand ``share`` peaks at that fraction of the
+        bandwidth even alone)."""
         path = as_path(link) if link is not None else None
         bw = self._solo_bw(path) if path else self.bw
-        return self.latency_s + nbytes / bw
+        return self.latency_s + nbytes / (bw * min(share, 1.0))
 
     # ----------------------------------------------------------- occupancy
-    def _seg_counts(self) -> Dict[Hashable, int]:
-        counts: Dict[Hashable, int] = {}
+    def _seg_counts(self) -> Dict[Hashable, float]:
+        """Per-segment demand: the sum of the shares of the flows crossing
+        it (equal to the flow count when every share is 1.0 — the classic
+        even processor split)."""
+        counts: Dict[Hashable, float] = {}
         for x in self._active:
             for s in x.path:
-                counts[s] = counts.get(s, 0) + 1
+                counts[s] = counts.get(s, 0.0) + x.share
         return counts
 
-    def _rate(self, x: LinkTransfer, counts: Dict[Hashable, int]) -> float:
-        return min(self.link_bw(s) / counts[s] for s in x.path)
+    def _rate(self, x: LinkTransfer, counts: Dict[Hashable, float]) -> float:
+        # weighted processor sharing: a segment under-subscribed in total
+        # demand gives each flow its full share; oversubscribed, flows
+        # split the bandwidth in proportion to their shares
+        return min(self.link_bw(s) * x.share / max(counts[s], 1.0)
+                   for s in x.path)
 
     def _bottleneck(self, x: LinkTransfer,
-                    counts: Dict[Hashable, int]) -> Hashable:
-        return min(x.path, key=lambda s: self.link_bw(s) / counts[s])
+                    counts: Dict[Hashable, float]) -> Hashable:
+        return min(x.path, key=lambda s: self.link_bw(s) / max(counts[s], 1.0))
 
     def active_count(self, seg: Hashable) -> int:
         return sum(1 for x in self._active if seg in x.path)
@@ -187,30 +207,33 @@ class LinkModel:
                 continue
             for s in x.path:
                 self._seg(s).nbytes += moved
-            solo = self._solo_bw(x.path)
+            solo = self._solo_bw(x.path) * min(x.share, 1.0)
             lost = moved / rate - moved / solo
             if lost > 0:
                 self._seg(self._bottleneck(x, counts)).queue_delay_s += lost
 
-    def start(self, link, nbytes: float, now: float) -> LinkTransfer:
+    def start(self, link, nbytes: float, now: float,
+              share: float = 1.0) -> LinkTransfer:
         self._advance(now)
-        x = LinkTransfer(as_path(link), nbytes, now)
+        x = LinkTransfer(as_path(link), nbytes, now, share=share)
         self._active[x] = None
-        counts = self._seg_counts()
         for s in x.path:
             st = self._seg(s)
             st.transfers += 1
-            st.peak_concurrency = max(st.peak_concurrency, counts[s])
+            st.peak_concurrency = max(st.peak_concurrency,
+                                      self.active_count(s))
         return x
 
-    def occupancy(self) -> Dict[Hashable, int]:
-        """Per-segment active-flow counts (a snapshot drivers may pass
-        back into ``eta`` to batch-estimate many flows without recomputing
-        the counts per call)."""
+    def occupancy(self) -> Dict[Hashable, float]:
+        """Per-segment DEMAND: the sum of the shares of the flows crossing
+        each segment (equals the integer flow count when every share is
+        1.0 — use ``active_count`` for the flow count proper).  A snapshot
+        drivers may pass back into ``eta`` to batch-estimate many flows
+        without recomputing the sums per call."""
         return self._seg_counts()
 
     def eta(self, x: LinkTransfer, now: float,
-            counts: Optional[Dict[Hashable, int]] = None) -> float:
+            counts: Optional[Dict[Hashable, float]] = None) -> float:
         """Completion time under CURRENT occupancy (exact if it persists).
         ``counts`` short-circuits the per-call occupancy scan when the
         caller already holds a fresh ``occupancy()`` snapshot."""
@@ -246,7 +269,13 @@ class LinkModel:
     def poll(self, x: LinkTransfer, now: float) -> bool:
         """Advance the fabric; True (and retire the transfer) once done."""
         self._advance(now)
-        if x.remaining > 1e-3 or now < x.start_t + self.latency_s - 1e-12:
+        # done-threshold: absolute 1e-3 for byte-denominated transfers (the
+        # historical float tolerance), but never more than a ppb of the
+        # transfer itself — the compute-contention model denominates work
+        # in seconds, where 1e-3 would swallow entire decode steps
+        thresh = min(1e-3, max(x.nbytes * 1e-9, 1e-12))
+        if x.remaining > thresh \
+                or now < x.start_t + self.latency_s - 1e-12:
             return False
         if x not in self._active:
             return False               # stale poll of a retired transfer
@@ -264,7 +293,7 @@ class LinkModel:
         self.bytes_moved += x.nbytes
         self.busy_time += x.elapsed
         self.queueing_delay += max(
-            0.0, x.elapsed - self.ideal_time(x.nbytes, x.path))
+            0.0, x.elapsed - self.ideal_time(x.nbytes, x.path, x.share))
         return True
 
     # --------------------------------------------------------------- stats

@@ -15,10 +15,11 @@ import pytest
 from conftest import drive_modes
 
 from repro.core import ENGINE_COPY, FIFOPolicy, Phase, connect
-from repro.serving import (Cluster, LinkModel, SimConfig, deployment_6p2d,
+from repro.serving import (Cluster, SimConfig, deployment_6p2d,
                            deployment_dynamic, make_workload)
-from repro.serving.simulator import (DeploymentSpec, EventLoop, LinkDriver,
-                                     SimBackend)
+from repro.serving.simulator import DeploymentSpec, EventLoop, SimBackend
+from repro.transport import LinkModel
+from repro.transport.drivers import LinkDriver
 
 
 # --------------------------------------------------------- stepped driving

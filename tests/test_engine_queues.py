@@ -1,0 +1,465 @@
+"""Execution-queue engine model (v4): multi-queue per-device dispatch,
+compute-queue contention, micro-batched prefill, and the data-parallel
+multi-device RealEngine.
+
+Covers: queue-slot handout (one op in flight per queue, pinned streams
+bind to their queue), the share-weighted FLOP contention model, chunked
+prefill FIFO order within a queue class, replica routing + KV/handle
+accounting on the real engine, the ``least_contended`` cluster policy,
+threaded-pacing calibration, and the default-config regression (single
+queue == the v3 engine-slot behavior, byte-for-byte)."""
+import copy
+import threading
+import time
+
+import numpy as np
+import pytest
+from conftest import drive_modes
+
+from repro.core import Phase, connect
+from repro.core.queues import parse_queue_spec, queue_key
+from repro.serving import Cluster, DeploymentSpec, SimConfig, make_workload
+from repro.serving.simulator import EventLoop, SimBackend, deployment_dynamic
+from repro.transport import LinkModel
+
+
+def _drive_all(loop, daemons):
+    """Stepped driver: drain every daemon's ready set on each completion."""
+    def kick_all():
+        for d in daemons:
+            while True:
+                op = d.select_next(loop.clock.t)
+                if op is None:
+                    break
+
+                def complete(o=op, dd=d):
+                    dd.mark_complete(o, loop.clock.t)
+                    kick_all()
+                loop.after(float(op.meta.get("est_duration", 1e-3)), complete)
+    return kick_all
+
+
+# ------------------------------------------------------------ queue specs
+def test_parse_queue_spec_forms():
+    assert parse_queue_spec(None) == {"compute": 1, "copy": 1}
+    assert parse_queue_spec("compute:3") == {"compute": 3, "copy": 1}
+    assert parse_queue_spec({"compute": 2, "copy": 2}) == \
+        {"compute": 2, "copy": 2}
+    with pytest.raises(ValueError):
+        parse_queue_spec("dma:2")
+    with pytest.raises(ValueError):
+        parse_queue_spec({"compute": 0})
+    assert queue_key("compute", 1) == "compute:1"
+
+
+# ------------------------------------------------------ queue-slot handout
+def test_queue_slot_handout_stepped():
+    """A compute x 2 device hands the stepped driver TWO compute ops
+    before any completion (one per free queue); a third dispatches only
+    after a slot frees."""
+    loop = EventLoop()
+    sess = connect(mode="sim", devices=1, backend=SimBackend(loop.clock),
+                   queues={"compute": 2})
+    c = sess.device(0)
+    d = sess.daemon(0)
+    streams = [c.create_stream(phase=Phase.PREFILL) for _ in range(3)]
+    for s in streams:
+        c.launch(s, None, phase=Phase.PREFILL, meta={"est_duration": 1.0})
+    first = d.select_next(0.0)
+    second = d.select_next(0.0)
+    assert first is not None and second is not None
+    assert first.meta["_queue"] != second.meta["_queue"]
+    assert d.select_next(0.0) is None       # both compute queues busy
+    d.mark_complete(first, 1.0)
+    third = d.select_next(1.0)
+    assert third is not None
+    assert third.meta["_queue"] == first.meta["_queue"]  # reuses freed slot
+    sess.close()
+
+
+def test_queue_slot_handout_threaded():
+    """Two compute queues execute two launches CONCURRENTLY on real
+    threads; a third stream's launch waits for a free queue."""
+    gate = threading.Event()
+    started = [threading.Event() for _ in range(3)]
+    with connect(mode="flex", devices=1, queues={"compute": 2}) as sess:
+        streams = [sess.create_stream(phase=Phase.PREFILL) for _ in range(3)]
+        futs = [sess.launch(s, lambda i=i: (started[i].set(), gate.wait(5)),
+                            phase=Phase.PREFILL)
+                for i, s in enumerate(streams)]
+        assert started[0].wait(5) and started[1].wait(5)
+        time.sleep(0.05)
+        assert not started[2].is_set()      # no third compute queue
+        gate.set()
+        for f in futs:
+            f.result(10)
+        assert started[2].is_set()
+
+
+def test_pinned_stream_binds_to_its_queue_stepped():
+    """A stream pinned to queue 0 stays blocked while queue 0 is busy even
+    though queue 1 is free; an unpinned stream takes the free queue."""
+    loop = EventLoop()
+    sess = connect(mode="sim", devices=1, backend=SimBackend(loop.clock),
+                   queues={"compute": 2})
+    c = sess.device(0)
+    d = sess.daemon(0)
+    s_a = c.create_stream(phase=Phase.PREFILL, queue=0)
+    s_b = c.create_stream(phase=Phase.PREFILL, queue=0)
+    s_c = c.create_stream(phase=Phase.DECODE, queue=1)
+    c.launch(s_a, None, phase=Phase.PREFILL, meta={"est_duration": 1.0})
+    c.launch(s_b, None, phase=Phase.PREFILL, meta={"est_duration": 1.0})
+    c.launch(s_c, None, phase=Phase.DECODE, meta={"est_duration": 1.0})
+    first = d.select_next(0.0)
+    assert first.meta["_queue"] == ("compute", 0)
+    nxt = d.select_next(0.0)
+    # s_b is pinned to the busy queue 0 -> only the decode head is ready
+    assert nxt is not None and nxt.phase == Phase.DECODE
+    assert nxt.meta["_queue"] == ("compute", 1)
+    assert d.select_next(0.0) is None
+    d.mark_complete(first, 1.0)
+    after = d.select_next(1.0)              # now s_b's head dispatches
+    assert after.vstream == s_b and after.meta["_queue"] == ("compute", 0)
+    sess.close()
+
+
+def test_queue_binding_validation_and_rebind():
+    loop = EventLoop()
+    sess = connect(mode="sim", devices=1, backend=SimBackend(loop.clock),
+                   queues={"compute": 2})
+    c = sess.device(0)
+    d = sess.daemon(0)
+    with pytest.raises(ValueError):
+        c.create_stream(phase=Phase.PREFILL, queue=5)
+    s = c.create_stream(phase=Phase.PREFILL)
+    assert d.stream_queue(s) is None
+    c.bind_stream_queue(s, 1)
+    assert d.stream_queue(s) == 1
+    with pytest.raises(ValueError):
+        c.bind_stream_queue(s, 2)
+    c.bind_stream_queue(s, None)
+    assert d.stream_queue(s) is None
+    sess.close()
+
+
+def test_queue_occupancy_in_policy_context():
+    """The daemon reports per-queue occupancy (queue key -> phase)."""
+    loop = EventLoop()
+    sess = connect(mode="sim", devices=1, backend=SimBackend(loop.clock),
+                   queues={"compute": 2})
+    c = sess.device(0)
+    d = sess.daemon(0)
+    s = c.create_stream(phase=Phase.PREFILL)
+    c.launch(s, None, phase=Phase.PREFILL, meta={"est_duration": 1.0})
+    assert d.queue_occupancy() == {"compute:0": None, "compute:1": None,
+                                   "copy:0": None}
+    op = d.select_next(0.0)
+    occ = d.queue_occupancy()
+    assert occ["compute:0"] == "prefill"
+    assert occ["compute:1"] is None and occ["copy:0"] is None
+    d.mark_complete(op, 1.0)
+    assert d.queue_occupancy()["compute:0"] is None
+    sess.close()
+
+
+# ----------------------------------------------- compute-share contention
+def test_share_weighted_processor_sharing():
+    """The FLOP contention model: a compute-bound op (share 1.0) and a
+    bandwidth-bound op (share 0.25) co-located on one device each stretch
+    by the total demand (1.25x), not by 2x — and a fractional-share op
+    alone runs at its solo duration."""
+    lm = LinkModel(bw=1.0, latency_s=0.0)
+    seg = ("flops", "dev")
+    # solo: work = solo_duration * share -> elapsed == solo_duration
+    x = lm.start(seg, 1.0 * 0.25, 0.0, share=0.25)
+    assert lm.eta(x, 0.0) == pytest.approx(1.0)
+    assert lm.poll(x, 1.0)
+    # co-located: total demand 1.25 -> both stretch 1.25x
+    a = lm.start(seg, 1.0, 10.0, share=1.0)       # compute-bound, solo 1.0s
+    b = lm.start(seg, 0.25, 10.0, share=0.25)     # bw-bound, solo 1.0s
+    assert lm.eta(a, 10.0) == pytest.approx(11.25)
+    assert lm.eta(b, 10.0) == pytest.approx(11.25)
+    assert lm.poll(a, 11.25) and lm.poll(b, 11.25)
+    # equal full shares degrade to the classic even split (2x)
+    c1 = lm.start(seg, 1.0, 20.0, share=1.0)
+    c2 = lm.start(seg, 1.0, 20.0, share=1.0)
+    assert lm.eta(c1, 20.0) == pytest.approx(22.0)
+    assert lm.eta(c2, 20.0) == pytest.approx(22.0)
+
+
+@pytest.mark.parametrize("drive", drive_modes())
+def test_multi_queue_cluster_completes_and_conserves(drive):
+    """A compute x 2 deployment with micro-batched prefill completes its
+    workload with KV conservation intact in BOTH drive modes, and the
+    threaded drive surfaces its pacing calibration."""
+    from repro.configs import get_config
+    cfg = get_config("mixtral-8x7b")
+    wl = make_workload(12, 2048, 24, rate=60.0, seed=5)
+    sim = SimConfig(compute_queues=2, chunk_prefill_tokens=1024)
+    kw = {} if drive == "stepped" else {"time_scale": 0.05}
+    cluster = Cluster(cfg, deployment_dynamic(instances=1), sim_cfg=sim,
+                      drive=drive, **kw)
+    res = cluster.run(copy.deepcopy(wl), until=72000)
+    cluster.check_kv_conservation()
+    assert res["completed"] == 12
+    assert res["queues"] == {"compute": 2, "copy": 1,
+                             "chunk_prefill_tokens": 1024}
+    if drive == "threaded":
+        cal = res["calibration"]
+        assert 0.0 <= cal["dispatch_overhead_wall_s"] <= 2e-3
+        assert cal["time_scale"] == 0.05
+
+
+def test_decode_tpot_improves_with_second_compute_queue():
+    """The acceptance property, stepped (deterministic): under co-located
+    chunked prefill, a second compute queue (decode pinned to its own
+    queue) cuts decode TPOT versus the single-queue baseline at equal
+    throughput."""
+    from repro.configs import get_config
+    cfg = get_config("mixtral-8x7b")
+    wl = make_workload(40, 8192, 96, rate=40.0, seed=3)
+
+    def run(cq):
+        sim = SimConfig(compute_queues=cq, chunk_prefill_tokens=2048)
+        cluster = Cluster(cfg, deployment_dynamic(instances=1), sim_cfg=sim)
+        res = cluster.run(copy.deepcopy(wl), until=72000)
+        cluster.check_kv_conservation()
+        assert res["completed"] == 40
+        return res
+
+    base, multi = run(1), run(2)
+    assert multi["tpot_mean_s"] < base["tpot_mean_s"], (base, multi)
+    assert multi["tpot_p99_s"] < base["tpot_p99_s"]
+    assert multi["requests_per_s"] >= 0.98 * base["requests_per_s"]
+
+
+# ------------------------------------------------------ micro-batch order
+def test_prefill_chunks_stay_fifo_within_queue_class():
+    """Chunks of one request ride ONE stream: they dispatch and complete
+    in chunk order even on a multi-queue device with other prefill work
+    interleaving on the sibling queue."""
+    loop = EventLoop()
+    sess = connect(mode="sim", devices=1, backend=SimBackend(loop.clock),
+                   queues={"compute": 2})
+    c = sess.device(0)
+    d = sess.daemon(0)
+    s_req = c.create_stream(phase=Phase.PREFILL, queue=0)
+    s_other = c.create_stream(phase=Phase.PREFILL, queue=1)
+    completions = []
+    for i in range(4):                       # one request's chunks
+        c.launch(s_req, None, phase=Phase.PREFILL,
+                 meta={"est_duration": 0.5, "chunk": i}).add_done_callback(
+            lambda f, i=i: completions.append(("req", i, loop.clock.t)))
+    for i in range(3):                       # a sibling request's work
+        c.launch(s_other, None, phase=Phase.PREFILL,
+                 meta={"est_duration": 0.7}).add_done_callback(
+            lambda f, i=i: completions.append(("other", i, loop.clock.t)))
+    kick = _drive_all(loop, [d])
+    loop.at(0.0, kick)
+    loop.run()
+    req_chunks = [i for tag, i, _ in completions if tag == "req"]
+    assert req_chunks == sorted(req_chunks) == [0, 1, 2, 3]
+    # the sibling stream's ops really interleaved (overlap, not serial)
+    req_times = [t for tag, _, t in completions if tag == "req"]
+    other_times = [t for tag, _, t in completions if tag == "other"]
+    assert other_times[0] < req_times[-1]
+    sess.close()
+
+
+def test_cluster_chunked_prefill_first_token_after_last_chunk():
+    """A chunked prompt's first token arrives once ALL chunks finished:
+    chunk launches model the same total work as one whole-prompt op (plus
+    per-launch overhead), and the request still completes decode."""
+    from repro.configs import get_config
+    cfg = get_config("mixtral-8x7b")
+    wl = make_workload(4, 3000, 8, rate=1e5, seed=1)
+    res_whole = None
+    for chunk in (0, 1000):
+        sim = SimConfig(chunk_prefill_tokens=chunk)
+        cluster = Cluster(cfg, deployment_dynamic(instances=1), sim_cfg=sim)
+        res = cluster.run(copy.deepcopy(wl), until=72000)
+        assert res["completed"] == 4
+        if chunk == 0:
+            res_whole = res
+        else:
+            # chunked prefill pays two extra launch overheads per prompt
+            assert res["ttft_mean_s"] > res_whole["ttft_mean_s"]
+    cluster.check_kv_conservation()
+
+
+# ------------------------------------------------- default-config identity
+def test_default_config_byte_identical_to_single_queue():
+    """SimConfig() and an explicit compute x 1 / copy x 1 spec produce the
+    IDENTICAL result dict (the queue layer adds no event-stream change at
+    the default config)."""
+    from repro.configs import get_config
+    cfg = get_config("mixtral-8x7b")
+    wl = make_workload(20, 1024, 32, rate=80.0, seed=9)
+
+    def run(sim_cfg):
+        cluster = Cluster(cfg, DeploymentSpec(
+            mode="disagg", prefill_instances=2, prefill_chips=16,
+            decode_instances=1, decode_chips=64), sim_cfg=sim_cfg)
+        res = cluster.run(copy.deepcopy(wl), until=72000)
+        cluster.check_kv_conservation()
+        return res
+
+    a = run(SimConfig())
+    b = run(SimConfig(compute_queues=1, copy_queues=1,
+                      chunk_prefill_tokens=0))
+    assert a == b
+
+
+# --------------------------------------------- replica routing (RealEngine)
+@pytest.mark.slow
+def test_real_engine_replicas_route_and_account():
+    """Data-parallel RealEngine: R=2 replicas over one session — requests
+    spread across replicas by the cluster policy, per-request outputs are
+    byte-identical to the single-replica engine, and every replica's
+    handle/memory tables drain to zero (KV accounting)."""
+    import jax
+    from repro.configs import get_config
+    from repro.distributed.sharding import unbox
+    from repro.models import build_model
+    from repro.serving.engine import RealEngine
+    from repro.serving.request import Request
+
+    cfg = get_config("olmo-1b").reduced()
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+
+    def mk():
+        return [Request(prompt_len=10, max_new_tokens=6,
+                        prompt_tokens=np.random.default_rng(s).integers(
+                            0, cfg.vocab_size, 10).tolist(),
+                        arrival_time=s * 0.01) for s in range(6)]
+
+    outs = {}
+    for tag, kw in (("r1", {}), ("r2", {"replicas": 2}),
+                    ("r2q2", {"replicas": 2, "compute_queues": 2})):
+        eng = RealEngine(model, params, mode="dynamic_pd", max_num_seqs=2,
+                         max_len=32, **kw)
+        try:
+            reqs = mk()
+            res = eng.run(reqs, timeout=300)
+            assert res["completed"] == 6
+            outs[tag] = [r.output_tokens for r in reqs]
+            if kw.get("replicas", 1) > 1:
+                assert {r.instance for r in reqs} == \
+                    {"replica0", "replica1"}
+        finally:
+            eng.shutdown()
+        for dev in eng.session.stats().values():   # leak-free per replica
+            assert dev["buffers"] == 0 and dev["streams"] == 0
+            assert dev["allocated_bytes"] == 0
+    assert outs["r1"] == outs["r2"] == outs["r2q2"]
+
+
+@pytest.mark.slow
+def test_real_engine_disagg_replicas_kv_accounting():
+    """Disagg replicas are device PAIRS: each replica's KV transfer rides
+    its own pair's copy engines; outputs match single-replica dynamic and
+    all four devices' tables drain (no cross-replica leaks)."""
+    import jax
+    from repro.configs import get_config
+    from repro.distributed.sharding import unbox
+    from repro.models import build_model
+    from repro.serving.engine import RealEngine
+    from repro.serving.request import Request
+
+    cfg = get_config("olmo-1b").reduced()
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+
+    def mk():
+        return [Request(prompt_len=10, max_new_tokens=5,
+                        prompt_tokens=np.random.default_rng(s).integers(
+                            0, cfg.vocab_size, 10).tolist(),
+                        arrival_time=s * 0.01) for s in range(4)]
+
+    outs = {}
+    for tag, kw in (("dyn", {"mode": "dynamic_pd"}),
+                    ("disagg2", {"mode": "disagg", "replicas": 2,
+                                 "kv_chunk_layers": 2})):
+        eng = RealEngine(model, params, max_num_seqs=2, max_len=32, **kw)
+        if tag == "disagg2":
+            assert eng.session.device_count() == 4
+        try:
+            reqs = mk()
+            res = eng.run(reqs, timeout=300)
+            assert res["completed"] == 4
+            outs[tag] = [r.output_tokens for r in reqs]
+        finally:
+            eng.shutdown()
+        for dev in eng.session.stats().values():
+            assert dev["buffers"] == 0 and dev["streams"] == 0
+            assert dev["allocated_bytes"] == 0
+        assert len(eng.session.shared_events) == 0
+    assert outs["disagg2"] == outs["dyn"]
+
+
+# ------------------------------------------------- least_contended routing
+def test_least_contended_registry_and_fallback():
+    from repro.sched import make_policy, policy_kind
+    assert policy_kind("least_contended") == "cluster"
+    pol = make_policy("least_contended")
+
+    class Inst:
+        def __init__(self, name, load):
+            self.name, self._load = name, load
+            self.failed, self.ewma_step = False, 0.0
+
+        def load(self):
+            return self._load
+
+    # unbound / no topology: degrades to least-loaded
+    a, b = Inst("D0", 2.0), Inst("D1", 1.0)
+    assert pol.route_decode(None, Inst("P0", 0), [a, b]) is b
+
+
+def test_least_contended_avoids_live_flow_path():
+    """With a KV stream occupying the path to D0, route_decode prefers D1
+    even though D0 is less loaded."""
+    from repro.sched import make_policy
+    from repro.transport import make_topology
+
+    cfg_topo = make_topology("shared_spine", n_spines=2)
+
+    class Inst:
+        def __init__(self, name, load):
+            self.name, self._load = name, load
+            self.failed, self.ewma_step = False, 0.0
+
+        def load(self):
+            return self._load
+
+    class FakeCluster:
+        topology = cfg_topo
+        link_model = LinkModel(latency_s=0.0, topology=cfg_topo)
+
+    pol = make_policy("least_contended")
+    pol.bind(FakeCluster())
+    src = Inst("P0", 0.0)
+    d0, d1 = Inst("D0", 0.0), Inst("D1", 5.0)
+    # idle fabric: ties on contention -> load tiebreak picks D0
+    assert pol.route_decode(None, src, [d0, d1]) is d0
+    # a live transfer occupies the full P0->D0 path (incl. D0's ingress)
+    FakeCluster.link_model.start(cfg_topo.path("P0", "D0"), 1e9, 0.0)
+    assert pol.route_decode(None, src, [d0, d1]) is d1
+
+
+# ----------------------------------------------------- pacing calibration
+def test_calibrate_dispatch_overhead_bounds():
+    from repro.serving.realtime import (RealTimeSimBackend, WallClock,
+                                        calibrate_dispatch_overhead)
+    v = calibrate_dispatch_overhead(samples=10, force=True)
+    assert 0.0 <= v <= 2e-3
+    backend = RealTimeSimBackend(WallClock(0.1), 0.1)
+    cal = backend.calibration()
+    assert cal["dispatch_overhead_wall_s"] == pytest.approx(
+        backend.dispatch_overhead_s, abs=1e-7)
+    assert cal["dispatch_overhead_virtual_s"] == pytest.approx(
+        backend.dispatch_overhead_s / 0.1, abs=1e-6)
+    # an explicit override skips the probe and is honored exactly
+    b2 = RealTimeSimBackend(WallClock(0.1), 0.1, dispatch_overhead_s=1e-4)
+    assert b2.dispatch_overhead_s == 1e-4
