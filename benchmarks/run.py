@@ -25,6 +25,7 @@ MODULES = [
     ("fig2", "benchmarks.decode_bandwidth"),
     ("fig56", "benchmarks.timeslice_sweep"),
     ("role_switch", "benchmarks.role_switch"),
+    ("slo_attainment", "benchmarks.slo_attainment"),
     ("kv_streaming", "benchmarks.kv_streaming"),
     ("microbatch_prefill", "benchmarks.microbatch_prefill"),
     ("roofline", "benchmarks.roofline"),

@@ -1,0 +1,97 @@
+"""CI gate over BENCH_*.json artifacts: fail on dishonest telemetry.
+
+The bench-smoke job runs every benchmark at a tiny scale and uploads the
+JSON artifacts; this validator then FAILS the job if any artifact is
+malformed or carries dishonest numbers — the checks are structural, so a
+benchmark that silently stops emitting a metric (or starts emitting NaN)
+breaks CI instead of quietly degrading the perf trajectory.
+
+Checks (per row):
+  * ``name`` present, ``us_per_call`` a finite number;
+  * every ``slo_attainment`` / ``ttft_attainment`` mapping — wherever it
+    appears — is non-empty with finite values in [0, 1] (a NaN attainment
+    means a tier had zero terminal requests: the run was too small or the
+    accounting lost requests);
+  * rows that carry request accounting satisfy conservation:
+    ``completed + rejected (+ failed) == generated`` — shed requests must
+    be counted, never silently dropped;
+  * rows flagged ``conserved`` actually say true.
+
+    python -m benchmarks.validate_artifacts bench-out/BENCH_*.json
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+
+def _finite(x) -> bool:
+    return isinstance(x, (int, float)) and math.isfinite(x)
+
+
+def check_row(row: dict, where: str) -> list:
+    errors = []
+    if not row.get("name"):
+        errors.append(f"{where}: row missing name")
+    if not _finite(row.get("us_per_call")):
+        errors.append(f"{where}: us_per_call missing or non-finite")
+    d = row.get("derived")
+    if not isinstance(d, dict):
+        return errors
+    for key in ("slo_attainment", "ttft_attainment"):
+        if key not in d:
+            continue
+        att = d[key]
+        if not isinstance(att, dict) or not att:
+            errors.append(f"{where}: {key} empty or not a mapping")
+            continue
+        for tier, v in att.items():
+            if not _finite(v) or not 0.0 <= v <= 1.0:
+                errors.append(f"{where}: {key}[{tier}] = {v!r} "
+                              "(must be finite in [0, 1])")
+    if "generated" in d and "completed" in d:
+        total = d.get("completed", 0) + d.get("rejected", 0) \
+            + d.get("failed", 0)
+        if total != d["generated"]:
+            errors.append(
+                f"{where}: conservation broken — completed+rejected+failed"
+                f" = {total} != generated = {d['generated']}")
+    if d.get("conserved") is False:
+        errors.append(f"{where}: row self-reports conserved=false")
+    return errors
+
+
+def check_file(path: str) -> list:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable ({e})"]
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return [f"{path}: no rows"]
+    errors = []
+    for row in rows:
+        errors.extend(check_row(row, f"{path}:{row.get('name', '?')}"))
+    return errors
+
+
+def main(argv=None) -> int:
+    paths = list(argv if argv is not None else sys.argv[1:])
+    if not paths:
+        print("usage: python -m benchmarks.validate_artifacts "
+              "BENCH_*.json", file=sys.stderr)
+        return 2
+    errors = []
+    for path in paths:
+        errors.extend(check_file(path))
+    for e in errors:
+        print(f"FAIL {e}", file=sys.stderr)
+    print(f"validated {len(paths)} artifact(s): "
+          f"{'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

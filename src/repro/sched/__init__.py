@@ -15,7 +15,7 @@
 # select convention) was removed after its one-release window — see the
 # migration table in docs/api.md.
 from repro.sched.admission import (AdmissionPolicy, GatedAdmission,
-                                   UngatedAdmission)
+                                   SloAwareAdmission, UngatedAdmission)
 from repro.sched.cluster import (ClusterPolicy, LeastContendedPolicy,
                                  LeastLoadedPolicy, RoleSwitchConfig,
                                  RoleSwitchPolicy)
@@ -31,7 +31,8 @@ from repro.sched.registry import (list_policies, make_policy, policy_kind,
 SchedulerPolicy = DispatchPolicy
 
 __all__ = [
-    "AdmissionPolicy", "GatedAdmission", "UngatedAdmission",
+    "AdmissionPolicy", "GatedAdmission", "SloAwareAdmission",
+    "UngatedAdmission",
     "ClusterPolicy", "LeastContendedPolicy", "LeastLoadedPolicy",
     "RoleSwitchConfig",
     "RoleSwitchPolicy", "AdmissionView", "PolicyContext", "SCHEDULABLE",

@@ -15,19 +15,47 @@ Policies (registry names in parentheses):
     (vLLM-style): a request prefills only once a decode slot AND KV-cache
     room are guaranteed — the head-of-line blocking the paper's Table 4
     measures.
+  * ``SloAwareAdmission`` (``slo_aware``) — multi-tenant tiering (v5):
+    strict-priority admission order with stride-weighted fairness within a
+    priority level, plus load shedding of doomed low-priority requests.
+    Shedding is HONEST — every shed request ends ``REJECTED`` and is
+    counted in telemetry, never silently dropped.
+
+Beyond the yes/no ``admit`` gate, the base class exposes two ordering
+hooks callers drive the waiting queue with (FIFO defaults, so v3/v4
+policies behave identically): ``pick_next`` selects WHICH waiting request
+is the admission candidate, and ``shed`` names requests to reject
+outright.  One shared implementation serves the real engine and the
+simulator, as before.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, List
 
 from repro.sched.context import AdmissionView
 
 
 class AdmissionPolicy:
-    """Decides whether the head-of-queue request may start prefilling."""
+    """Decides whether (and in what order) waiting requests may start
+    prefilling."""
 
     def admit(self, view: AdmissionView) -> bool:
         raise NotImplementedError
+
+    def pick_next(self, waiting: List) -> int:
+        """Index of the next admission candidate in ``waiting`` (requests
+        in arrival order).  Pure — called before the admit gate; FIFO by
+        default."""
+        return 0
+
+    def on_admit(self, req) -> None:
+        """The candidate was actually admitted (fairness accounting)."""
+
+    def shed(self, waiting: List, now: float) -> List:
+        """Requests to REJECT from ``waiting`` right now (load shedding).
+        The caller removes each one, marks it ``REJECTED``, and reports it
+        through rejection telemetry.  Default: shed nothing."""
+        return []
 
     def debug_state(self) -> Dict[str, float]:
         return {}
@@ -67,3 +95,93 @@ class GatedAdmission(AdmissionPolicy):
         if view.kv_free is not None and view.kv_free < view.next_prompt_len:
             return False
         return True
+
+
+class SloAwareAdmission(AdmissionPolicy):
+    """SLO-tiered multi-tenant admission (v5).
+
+    Ordering: strict priority — a waiting priority-2 (interactive) request
+    is always offered before any priority-1/0 one.  WITHIN a priority
+    level, tenants take turns by stride scheduling: each tenant carries a
+    pass counter advanced by ``1 / weight`` per admission, and the tenant
+    with the lowest pass goes next — so a weight-4 tier admits 4x as often
+    as a weight-1 tier under contention, but no tenant starves its own
+    level.  Requests of one tenant stay FIFO.
+
+    Load shedding: a request whose queue age already exceeds
+    ``shed_wait_factor`` x its TTFT SLO can no longer meet its SLO —
+    if its priority is below ``shed_below_priority``, it is REJECTED now
+    so its prefill FLOPs go to requests that can still win.  Protected
+    tiers (priority >= ``shed_below_priority``) and requests without a
+    finite TTFT SLO are never shed this way; ``max_queue_depth`` > 0
+    additionally bounds the waiting queue by shedding its lowest-priority,
+    oldest overflow.  Every shed is counted (``debug_state``) and the
+    caller surfaces it as a ``REJECTED`` request — the honesty contract.
+
+    Stateful (per-instance pass counters): construct ONE per instance via
+    the registry, never share across instances."""
+
+    def __init__(self, shed_wait_factor: float = 2.0,
+                 shed_below_priority: int = 2, max_queue_depth: int = 0):
+        self.shed_wait_factor = float(shed_wait_factor)
+        self.shed_below_priority = int(shed_below_priority)
+        self.max_queue_depth = int(max_queue_depth)
+        self._pass: Dict[str, float] = {}
+        self.shed_requests = 0
+
+    def admit(self, view: AdmissionView) -> bool:
+        # admission itself is ungated (dynamic PD: dispatch arbitrates
+        # device time) — this policy's leverage is ORDER plus shedding
+        return view.waiting > 0
+
+    def pick_next(self, waiting: List) -> int:
+        if len(waiting) <= 1:
+            return 0
+        top = max(r.priority for r in waiting)
+        # lowest stride pass among tenants with a top-priority request
+        self._join({r.tenant for r in waiting})
+        best, best_pass = 0, None
+        for i, r in enumerate(waiting):
+            if r.priority != top:
+                continue
+            p = self._pass[r.tenant]
+            if best_pass is None or p < best_pass:
+                best, best_pass = i, p     # first hit per tenant == FIFO
+        return best
+
+    def _join(self, tenants) -> None:
+        """Register first-seen tenants at the current pass floor: no
+        credit for arriving late, no debt for arriving early.  Must be a
+        REAL entry, not a lazy default — a lazy floor would track the sole
+        incumbent's own pass and tie with it forever (starvation)."""
+        floor = min(self._pass.values()) if self._pass else 0.0
+        for t in tenants:
+            if t not in self._pass:
+                self._pass[t] = floor
+
+    def on_admit(self, req) -> None:
+        self._join((req.tenant,))
+        self._pass[req.tenant] += 1.0 / max(req.weight, 1e-9)
+
+    def shed(self, waiting: List, now: float) -> List:
+        doomed = []
+        for r in waiting:
+            if r.priority >= self.shed_below_priority or r.slo is None:
+                continue
+            if now - r.arrival_time > self.shed_wait_factor * r.slo.ttft_s:
+                doomed.append(r)
+        if self.max_queue_depth > 0:
+            keep = [r for r in waiting if r not in doomed]
+            overflow = len(keep) - self.max_queue_depth
+            if overflow > 0:
+                # lowest priority first, oldest first within a level
+                keep.sort(key=lambda r: (r.priority, -r.arrival_time))
+                doomed.extend(keep[:overflow])
+        self.shed_requests += len(doomed)
+        return doomed
+
+    def debug_state(self) -> Dict[str, float]:
+        out: Dict[str, float] = {"shed_requests": float(self.shed_requests)}
+        for t, p in self._pass.items():
+            out[f"pass_{t or 'untenanted'}"] = round(p, 6)
+        return out

@@ -101,9 +101,15 @@ class AdmissionView:
     tokens so admission can gate on cache room as well as slots."""
 
     waiting: int                 # requests queued for admission
-    next_prompt_len: int         # prompt length of the head-of-queue request
+    next_prompt_len: int         # prompt length of the candidate request
     active: int                  # decoding now
     decode_pending: int          # prefilled, awaiting a decode slot
     prefilling: int              # admitted, prefill queued or in flight
     max_num_seqs: int            # decode slots on the instance
     kv_free: Optional[int] = None
+    # multi-tenancy (v5): the candidate request's tenant tier and admission
+    # priority ("" / 0 for tenant-blind traffic).  The candidate is the
+    # queue head for FIFO policies, or whatever ``pick_next`` selected for
+    # priority-aware ones.
+    next_tenant: str = ""
+    next_priority: int = 0

@@ -19,7 +19,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, NamedTuple
 
-from repro.sched.admission import GatedAdmission, UngatedAdmission
+from repro.sched.admission import (GatedAdmission, SloAwareAdmission,
+                                   UngatedAdmission)
 from repro.sched.cluster import (LeastContendedPolicy, LeastLoadedPolicy,
                                  RoleSwitchConfig, RoleSwitchPolicy)
 from repro.sched.dispatch import (DynamicPDConfig, DynamicPDPolicy,
@@ -89,6 +90,9 @@ register_policy("dynamic_pd", "dispatch", _dynamic_pd,
 register_policy("ungated", "admission", UngatedAdmission)
 register_policy("gated", "admission", GatedAdmission,
                 knobs=("count_prefilling",))
+register_policy("slo_aware", "admission", SloAwareAdmission,
+                knobs=("shed_wait_factor", "shed_below_priority",
+                       "max_queue_depth"))
 # --- cluster ---------------------------------------------------------------
 register_policy("least_loaded", "cluster", LeastLoadedPolicy)
 register_policy("least_contended", "cluster", LeastContendedPolicy)

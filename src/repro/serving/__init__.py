@@ -1,6 +1,6 @@
 from repro.serving.costmodel import CostModel, InstanceSpec
 from repro.serving.kvcache import OutOfPages, PagedAllocator, PagedKVStore
-from repro.serving.request import Request, RequestState, summarize
+from repro.serving.request import (SLO, Request, RequestState, summarize)
 from repro.serving.simulator import (Cluster, DeploymentSpec, EventLoop,
                                      SimConfig, SimInstance,
                                      deployment_6p2d, deployment_dynamic,
@@ -13,7 +13,7 @@ from repro.serving.workload import (bursty_phase_shift, deepseek_1k1k,
 # from this package were removed — import from repro.transport[.drivers].
 
 __all__ = [
-    "CostModel", "InstanceSpec", "OutOfPages",
+    "SLO", "CostModel", "InstanceSpec", "OutOfPages",
     "PagedAllocator", "PagedKVStore", "Request", "RequestState", "summarize",
     "Cluster", "DeploymentSpec", "EventLoop", "SimConfig",
     "SimInstance", "deployment_6p2d", "deployment_dynamic",

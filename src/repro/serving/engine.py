@@ -253,6 +253,13 @@ class RealEngine:
         self.waiting_admission: List[Request] = []   # awaiting admission
         self.outstanding = 0
         self.finished: List[Request] = []
+        # honest rejection telemetry (v5): requests the admission policy
+        # shed — they end REJECTED and count toward run() accounting
+        self.rejected: List[Request] = []
+        # terminal-transition hook (v5): called with each request as it
+        # ends (done/failed/rejected) — closed-loop traffic generators
+        # plug in here, same contract as the cluster simulator's
+        self.on_request_done = None
 
     # ------------------------------------------------------------- public
     def submit(self, req: Request) -> None:
@@ -298,29 +305,52 @@ class RealEngine:
         self.session.close()
 
     # ------------------------------------------------------------ prefill
-    def _admission_view(self, rep: _Replica) -> AdmissionView:
-        head = self.waiting_admission[0] if self.waiting_admission else None
+    def _admission_view(self, rep: _Replica, idx: int = 0) -> AdmissionView:
+        cand = self.waiting_admission[idx] \
+            if idx < len(self.waiting_admission) else None
         return AdmissionView(
             waiting=len(self.waiting_admission),
-            next_prompt_len=head.prompt_len if head else 0,
+            next_prompt_len=cand.prompt_len if cand else 0,
             active=rep.active_count,
             decode_pending=len(rep.decode_pending),
             prefilling=rep.prefilling_count,
             max_num_seqs=self.max_num_seqs,
-            kv_free=None)      # dense slot caches: no token accounting
+            kv_free=None,      # dense slot caches: no token accounting
+            next_tenant=cand.tenant if cand else "",
+            next_priority=cand.priority if cand else 0)
 
     def _drain_admission_locked(self):
+        # load shedding first (v5): doomed requests end REJECTED with
+        # honest telemetry — the same policy hooks the simulator drives
+        for r in self.admission.shed(self.waiting_admission,
+                                     time.monotonic()):
+            if r in self.waiting_admission:
+                self.waiting_admission.remove(r)
+                self._reject_locked(r)
         while self.waiting_admission:
-            # route first, then gate against the TARGET replica's occupancy
-            # — one admission implementation for any replica count
-            rep = self.router.route_prefill(self.waiting_admission[0],
+            # pick the candidate (FIFO for v3/v4 policies, priority +
+            # weighted-fair for slo_aware), route it, then gate against
+            # the TARGET replica's occupancy — one admission
+            # implementation for any replica count
+            i = self.admission.pick_next(self.waiting_admission)
+            rep = self.router.route_prefill(self.waiting_admission[i],
                                             self.replicas)
             if rep is None or not self.admission.admit(
-                    self._admission_view(rep)):
+                    self._admission_view(rep, i)):
                 return
-            req = self.waiting_admission.pop(0)
+            req = self.waiting_admission.pop(i)
+            self.admission.on_admit(req)
             rep.prefilling_count += 1
             self._launch_prefill(rep, req)
+
+    def _reject_locked(self, req: Request) -> None:
+        req.state = RequestState.REJECTED
+        req.finish_time = time.monotonic()
+        self.rejected.append(req)
+        self.outstanding -= 1
+        if self.on_request_done is not None:
+            self.on_request_done(req)
+        self._all_done.notify_all()
 
     def _launch_prefill(self, rep: _Replica, req: Request) -> None:
         req.state = RequestState.PREFILLING
@@ -344,6 +374,8 @@ class RealEngine:
                 rep.prefilling_count = max(0, rep.prefilling_count - 1)
                 req.state = RequestState.FAILED
                 self.outstanding -= 1
+                if self.on_request_done is not None:
+                    self.on_request_done(req)
                 self._drain_admission_locked()
                 self._all_done.notify_all()
             return
@@ -428,6 +460,8 @@ class RealEngine:
             with self._lock:
                 req.state = RequestState.FAILED
                 self.outstanding -= 1
+                if self.on_request_done is not None:
+                    self.on_request_done(req)
                 self._all_done.notify_all()
             return
         finally:
@@ -513,6 +547,8 @@ class RealEngine:
         req.finish_time = time.monotonic()
         self.finished.append(req)
         self.outstanding -= 1
+        if self.on_request_done is not None:
+            self.on_request_done(req)
         # a finished sequence releases its slot claim: gated admission may
         # now let the next request in (also covers requests that finish at
         # prefill, which never reach the decode-completion drain)

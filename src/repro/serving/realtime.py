@@ -100,6 +100,14 @@ class RealTimeLoop:
     def after(self, dt: float, fn: Callable) -> None:
         self.at(self.clock.t + dt, fn)
 
+    def defer(self, fn: Callable) -> None:
+        """Driver-loop hook (v5), the threaded analogue of
+        ``EventLoop.defer``: hand ``fn`` to the loop thread at the current
+        virtual time.  Closed-loop traffic callbacks run here instead of
+        on the daemon engine thread that retired the request — same
+        re-entrancy rule as the stepped drive, plus thread confinement."""
+        self.at(self.clock.t, fn)
+
     def run(self, until: float = math.inf,
             idle: Optional[Callable[[], bool]] = None) -> None:
         self.clock.start()

@@ -15,6 +15,28 @@ class RequestState(str, enum.Enum):
     DECODING = "decoding"
     DONE = "done"
     FAILED = "failed"
+    REJECTED = "rejected"        # shed by admission (load shedding) — a
+    #                              terminal state distinct from FAILED so
+    #                              rejection telemetry stays honest
+
+
+# terminal states: a request in one of these will never change again
+TERMINAL_STATES = (RequestState.DONE, RequestState.FAILED,
+                   RequestState.REJECTED)
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """A tenant tier's service-level objective.
+
+    ``ttft_s`` / ``tpot_s`` are the latency targets attainment is measured
+    against; ``priority`` orders tiers for SLO-aware admission (higher
+    admits first) and ``weight`` sets the tier's share under weighted-fair
+    request dispatch (stride scheduling within a priority level)."""
+    ttft_s: float = float("inf")
+    tpot_s: float = float("inf")
+    priority: int = 0
+    weight: float = 1.0
 
 
 _REQ_IDS = itertools.count(1)
@@ -27,6 +49,12 @@ class Request:
     req_id: int = dataclasses.field(default_factory=lambda: next(_REQ_IDS))
     arrival_time: float = 0.0
     state: RequestState = RequestState.QUEUED
+    # multi-tenancy (traffic subsystem, v5): the tenant tier this request
+    # belongs to ("" = tenant-blind) and its tier's SLO targets — the
+    # SLO-aware control plane reads priority/weight from here and
+    # ``summarize`` breaks attainment down per tier
+    tenant: str = ""
+    slo: Optional[SLO] = None
     # real-mode payload (None in simulation)
     prompt_tokens: Optional[object] = None
     output_tokens: List[int] = dataclasses.field(default_factory=list)
@@ -83,11 +111,82 @@ class Request:
     def done_decoding(self) -> bool:
         return self.generated >= self.max_new_tokens
 
+    @property
+    def priority(self) -> int:
+        """Admission priority of this request's tier (0 = tenant-blind)."""
+        return self.slo.priority if self.slo is not None else 0
+
+    @property
+    def weight(self) -> float:
+        """Weighted-fair share of this request's tier (1.0 = default)."""
+        return self.slo.weight if self.slo is not None else 1.0
+
+    def meets_ttft_slo(self) -> bool:
+        if self.slo is None:
+            return True
+        return self.first_token_time >= 0 and self.ttft <= self.slo.ttft_s
+
+    def meets_tpot_slo(self) -> bool:
+        if self.slo is None or len(self.token_times) < 2:
+            return True          # one-token outputs have no inter-token gap
+        return self.tpot <= self.slo.tpot_s
+
+
+def pct(xs, q):
+    """Percentile of a pre-sorted list (nan when empty)."""
+    if not xs:
+        return float("nan")
+    return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+
+def _tier_summary(rs: List[Request]) -> dict:
+    """Per-tenant-tier breakdown: latency tails and SLO attainment.
+
+    Attainment is HONEST: the denominator is every request that reached a
+    terminal state (completed + rejected + failed) — a shed request is an
+    SLO miss for its tier, so load shedding can never inflate the number."""
+    done = [r for r in rs if r.state == RequestState.DONE]
+    rejected = sum(1 for r in rs if r.state == RequestState.REJECTED)
+    failed = sum(1 for r in rs if r.state == RequestState.FAILED)
+    terminal = len(done) + rejected + failed
+    ttfts = sorted(r.ttft for r in done if r.first_token_time >= 0)
+    tpots = sorted(r.tpot for r in done if len(r.token_times) >= 2)
+    ttft_ok = sum(1 for r in done if r.meets_ttft_slo())
+    tpot_ok = sum(1 for r in done if r.meets_tpot_slo())
+    both_ok = sum(1 for r in done
+                  if r.meets_ttft_slo() and r.meets_tpot_slo())
+    slo = next((r.slo for r in rs if r.slo is not None), None)
+    out = {
+        "generated": len(rs),
+        "completed": len(done),
+        "rejected": rejected,
+        "failed": failed,
+        "ttft_p50_s": pct(ttfts, 0.50),
+        "ttft_p99_s": pct(ttfts, 0.99),
+        "tpot_p99_s": pct(tpots, 0.99),
+        "ttft_attainment": ttft_ok / terminal if terminal else float("nan"),
+        "tpot_attainment": tpot_ok / terminal if terminal else float("nan"),
+        "slo_attainment": both_ok / terminal if terminal else float("nan"),
+    }
+    if slo is not None:
+        out["ttft_slo_s"] = slo.ttft_s
+        out["tpot_slo_s"] = slo.tpot_s
+    return out
+
 
 def summarize(requests: List[Request]) -> dict:
     done = [r for r in requests if r.state == RequestState.DONE]
+    rejected = sum(1 for r in requests
+                   if r.state == RequestState.REJECTED)
+    failed = sum(1 for r in requests if r.state == RequestState.FAILED)
+    tiers = sorted({r.tenant for r in requests if r.tenant})
     if not done:
-        return {"completed": 0}
+        out = {"completed": 0, "generated": len(requests),
+               "rejected": rejected, "failed": failed}
+        if tiers:
+            out["tenants"] = {t: _tier_summary(
+                [r for r in requests if r.tenant == t]) for t in tiers}
+        return out
     t0 = min(r.arrival_time for r in done)
     t1 = max(r.finish_time for r in done)
     out_tokens = sum(r.generated for r in done)
@@ -99,11 +198,6 @@ def summarize(requests: List[Request]) -> dict:
     # (what chunked streaming shrinks: decode starts on the first chunk)
     ttsts = sorted(r.token_times[1] - r.arrival_time for r in done
                    if len(r.token_times) >= 2)
-
-    def pct(xs, q):
-        if not xs:
-            return float("nan")
-        return xs[min(len(xs) - 1, int(q * len(xs)))]
 
     dur = max(t1 - t0, 1e-9)
     return {
@@ -119,4 +213,14 @@ def summarize(requests: List[Request]) -> dict:
         "tpot_p99_s": pct(tpots, 0.99),
         "ttst_mean_s": sum(ttsts) / len(ttsts) if ttsts else float("nan"),
         "ttst_p95_s": pct(ttsts, 0.95),
+        # rejection telemetry is FIRST-CLASS: shed requests appear here
+        # (and per tier below), never silently dropped — the conservation
+        # invariant callers can assert is completed + rejected + failed
+        # + still-in-flight == generated
+        "generated": len(requests),
+        "rejected": rejected,
+        "failed": failed,
+        **({"tenants": {t: _tier_summary(
+            [r for r in requests if r.tenant == t]) for t in tiers}}
+           if tiers else {}),
     }

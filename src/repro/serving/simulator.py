@@ -60,7 +60,7 @@ from repro.sched import (AdmissionPolicy, AdmissionView, ClusterPolicy,
                          GatedAdmission, UngatedAdmission, make_policy,
                          policy_kind)
 from repro.serving.costmodel import CostModel, InstanceSpec
-from repro.serving.request import Request, RequestState
+from repro.serving.request import TERMINAL_STATES, Request, RequestState
 # KV transport subsystem: topology-resolved multi-hop paths, the path-aware
 # link model (also reused, with fractional demand shares, as the per-device
 # compute-contention model), the stepped drivers, and chunked layer-wise KV
@@ -105,6 +105,14 @@ class EventLoop:
 
     def after(self, dt: float, fn: Callable) -> None:
         self.at(self.clock.t + dt, fn)
+
+    def defer(self, fn: Callable) -> None:
+        """Driver-loop hook (v5): run ``fn`` at the CURRENT virtual time,
+        but only after the event being processed unwinds.  Closed-loop
+        traffic sources are fed through this — their ``on_complete`` may
+        submit a new request, which must not mutate instance state from
+        inside a ``_decode_done``/``_retire`` call stack."""
+        self.at(self.clock.t, fn)
 
     def run(self, until: float = math.inf, max_events: int = 50_000_000):
         n = 0
@@ -236,7 +244,11 @@ class SimInstance:
         # source pages are only freed once the destination holds the copy)
         self.kv_in_transit = 0
         self._decode_op_inflight = False
+        # rejection telemetry (v5): requests the admission policy shed on
+        # this instance — honest accounting's per-instance counter
+        self.rejected = 0
         self.on_request_done: Optional[Callable] = None
+        self.on_request_rejected: Optional[Callable] = None
         self.on_prefill_done: Optional[Callable] = None
         # cluster hook: a completion other instances may be blocked on
         # (shared-event record, peer copy) — kicks the sibling daemons
@@ -265,29 +277,53 @@ class SimInstance:
             self.prefill_waiting.append(req)
             self._drain_admission()
 
-    def _admission_view(self) -> AdmissionView:
-        head = self.prefill_waiting[0] if self.prefill_waiting else None
+    def _admission_view(self, idx: int = 0) -> AdmissionView:
+        cand = self.prefill_waiting[idx] \
+            if idx < len(self.prefill_waiting) else None
         return AdmissionView(
             waiting=len(self.prefill_waiting),
-            next_prompt_len=head.prompt_len if head else 0,
+            next_prompt_len=cand.prompt_len if cand else 0,
             active=len(self.active),
             decode_pending=len(self.decode_pending),
             prefilling=len(self.prefilling),
             max_num_seqs=self.sim_cfg.max_num_seqs,
-            kv_free=self.kv_free())
+            kv_free=self.kv_free(),
+            next_tenant=cand.tenant if cand else "",
+            next_priority=cand.priority if cand else 0)
 
     def _drain_admission(self) -> None:
-        """Admit waiting requests per the AdmissionPolicy.  Each pass offers
-        every waiting request at most once (an ungated enqueue may re-park
-        the head when KV is full — see ``_enqueue_prefill``), and the
-        prefill dispatch window bounds device-queue depth."""
+        """Admit waiting requests per the AdmissionPolicy.  The policy
+        first sheds doomed requests (honest rejection), then picks each
+        admission candidate (``pick_next`` — FIFO for v3/v4 policies,
+        priority + weighted-fair for ``slo_aware``).  Each pass offers at
+        most ``len(waiting)`` candidates (an ungated enqueue may re-park
+        one when KV is full — see ``_enqueue_prefill``), and the prefill
+        dispatch window bounds device-queue depth."""
+        for r in self.admission.shed(self.prefill_waiting, self.now):
+            if r in self.prefill_waiting:
+                self.prefill_waiting.remove(r)
+                self._reject(r)
         w = self.sim_cfg.prefill_window
         n = len(self.prefill_waiting)
-        while n > 0 and (w <= 0 or len(self.prefilling) < w) \
-                and self.admission.admit(self._admission_view()):
-            req = self.prefill_waiting.pop(0)
+        while n > 0 and self.prefill_waiting \
+                and (w <= 0 or len(self.prefilling) < w):
+            i = self.admission.pick_next(self.prefill_waiting)
+            if not self.admission.admit(self._admission_view(i)):
+                return
+            req = self.prefill_waiting.pop(i)
+            self.admission.on_admit(req)
             self._enqueue_prefill(req)
             n -= 1
+
+    def _reject(self, req: Request) -> None:
+        """Load shedding: the request leaves the system REJECTED — a
+        terminal state reported through the same completion plumbing as
+        DONE, so telemetry (and closed-loop clients) always see it."""
+        req.state = RequestState.REJECTED
+        req.finish_time = self.now
+        self.rejected += 1
+        if self.on_request_rejected is not None:
+            self.on_request_rejected(self, req)
 
     def _prefill_chunks(self, prompt_len: int) -> List[tuple]:
         """(tokens, context_offset) per micro-batch chunk: the prompt split
@@ -637,6 +673,12 @@ class DeploymentSpec:
     dispatch_knobs: Dict = dataclasses.field(default_factory=dict)
     cluster_policy: str = ""         # routing / migration / role switching
     cluster_knobs: Dict = dataclasses.field(default_factory=dict)
+    # admission (v5): registry name + knobs; "" keeps the mode's historical
+    # default (gated for static_colocate, ungated otherwise).  Admission
+    # policies can be STATEFUL (slo_aware's fairness counters), so the
+    # cluster constructs a fresh instance per SimInstance.
+    admission_policy: str = ""
+    admission_knobs: Dict = dataclasses.field(default_factory=dict)
 
     @property
     def total_chips(self) -> int:
@@ -744,7 +786,8 @@ class Cluster:
         # control plane (v3): the cluster policy owns routing, migration,
         # and role switching; built by registry name from the deployment
         for name, want in ((deploy.cluster_policy, "cluster"),
-                           (deploy.dispatch_policy, "dispatch")):
+                           (deploy.dispatch_policy, "dispatch"),
+                           (deploy.admission_policy, "admission")):
             if name and policy_kind(name) != want:
                 raise ValueError(
                     f"policy {name!r} is a {policy_kind(name)} policy; "
@@ -761,6 +804,9 @@ class Cluster:
         # second stream while its aborted first one is still settling.
         self.inflight_transfers: Dict[int, Dict] = {}
         self._transfer_ids = itertools.count(1)
+        # closed-loop traffic sources attached by run(traffic=...): fed at
+        # every terminal request transition through loop.defer
+        self._sources: List = []
         self._build()
 
     # ----------------------------------------------------------- topology
@@ -817,14 +863,24 @@ class Cluster:
                 mode="flex", devices=len(plan), backend=backend,
                 policy=lambda i: policies[i], queues=queue_spec)
         for i, (name, spec, _, sim_cfg, role) in enumerate(plan):
+            # admission (v5): a FRESH policy object per instance — stateful
+            # policies (slo_aware fairness counters) must not be shared
+            admission = make_policy(d.admission_policy,
+                                    **d.admission_knobs) \
+                if d.admission_policy else None
             inst = SimInstance(name, spec, self.cost, self.loop,
                                self.session.device(i), self.session.daemon(i),
-                               sim_cfg, role=role, lock=self._lock,
-                               drive=self.drive)
+                               sim_cfg, role=role, admission=admission,
+                               lock=self._lock, drive=self.drive)
             # dispatch policies see link-queueing pressure (PolicyContext)
             self.session.daemon(i).link_stats_fn = self.link_model.stats
             inst.link_driver = self.link_driver
             inst.compute_driver = self.compute_driver
+            # terminal-transition hooks (v5): completions and rejections
+            # flow back to the cluster so closed-loop traffic sources see
+            # every ending, whatever instance it happened on
+            inst.on_request_done = self._request_done
+            inst.on_request_rejected = self._request_rejected
             if self.drive == "stepped":
                 inst.on_cross_device = self._kick_all
             if d.mode == "disagg":
@@ -852,10 +908,43 @@ class Cluster:
             self.requests.append(req)
             inst = self.policy.route_prefill(req, self.prefill_pool)
             if inst is None:
-                req.state = RequestState.FAILED
+                self._fail_request(req)
                 return
             inst.submit(req)
             self._arm_tick()
+
+    # ------------------------------------------- terminal-state plumbing
+    def _fail_request(self, req: Request) -> None:
+        """The ONE place a cluster request ends FAILED: idempotent, and
+        reported to traffic sources like any other terminal transition."""
+        if req.state in TERMINAL_STATES:
+            return
+        req.state = RequestState.FAILED
+        req.finish_time = self.loop.clock.t
+        self._notify_sources(req)
+
+    def _request_done(self, inst: SimInstance, req: Request) -> None:
+        self._notify_sources(req)
+
+    def _request_rejected(self, inst: SimInstance, req: Request) -> None:
+        self._notify_sources(req)
+
+    def _notify_sources(self, req: Request) -> None:
+        """Feed closed-loop traffic sources through the driver-loop defer
+        hook: terminal transitions happen deep inside instance call stacks
+        (and, threaded, on daemon engine threads) — the source callback
+        must run after the event unwinds, on the loop."""
+        if not self._sources:
+            return
+        self.loop.defer(lambda: self._feed_sources(req))
+
+    def _feed_sources(self, req: Request) -> None:
+        with self._lock:
+            for src in self._sources:
+                nxt = src.on_complete(req, self.loop.clock.t)
+                if nxt is not None:
+                    self.loop.at(nxt.arrival_time,
+                                 lambda r=nxt: self.submit(r))
 
     # ------------------------------------------------- periodic policy tick
     def _arm_tick(self) -> None:
@@ -917,7 +1006,7 @@ class Cluster:
             dst = self.policy.route_decode(req, src, self.decode_pool)
             if dst is None:
                 src.kv_used -= tokens
-                req.state = RequestState.FAILED
+                self._fail_request(req)
                 return
             if dst is src:
                 self._admit_local(src, req)
@@ -928,7 +1017,7 @@ class Cluster:
                 # plane failed): KV cannot reach any decode instance —
                 # fail honestly instead of "delivering" over dead fabric
                 src.kv_used -= tokens
-                req.state = RequestState.FAILED
+                self._fail_request(req)
                 return
             src.kv_in_transit += tokens
             xid = next(self._transfer_ids)
@@ -1050,7 +1139,7 @@ class Cluster:
             if inst is not None:
                 inst.submit(req)
             else:
-                req.state = RequestState.FAILED
+                self._fail_request(req)
 
     # ------------------------------------------------------ role switching
     def switch_role(self, inst, new_role: str) -> bool:
@@ -1097,7 +1186,7 @@ class Cluster:
                     if target is not None:
                         target.submit(r)
                     else:
-                        r.state = RequestState.FAILED
+                        self._fail_request(r)
             self.role_flips += 1
             return True
 
@@ -1118,18 +1207,33 @@ class Cluster:
                 if target is not None:
                     target.submit(r)
                 else:
-                    r.state = RequestState.FAILED
+                    self._fail_request(r)
 
     # -------------------------------------------------------------- runs
     def _outstanding(self) -> bool:
         with self._lock:
+            # a closed-loop source in a think-time gap has zero in-flight
+            # requests but more coming — the run is not quiescent until
+            # every source is exhausted too
             return bool(self.inflight_transfers) or any(
-                r.state not in (RequestState.DONE, RequestState.FAILED)
-                for r in self.requests)
+                r.state not in TERMINAL_STATES for r in self.requests) \
+                or any(not s.exhausted() for s in self._sources)
 
-    def run(self, workload: List[Request], until: float = math.inf) -> Dict:
-        for req in workload:
+    def run(self, workload: Optional[List[Request]] = None,
+            until: float = math.inf, traffic=None) -> Dict:
+        """Drive the cluster with an open-loop trace (``workload``), one
+        or more closed-loop traffic sources (``traffic``: an object or
+        list of objects with ``initial()`` / ``on_complete(req, now)`` /
+        ``exhausted()`` — e.g. :class:`repro.traffic.ClosedLoopPool`), or
+        both."""
+        if traffic is not None:
+            self._sources = list(traffic) if isinstance(
+                traffic, (list, tuple)) else [traffic]
+        for req in (workload or []):
             self.loop.at(req.arrival_time, lambda r=req: self.submit(r))
+        for src in self._sources:
+            for req in src.initial():
+                self.loop.at(req.arrival_time, lambda r=req: self.submit(r))
         if self.drive == "threaded":
             self.loop.run(until=until, idle=lambda: not self._outstanding())
             self.close()   # stop daemon dispatch threads (leak-free)
@@ -1143,6 +1247,12 @@ class Cluster:
         retries = sum(r.retries for r in self.requests)
         if retries:
             out["retries"] = retries
+        # honest shedding telemetry (v5): the instances' rejection counters
+        # must agree with the REJECTED request states summarize() counted —
+        # a policy cannot drop work without it showing up here
+        shed = sum(i.rejected for i in self.instances)
+        if shed or self.deploy.admission_policy:
+            out["shed_requests"] = shed
         if self.link_model.completed:
             out.update(self.link_model.stats())
             out["topology"] = self.topology.name
@@ -1181,7 +1291,16 @@ class Cluster:
             if st:
                 dispatch[inst.name] = {k: round(float(v), 6)
                                        for k, v in st.items()}
+        admission = {}
+        for inst in self.instances:
+            st = inst.admission.debug_state()
+            if st or inst.rejected:
+                admission[inst.name] = {
+                    "policy": type(inst.admission).__name__,
+                    "rejected": inst.rejected,
+                    **{k: round(float(v), 6) for k, v in st.items()}}
         return {
+            **({"admission": admission} if admission else {}),
             "cluster_policy": type(self.policy).__name__,
             "cluster": self.policy.debug_state(),
             "role_flips": self.role_flips,
@@ -1267,7 +1386,7 @@ class Cluster:
             if target is not None:
                 target.submit(r)
             else:
-                r.state = RequestState.FAILED
+                self._fail_request(r)
         return n_lost
 
     def fail_spine(self, index: int = 0) -> int:

@@ -1,80 +1,13 @@
-"""Workload generators matching the paper's evaluation setups."""
-from __future__ import annotations
+"""DEPRECATED shim — the generators moved to :mod:`repro.traffic` (v5).
 
-from typing import List
+``from repro.serving.workload import make_workload`` keeps working for
+one release; new code should import from ``repro.traffic`` (which also
+has the tiered multi-tenant and closed-loop generators).  Same
+deprecation pattern the v4 transport shims used.
+"""
+from repro.traffic.workloads import (bursty_phase_shift, deepseek_1k1k,  # noqa: F401
+                                     deepseek_1k4k, make_workload,
+                                     qwen_grid)
 
-import numpy as np
-
-from repro.serving.request import Request
-
-
-def make_workload(n: int, input_len: int, output_len: int, *,
-                  rate: float, seed: int = 0, length_cv: float = 0.0,
-                  arrival: str = "poisson") -> List[Request]:
-    """`rate` req/s; lengths lognormal around the means when length_cv>0."""
-    rng = np.random.default_rng(seed)
-    if arrival == "poisson":
-        gaps = rng.exponential(1.0 / rate, size=n)
-    else:
-        gaps = np.full(n, 1.0 / rate)
-    arrivals = np.cumsum(gaps)
-
-    def lengths(mean):
-        if length_cv <= 0:
-            return np.full(n, mean, dtype=int)
-        sigma = np.sqrt(np.log(1 + length_cv ** 2))
-        mu = np.log(mean) - sigma ** 2 / 2
-        return np.maximum(1, rng.lognormal(mu, sigma, size=n).astype(int))
-
-    ins, outs = lengths(input_len), lengths(output_len)
-    return [Request(prompt_len=int(i), max_new_tokens=int(o),
-                    arrival_time=float(t))
-            for i, o, t in zip(ins, outs, arrivals)]
-
-
-def bursty_phase_shift(n_bursts: int = 2, burst_gap_s: float = 20.0,
-                       n_prefill: int = 240, prefill_rate: float = 120.0,
-                       prefill_io=(2048, 64),
-                       n_decode: int = 80, decode_rate: float = 8.0,
-                       decode_io=(128, 1024), seed: int = 0
-                       ) -> List[Request]:
-    """Bursty, phase-shifted workload: each cycle opens with a dense
-    prefill-heavy burst (long prompts, short outputs, near-simultaneous
-    arrivals) and then shifts to a decode-heavy tail (short prompts, long
-    outputs).  Static deployments provisioned for the average mix are
-    mis-provisioned in BOTH halves of every cycle — the regime where
-    dynamic role-switching pays (paper's motivation for adapting the P/D
-    split at runtime)."""
-    reqs: List[Request] = []
-    for b in range(n_bursts):
-        t0 = b * 2 * burst_gap_s
-        burst = make_workload(n_prefill, *prefill_io, rate=prefill_rate,
-                              seed=seed + 2 * b, length_cv=0.2)
-        for r in burst:
-            r.arrival_time += t0
-        tail = make_workload(n_decode, *decode_io, rate=decode_rate,
-                             seed=seed + 2 * b + 1, length_cv=0.2)
-        for r in tail:
-            r.arrival_time += t0 + burst_gap_s
-        reqs.extend(burst)
-        reqs.extend(tail)
-    return sorted(reqs, key=lambda r: r.arrival_time)
-
-
-# --- the paper's workloads -------------------------------------------------
-
-def deepseek_1k1k(n: int = 2000, rate: float = 700.0, seed: int = 0):
-    """Table 3 '1K-1K': balanced input/output (prefill-bottlenecked at 6P2D)."""
-    return make_workload(n, 1024, 1024, rate=rate, seed=seed, length_cv=0.2)
-
-
-def deepseek_1k4k(n: int = 600, rate: float = 170.0, seed: int = 0):
-    """Table 3 '1K-4K': decode-heavy (decode-bottlenecked at 6P2D)."""
-    return make_workload(n, 1024, 4096, rate=rate, seed=seed, length_cv=0.2)
-
-
-def qwen_grid():
-    """Table 4: four I/O pairs, request_rate=4, 200 requests each."""
-    cells = [(256, 256), (256, 1024), (1024, 256), (1024, 1024)]
-    return {f"{i}/{o}": make_workload(200, i, o, rate=4.0, seed=42)
-            for i, o in cells}
+__all__ = ["make_workload", "bursty_phase_shift", "deepseek_1k1k",
+           "deepseek_1k4k", "qwen_grid"]
