@@ -26,6 +26,7 @@ MODULES = [
     ("fig56", "benchmarks.timeslice_sweep"),
     ("role_switch", "benchmarks.role_switch"),
     ("slo_attainment", "benchmarks.slo_attainment"),
+    ("prefix_reuse", "benchmarks.prefix_reuse"),
     ("kv_streaming", "benchmarks.kv_streaming"),
     ("microbatch_prefill", "benchmarks.microbatch_prefill"),
     ("roofline", "benchmarks.roofline"),

@@ -15,7 +15,12 @@ Checks (per row):
   * rows that carry request accounting satisfy conservation:
     ``completed + rejected (+ failed) == generated`` — shed requests must
     be counted, never silently dropped;
-  * rows flagged ``conserved`` actually say true.
+  * rows flagged ``conserved`` actually say true;
+  * prefix-reuse telemetry (v6) is honest wherever it appears:
+    ``hit_rate`` finite in [0, 1], ``flops_saved`` and
+    ``remote_fetch_bytes`` finite and >= 0 — and a row that claims reuse
+    (``hit_rate`` > 0) must carry ``flops_saved`` > 0 (a hit that saved
+    nothing means the admission path stopped charging the cost model).
 
     python -m benchmarks.validate_artifacts bench-out/BENCH_*.json
 """
@@ -59,6 +64,19 @@ def check_row(row: dict, where: str) -> list:
                 f" = {total} != generated = {d['generated']}")
     if d.get("conserved") is False:
         errors.append(f"{where}: row self-reports conserved=false")
+    if "hit_rate" in d:
+        hr = d["hit_rate"]
+        if not _finite(hr) or not 0.0 <= hr <= 1.0:
+            errors.append(f"{where}: hit_rate = {hr!r} "
+                          "(must be finite in [0, 1])")
+        for key in ("flops_saved", "remote_fetch_bytes"):
+            if key in d and (not _finite(d[key]) or d[key] < 0):
+                errors.append(f"{where}: {key} = {d[key]!r} "
+                              "(must be finite and >= 0)")
+        if _finite(hr) and hr > 0 and not d.get("flops_saved", 0) > 0:
+            errors.append(f"{where}: hit_rate {hr} > 0 but flops_saved "
+                          f"= {d.get('flops_saved')!r} — reuse claimed "
+                          "without recompute savings")
     return errors
 
 

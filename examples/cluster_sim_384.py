@@ -59,13 +59,19 @@ def main():
                          "closed-loop entries self-throttle under load")
     ap.add_argument("--admission-policy", default="",
                     help="admission policy (ungated, gated, slo_aware)")
+    # prefix-cache tier v6 flags (repro.cache registry names)
+    ap.add_argument("--prefix-cache", default="",
+                    help="per-instance prefix cache (none, lru, lfu, ttl);"
+                         " pair with --cluster-policy prefix_affinity and"
+                         " --traffic multi_turn to see reuse")
     args = ap.parse_args()
     cfg = get_config(args.arch)
 
     topology = (make_topology("shared_spine", spine_bw=args.spine_bw)
                 if args.topology == "shared_spine" else None)
     sim_cfg = SimConfig(topology=topology,
-                        kv_chunk_tokens=args.kv_chunk_tokens)
+                        kv_chunk_tokens=args.kv_chunk_tokens,
+                        prefix_cache=args.prefix_cache or "none")
 
     if args.traffic:
         workloads = [(args.traffic, None, None)]
@@ -105,6 +111,10 @@ def main():
                           f" stall_s={res.get('decode_stall_s', 0):.1f}")
             if res.get("shed_requests"):
                 extra += f" shed={res['shed_requests']}"
+            if res.get("prefix_cache"):
+                pc = res["prefix_cache"]
+                extra += (f" hit_rate={pc['hit_rate']:.3f}"
+                          f" fetches={pc['remote_fetches']}")
             print(f"[{wl_name}] {name:24s} rps={res['requests_per_s']:8.2f} "
                   f"tok/s={res['output_tokens_per_s']:10.0f}{extra}")
             for tier, t in sorted(res.get("tenants", {}).items()):

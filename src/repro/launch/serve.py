@@ -64,10 +64,11 @@ def run_sim(arch: str, deployment: str, workload: str, verbose: bool = True,
     import dataclasses
 
     from repro.configs import get_config
-    from repro.serving import (Cluster, SimConfig, bursty_phase_shift,
-                               deepseek_1k1k, deepseek_1k4k, deployment_6p2d,
+    from repro.serving import (Cluster, SimConfig, deployment_6p2d,
                                deployment_dynamic, deployment_role_switch)
     from repro.serving.simulator import DeploymentSpec
+    from repro.traffic import (bursty_phase_shift, deepseek_1k1k,
+                               deepseek_1k4k)
 
     cfg = get_config(arch)
     deploy = {

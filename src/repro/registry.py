@@ -1,0 +1,89 @@
+"""One registry helper behind every ``make_*`` entry point (v6).
+
+``make_policy`` (repro.sched), ``make_traffic`` (repro.traffic),
+``make_topology`` (repro.transport), and ``make_cache`` (repro.cache) grew
+up as four parallel copies of the same ~30 lines: a name -> (factory,
+knobs) dict, an unknown-name error listing what IS registered, and a
+``TypeError`` naming the accepted knob set when a caller passes one the
+entry never declared.  This module is that machinery once:
+
+    _REG = Registry("cache")
+    _REG.register("lru", LruCache, knobs=("capacity_tokens",))
+    _REG.make("lru", capacity_tokens=4096)    # -> LruCache(...)
+    _REG.make("nope")                         # -> UnknownNameError
+
+Every registry raises the SAME unknown-name shape —
+:class:`UnknownNameError`, ``unknown {kind} {name!r}; registered: [...]``
+— so sweep drivers and CLIs handle a typo identically whatever layer it
+hit.  ``UnknownNameError`` subclasses **ValueError** (the v6 contract: a
+bad name is a bad value, not a failed mapping lookup) and also KeyError,
+keeping every pre-v6 ``except KeyError`` / ``pytest.raises(KeyError)``
+call site working through the migration window.
+
+Per-entry ``meta`` carries registry-specific facts (a policy's plane, a
+traffic entry's closed-loop flag) without each wrapper needing its own
+entry type.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, NamedTuple
+
+
+class UnknownNameError(ValueError, KeyError):
+    """A ``make_*`` lookup for a name nothing registered.
+
+    ValueError first (the v6 contract); KeyError kept for one release so
+    pre-v6 handlers keep catching it.  ``KeyError.__str__`` repr-quotes
+    its argument — override back to the plain message so the listing of
+    registered names renders readably.
+    """
+
+    __str__ = BaseException.__str__
+
+
+class RegistryEntry(NamedTuple):
+    factory: Callable
+    knobs: tuple                 # accepted keyword names ((): none accepted)
+    meta: dict                   # registry-specific facts (kind, flags, ...)
+
+
+class Registry:
+    """Name -> factory with uniform error shapes (see module docstring)."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: Dict[str, RegistryEntry] = {}
+
+    def register(self, name: str, factory: Callable, knobs: tuple = (),
+                 **meta) -> None:
+        self._entries[name] = RegistryEntry(factory, tuple(knobs),
+                                            dict(meta))
+
+    def names(self) -> List[str]:
+        return sorted(self._entries)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def entry(self, name: str) -> RegistryEntry:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise UnknownNameError(
+                f"unknown {self.kind} {name!r}; "
+                f"registered: {self.names()}") from None
+
+    def meta(self, name: str) -> dict:
+        return self.entry(name).meta
+
+    def make(self, name: str, **knobs):
+        entry = self.entry(name)
+        bad = [k for k in knobs if k not in entry.knobs]
+        if bad:
+            raise TypeError(
+                f"{self.kind} {name!r} accepts knobs {entry.knobs}, "
+                f"got {bad}")
+        return entry.factory(**knobs)
+
+
+__all__ = ["Registry", "RegistryEntry", "UnknownNameError"]

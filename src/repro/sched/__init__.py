@@ -17,9 +17,10 @@
 from repro.sched.admission import (AdmissionPolicy, GatedAdmission,
                                    SloAwareAdmission, UngatedAdmission)
 from repro.sched.cluster import (ClusterPolicy, LeastContendedPolicy,
-                                 LeastLoadedPolicy, RoleSwitchConfig,
-                                 RoleSwitchPolicy)
-from repro.sched.context import AdmissionView, PolicyContext
+                                 LeastLoadedPolicy, PrefixAffinityPolicy,
+                                 RoleSwitchConfig, RoleSwitchPolicy,
+                                 dispatch_route_prefill)
+from repro.sched.context import AdmissionView, PolicyContext, RouteContext
 from repro.sched.dispatch import (SCHEDULABLE, DispatchPolicy,
                                   DynamicPDConfig, DynamicPDPolicy,
                                   FIFOPolicy, StaticTimeSlicePolicy)
@@ -34,8 +35,9 @@ __all__ = [
     "AdmissionPolicy", "GatedAdmission", "SloAwareAdmission",
     "UngatedAdmission",
     "ClusterPolicy", "LeastContendedPolicy", "LeastLoadedPolicy",
-    "RoleSwitchConfig",
-    "RoleSwitchPolicy", "AdmissionView", "PolicyContext", "SCHEDULABLE",
+    "PrefixAffinityPolicy", "RoleSwitchConfig", "dispatch_route_prefill",
+    "RoleSwitchPolicy", "AdmissionView", "PolicyContext", "RouteContext",
+    "SCHEDULABLE",
     "DispatchPolicy", "DynamicPDConfig", "DynamicPDPolicy", "FIFOPolicy",
     "StaticTimeSlicePolicy", "SchedulerPolicy", "list_policies",
     "make_policy", "policy_kind", "register_policy",

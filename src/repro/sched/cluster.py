@@ -32,9 +32,49 @@ multi-replica RealEngine front end.
 from __future__ import annotations
 
 import dataclasses
+import inspect
+import warnings
 from typing import Dict, List, Optional
 
 from repro.core.api import Phase
+from repro.sched.context import RouteContext
+
+
+def dispatch_route_prefill(policy, req, pool: List,
+                           ctx: Optional[RouteContext] = None):
+    """Call ``policy.route_prefill`` through the v5 -> v6 adapter.
+
+    v6 redesigned the hook to ``route_prefill(req, pool, ctx)`` with a
+    :class:`RouteContext` carrying per-instance prefix-match lengths and
+    loads.  External policies written against the v5 two-argument
+    signature keep working for one release: the adapter inspects the
+    bound method once per policy object, caches the verdict, and calls
+    legacy policies without the context — with a ``DeprecationWarning``
+    naming the migration (mirroring the v3 PolicyContext one)."""
+    fn = policy.route_prefill
+    takes_ctx = getattr(policy, "_route_prefill_takes_ctx", None)
+    if takes_ctx is None:
+        try:
+            params = inspect.signature(fn).parameters
+            takes_ctx = len(params) >= 3 or "ctx" in params or any(
+                p.kind is inspect.Parameter.VAR_KEYWORD
+                for p in params.values())
+        except (TypeError, ValueError):
+            takes_ctx = True
+        try:
+            policy._route_prefill_takes_ctx = takes_ctx
+        except AttributeError:
+            pass
+        if not takes_ctx:
+            warnings.warn(
+                f"{type(policy).__name__}.route_prefill(req, pool) uses "
+                "the v5 two-argument signature; migrate to "
+                "route_prefill(req, pool, ctx) — the adapter will be "
+                "removed next release (docs/api.md, v6 migration table)",
+                DeprecationWarning, stacklevel=3)
+    if takes_ctx:
+        return fn(req, pool, ctx)
+    return fn(req, pool)
 
 
 class ClusterPolicy:
@@ -63,8 +103,14 @@ class ClusterPolicy:
                 return fast
         return ok
 
-    def route_prefill(self, req, pool: List):
-        """Pick the instance that prefills ``req`` (None = no capacity)."""
+    def route_prefill(self, req, pool: List,
+                      ctx: Optional[RouteContext] = None):
+        """Pick the instance that prefills ``req`` (None = no capacity).
+
+        ``ctx`` (v6) carries per-instance prefix-match lengths and loads;
+        load-only policies may ignore it.  Legacy two-argument overrides
+        are honored through :func:`dispatch_route_prefill` for one
+        release."""
         raise NotImplementedError
 
     def route_decode(self, req, src, pool: List):
@@ -90,7 +136,7 @@ class LeastLoadedPolicy(ClusterPolicy):
         ok = self.healthy(pool)
         return min(ok, key=lambda i: i.load()) if ok else None
 
-    def route_prefill(self, req, pool):
+    def route_prefill(self, req, pool, ctx=None):
         return self._least_loaded(pool)
 
     def route_decode(self, req, src, pool):
@@ -234,3 +280,41 @@ class RoleSwitchPolicy(LeastLoadedPolicy):
                 "borrowed_now": len(self.borrowed),
                 "prefill_pressure_s": round(self._pressure, 4),
                 "decode_busy": round(self._decode_busy, 4)}
+
+
+class PrefixAffinityPolicy(LeastContendedPolicy):
+    """Data-aware prefill routing over the prefix-cache tier (v6).
+
+    Route each prefill to the healthy instance already holding the
+    LONGEST indexed prefix match for the request (``ctx.match_tokens``,
+    probed by the cluster per routing decision), provided the best match
+    covers at least ``min_match_pages`` index pages — recomputing less
+    than a page is cheaper than any affinity imbalance.  Ties break by
+    instance load.  With no usable match (cold cache, tokenless
+    requests, or a v5 caller passing no context) the policy degrades to
+    :class:`LeastContendedPolicy` — load-based prefill routing plus its
+    topology-aware decode routing, which this class inherits unchanged."""
+
+    def __init__(self, min_match_pages: int = 1):
+        self.min_match_pages = max(1, int(min_match_pages))
+        self.affinity_routes = 0
+        self.fallback_routes = 0
+
+    def route_prefill(self, req, pool, ctx=None):
+        ok = self.healthy(pool)
+        if not ok:
+            return None
+        if ctx is not None and ctx.match_tokens:
+            best = max(ctx.match_tokens.get(i.name, 0) for i in ok)
+            floor = self.min_match_pages * max(1, ctx.page_tokens)
+            if best >= floor:
+                cands = [i for i in ok
+                         if ctx.match_tokens.get(i.name, 0) == best]
+                self.affinity_routes += 1
+                return min(cands, key=lambda i: i.load())
+        self.fallback_routes += 1
+        return min(ok, key=lambda i: i.load())
+
+    def debug_state(self):
+        return {"affinity_routes": self.affinity_routes,
+                "fallback_routes": self.fallback_routes}

@@ -93,6 +93,33 @@ class PolicyContext:
 
 
 @dataclasses.dataclass
+class RouteContext:
+    """Cluster-routing context (control-plane API v6).
+
+    ``ClusterPolicy.route_prefill`` grew a third argument — this snapshot
+    — so placement can be DATA-aware, not just load-aware: the cluster
+    probes every healthy prefill instance's prefix cache for the request
+    and reports per-instance longest-match lengths alongside the load
+    signal.  ``prefix_affinity`` routes on ``match_tokens``; load-only
+    policies ignore the context entirely (it defaults to ``None`` on the
+    base signature, and 2-argument v5 policies are still called through
+    a one-release adapter — see ``dispatch_route_prefill``)."""
+
+    now: float = 0.0
+    # instance name -> longest indexed prefix match for THIS request, in
+    # tokens (empty when no instance runs a prefix cache)
+    match_tokens: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # instance name -> router load signal (same value as inst.load())
+    loads: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # prefix-index block granularity (0 = no cache tier configured)
+    page_tokens: int = 0
+    cluster: Any = None
+
+    def best_match(self) -> int:
+        return max(self.match_tokens.values(), default=0)
+
+
+@dataclasses.dataclass
 class AdmissionView:
     """Snapshot of one serving instance's occupancy for admission control.
 

@@ -6,34 +6,37 @@ One factory for all three layers::
 
     make_policy("dynamic_pd", ttft_guard_s=0.05)   # DispatchPolicy
     make_policy("gated")                           # AdmissionPolicy
-    make_policy("role_switch", ttft_hi_s=2.0)      # ClusterPolicy
+    make_policy("prefix_affinity")                 # ClusterPolicy (v6)
 
 ``Cluster``, ``RealEngine``, ``launch/serve.py``, and the benchmarks all
 resolve policies through this registry, so a new policy registered here is
 immediately sweepable by name everywhere.  Config-dataclass policies
 (``dynamic_pd``, ``role_switch``) accept their config's fields as flat
 keyword knobs.
+
+Since v6 this is a thin wrapper over the shared :mod:`repro.registry`
+helper: unknown names raise the unified
+:class:`~repro.registry.UnknownNameError` (a ``ValueError``; also a
+``KeyError`` through the migration window) and unknown knobs raise
+``TypeError`` — the same shapes as ``make_traffic`` / ``make_topology`` /
+``make_cache``.  The policy *plane* ("dispatch" | "admission" |
+"cluster") rides in the entry's registry metadata.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, NamedTuple
+from typing import Callable, List
 
+from repro.registry import Registry
 from repro.sched.admission import (GatedAdmission, SloAwareAdmission,
                                    UngatedAdmission)
 from repro.sched.cluster import (LeastContendedPolicy, LeastLoadedPolicy,
-                                 RoleSwitchConfig, RoleSwitchPolicy)
+                                 PrefixAffinityPolicy, RoleSwitchConfig,
+                                 RoleSwitchPolicy)
 from repro.sched.dispatch import (DynamicPDConfig, DynamicPDPolicy,
                                   FIFOPolicy, StaticTimeSlicePolicy)
 
-
-class _Entry(NamedTuple):
-    kind: str                    # "dispatch" | "admission" | "cluster"
-    factory: Callable
-    knobs: tuple                 # accepted keyword names (for errors/--help)
-
-
-_REGISTRY: Dict[str, _Entry] = {}
+_REG = Registry("policy")
 
 
 def register_policy(name: str, kind: str, factory: Callable,
@@ -41,31 +44,21 @@ def register_policy(name: str, kind: str, factory: Callable,
     """Register a policy constructor under a sweepable name."""
     if kind not in ("dispatch", "admission", "cluster"):
         raise ValueError(f"unknown policy kind {kind!r}")
-    _REGISTRY[name] = _Entry(kind, factory, tuple(knobs))
+    _REG.register(name, factory, knobs=knobs, kind=kind)
 
 
 def list_policies(kind: str = "") -> List[str]:
-    return sorted(n for n, e in _REGISTRY.items()
-                  if not kind or e.kind == kind)
+    return [n for n in _REG.names()
+            if not kind or _REG.meta(n)["kind"] == kind]
 
 
 def policy_kind(name: str) -> str:
-    return _REGISTRY[name].kind
+    return _REG.meta(name)["kind"]
 
 
 def make_policy(name: str, **knobs):
     """Build the policy registered as ``name`` with the given knobs."""
-    try:
-        entry = _REGISTRY[name]
-    except KeyError:
-        raise KeyError(
-            f"unknown policy {name!r}; registered: {list_policies()}") \
-            from None
-    bad = [k for k in knobs if entry.knobs and k not in entry.knobs]
-    if bad:
-        raise TypeError(f"policy {name!r} accepts knobs {entry.knobs}, "
-                        f"got {bad}")
-    return entry.factory(**knobs)
+    return _REG.make(name, **knobs)
 
 
 def _cfg_knobs(cfg_cls) -> tuple:
@@ -96,5 +89,7 @@ register_policy("slo_aware", "admission", SloAwareAdmission,
 # --- cluster ---------------------------------------------------------------
 register_policy("least_loaded", "cluster", LeastLoadedPolicy)
 register_policy("least_contended", "cluster", LeastContendedPolicy)
+register_policy("prefix_affinity", "cluster", PrefixAffinityPolicy,
+                knobs=("min_match_pages",))
 register_policy("role_switch", "cluster", _role_switch,
                 knobs=_cfg_knobs(RoleSwitchConfig))

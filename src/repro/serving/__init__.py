@@ -5,8 +5,11 @@ from repro.serving.simulator import (Cluster, DeploymentSpec, EventLoop,
                                      SimConfig, SimInstance,
                                      deployment_6p2d, deployment_dynamic,
                                      deployment_role_switch)
-from repro.serving.workload import (bursty_phase_shift, deepseek_1k1k,
-                                    deepseek_1k4k, make_workload, qwen_grid)
+# Workload generators live in repro.traffic (the serving.workload shim
+# was removed after its one-release deprecation window, v6); these
+# package-level re-exports remain part of the public surface.
+from repro.traffic.workloads import (bursty_phase_shift, deepseek_1k1k,
+                                     deepseek_1k4k, make_workload, qwen_grid)
 
 # The link/transport classes (LinkModel, LinkTransfer, LinkDriver,
 # ThreadedLinkTimer) live in repro.transport; their one-release re-exports

@@ -90,13 +90,10 @@ class CostModel:
     # --------------------------------------------------------- step times
     def _prefill_terms(self, spec: InstanceSpec, tokens: int,
                        context: int = 0) -> "tuple[float, float]":
-        """(t_compute, t_memory) of one prefill launch (roofline terms)."""
-        cfg = self.cfg
-        flops = 2.0 * self.n_active * tokens * self.calibration_flops
-        # attention flops (causal): 2 * 2 * tokens * ctx/2 * H * D per layer
-        n_attn = cfg.num_attention_layers()
-        ctx = max(context, tokens)
-        flops += 2.0 * n_attn * tokens * ctx * cfg.num_heads * cfg.head_dim
+        """(t_compute, t_memory) of one prefill launch (roofline terms).
+        Attention flops (causal): 2 * 2 * tokens * ctx/2 * H * D per
+        layer — see ``prefill_flops``."""
+        flops = self.prefill_flops(tokens, context)
         bytes_ = (self.weights_bytes()
                   + tokens * self.kv_bytes_per_token()) * self.calibration_bytes
         return (flops / (spec.chips * PEAK_FLOPS * spec.compute_eff),
@@ -111,6 +108,18 @@ class CostModel:
                   + batch * self.ssm_state_bytes()) * self.calibration_bytes
         return (flops / (spec.chips * PEAK_FLOPS * spec.compute_eff),
                 bytes_ / (spec.chips * HBM_BW * spec.bw_eff))
+
+    def prefill_flops(self, tokens: int, context: int = 0) -> float:
+        """Model FLOPs of prefilling ``tokens`` at ``context`` total
+        attention context — the numerator of the prefill roofline compute
+        term, exposed for recompute-savings telemetry (the prefix-cache
+        tier reports FLOPs it avoided by skipping cached tokens)."""
+        cfg = self.cfg
+        flops = 2.0 * self.n_active * tokens * self.calibration_flops
+        ctx = max(context, tokens)
+        flops += 2.0 * cfg.num_attention_layers() * tokens * ctx \
+            * cfg.num_heads * cfg.head_dim
+        return flops
 
     def prefill_time(self, spec: InstanceSpec, tokens: int,
                      context: int = 0) -> float:

@@ -58,8 +58,8 @@ from repro.core.api import Phase
 from repro.core.session import connect
 from repro.sched import (AdmissionPolicy, AdmissionView, ClusterPolicy,
                          DynamicPDConfig, DynamicPDPolicy, FIFOPolicy,
-                         GatedAdmission, UngatedAdmission, make_policy,
-                         policy_kind)
+                         GatedAdmission, RouteContext, UngatedAdmission,
+                         dispatch_route_prefill, make_policy, policy_kind)
 from repro.models.model import Model
 from repro.serving.request import Request, RequestState, summarize
 
@@ -333,8 +333,14 @@ class RealEngine:
             # the TARGET replica's occupancy — one admission
             # implementation for any replica count
             i = self.admission.pick_next(self.waiting_admission)
-            rep = self.router.route_prefill(self.waiting_admission[i],
-                                            self.replicas)
+            # v6 routing signature: context-carrying dispatch through the
+            # signature adapter (the real engine has no prefix caches yet,
+            # so the context only carries the clock and per-replica loads)
+            rep = dispatch_route_prefill(
+                self.router, self.waiting_admission[i], self.replicas,
+                RouteContext(now=time.monotonic(),
+                             loads={r.name: r.load()
+                                    for r in self.replicas}))
             if rep is None or not self.admission.admit(
                     self._admission_view(rep, i)):
                 return

@@ -72,6 +72,10 @@ class Request:
     # decode instance (set/cleared by the cluster; a request cannot retire
     # or migrate while its pages are partly in flight)
     kv_stream_pending: bool = False
+    # prefix-cache tier (v6): prompt tokens served from a cached prefix at
+    # prefill admission — those tokens skip recomputation (only the suffix
+    # is launched); reset on retry since the retry instance's cache differs
+    cached_tokens: int = 0
 
     @property
     def ttft(self) -> float:
@@ -105,6 +109,7 @@ class Request:
         self.token_times = []
         self.first_token_time = -1.0
         self.kv_stream_pending = False
+        self.cached_tokens = 0
         self.retries += 1
 
     @property

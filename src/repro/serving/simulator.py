@@ -51,14 +51,15 @@ import math
 import threading
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.cache import make_cache, request_block_hashes
 from repro.configs.base import ModelConfig
 from repro.core.api import OpDescriptor, OpType, Phase
 from repro.core.queues import flops_key
 from repro.core.session import connect
 from repro.sched import (AdmissionPolicy, AdmissionView, ClusterPolicy,
                          DynamicPDConfig, DynamicPDPolicy, FIFOPolicy,
-                         GatedAdmission, UngatedAdmission, make_policy,
-                         policy_kind)
+                         GatedAdmission, RouteContext, UngatedAdmission,
+                         dispatch_route_prefill, make_policy, policy_kind)
 from repro.serving.costmodel import CostModel, InstanceSpec
 from repro.serving.request import TERMINAL_STATES, Request, RequestState
 # KV transport subsystem: topology-resolved multi-hop paths, the path-aware
@@ -161,6 +162,18 @@ class SimConfig:
     # per request, the v2 behavior).
     topology: Optional[Topology] = None
     kv_chunk_tokens: int = 0
+    # Prefix-cache tier (v6, repro.cache): ``prefix_cache`` names the
+    # eviction policy from make_cache ("none" = disabled — bit-compatible
+    # with v5); blocks are ``prefix_page_tokens`` wide and each instance's
+    # cache budget is ``prefix_cache_frac`` of its KV capacity (occupancy
+    # charged to the instance ledger).  ``remote_prefix_fetch`` lets the
+    # cluster copy a longer remote match over the KV transport path when
+    # the cost model says the copy beats recomputing it.
+    prefix_cache: str = "none"
+    prefix_cache_knobs: Dict = dataclasses.field(default_factory=dict)
+    prefix_page_tokens: int = 64
+    prefix_cache_frac: float = 0.2
+    remote_prefix_fetch: bool = True
 
 
 class SimInstance:
@@ -243,6 +256,20 @@ class SimInstance:
         # transfer to a decode instance is in flight (conservation: the
         # source pages are only freed once the destination holds the copy)
         self.kv_in_transit = 0
+        # prefix-cache tier (v6, repro.cache): retained prompt-KV blocks
+        # this instance can re-serve.  Occupancy is charged into kv_used
+        # through on_delta (cached blocks are real HBM pages), inserts are
+        # gated on live KV headroom, and the budget is a fraction of KV
+        # capacity.  "none" (the default) is a NullPrefixCache: every call
+        # is a no-op and behavior is bit-identical to v5.
+        self.cache = make_cache(
+            sim_cfg.prefix_cache or "none",
+            capacity_tokens=max(
+                0, int(self.kv_capacity * sim_cfg.prefix_cache_frac)),
+            page_tokens=max(1, sim_cfg.prefix_page_tokens),
+            on_delta=self._cache_delta, room_fn=self.kv_free,
+            **sim_cfg.prefix_cache_knobs)
+        self.prefix_flops_saved = 0.0
         self._decode_op_inflight = False
         # rejection telemetry (v5): requests the admission policy shed on
         # this instance — honest accounting's per-instance counter
@@ -269,6 +296,12 @@ class SimInstance:
 
     def kv_free(self) -> int:
         return max(0, self.kv_capacity - self.kv_used)
+
+    def _cache_delta(self, tokens: int) -> None:
+        """Prefix-cache occupancy ledger hook: cached blocks live in this
+        instance's HBM, so inserts charge ``kv_used`` and evictions refund
+        it (the conservation check sees cache pages like any others)."""
+        self.kv_used += tokens
 
     # ------------------------------------------------------------ prefill
     def submit(self, req: Request) -> None:
@@ -341,10 +374,25 @@ class SimInstance:
         return out
 
     def _enqueue_prefill(self, req: Request) -> None:
+        # prefix-cache admission hook (v6): pin the longest cached prefix
+        # match for this prompt — matched tokens skip recomputation and
+        # only the SUFFIX is launched/charged to the cost model.  The
+        # pins also shield the matched blocks from eviction until the
+        # prefill settles (release in _prefill_done).
+        cached = self.cache.acquire(req, self.now)
+        if self.kv_free() < req.prompt_len:
+            # under KV pressure the cache gives memory back before we
+            # park: cached blocks are strictly less valuable than live
+            # request state (they can be recomputed; a parked prompt
+            # stalls a user)
+            self.cache.evict_tokens(req.prompt_len - self.kv_free(),
+                                    self.now)
         if self.kv_free() < req.prompt_len:
             # No KV room: park until decode frees memory.
+            self.cache.release(req)
             self.prefill_waiting.append(req)
             return
+        req.cached_tokens = cached
         self.kv_used += req.prompt_len
         req.state = RequestState.PREFILLING
         self.prefilling[req.req_id] = req
@@ -353,19 +401,25 @@ class SimInstance:
         # stream so program order holds without event edges
         stream = self.streams_p[self._rr_prefill % len(self.streams_p)]
         self._rr_prefill += 1
-        chunks = self._prefill_chunks(req.prompt_len)
+        chunks = self._prefill_chunks(req.prompt_len - cached)
         for i, (ctoks, off) in enumerate(chunks):
             fut = self.client.launch(
                 stream, None, phase=Phase.PREFILL,
-                meta={"req": req, "tokens": ctoks, "ctx": off + ctoks,
+                meta={"req": req, "tokens": ctoks,
+                      "ctx": cached + off + ctoks,
                       "chunk": i, "chunks": len(chunks), "_sim_inst": self,
                       **self.cost.prefill_meta(self.spec, ctoks),
                       "est_duration": self.cost.prefill_time(
-                          self.spec, ctoks, context=off + ctoks)})
+                          self.spec, ctoks, context=cached + off + ctoks)})
         # the request's prefill completes with its LAST chunk (a failed
         # device errors/abandons every chunk, so the callback still sees
         # the fault through the final chunk's future)
         fut.add_done_callback(lambda f, r=req: self._prefill_done(r, f))
+        if cached:
+            # recompute-savings telemetry: the FLOPs the cached prefix
+            # would have cost (linear + causal attention over the prefix)
+            self.prefix_flops_saved += self.cost.prefill_flops(
+                cached, context=cached)
         self.kick()
 
     def _prefill_done(self, req: Request, fut) -> None:
@@ -378,11 +432,16 @@ class SimInstance:
                 # _complete; this is the same rule at the callback level)
                 return
             self.prefilling.pop(req.req_id, None)
+            self.cache.release(req)   # unpin the matched prefix blocks
             try:
                 fut.result()
             except Exception:
                 return  # failure path handled by cluster re-router
             self.steps["prefill"] += 1
+            # populate the prefix cache with this prompt's full-page blocks
+            # (existing blocks are touched, new ones inserted if the pool
+            # and live KV headroom allow)
+            self.cache.insert(req, self.now)
             req.record_token(self.now)   # first token emitted at prefill end
             self._drain_admission()      # a window slot freed up
             if self.on_prefill_done is not None:
@@ -639,6 +698,9 @@ class SimInstance:
             self.prefill_waiting, self.decode_pending, self.active = [], [], []
             self.prefilling = {}
             self.stalled, self._stall_start = {}, {}
+            # cached prefix blocks died with the device: drop index + pins
+            # (no on_delta refunds — the whole ledger is zeroed below)
+            self.cache.clear()
             self.kv_used = 0
             self.kv_in_transit = 0
         self.daemon.fail(requeue_sink=lambda op: None)
@@ -807,7 +869,12 @@ class Cluster:
         # closed-loop traffic sources attached by run(traffic=...): fed at
         # every terminal request transition through loop.defer
         self._sources: List = []
+        # cross-instance prefix reuse telemetry (v6)
+        self.prefix_fetches = 0
+        self.prefix_fetch_fails = 0
+        self.prefix_fetch_tokens = 0
         self._build()
+        self._prefix_on = any(i.cache.enabled for i in self.instances)
 
     # ----------------------------------------------------------- topology
     def _dispatch_policy(self):
@@ -903,13 +970,44 @@ class Cluster:
     def _healthy(self, pool: List[SimInstance]) -> List[SimInstance]:
         return self.policy.healthy(pool)
 
+    def _route_ctx(self, req: Request) -> RouteContext:
+        """Per-request routing context (v6 ``route_prefill`` signature):
+        the cluster probes every healthy prefill instance's prefix cache
+        for its longest match so affinity policies can route reuse."""
+        matches: Dict[str, int] = {}
+        if self._prefix_on:
+            hashes = request_block_hashes(
+                req, max(1, self.sim_cfg.prefix_page_tokens))
+            if hashes:
+                for i in self.prefill_pool:
+                    if not i.failed and i.cache.enabled:
+                        matches[i.name] = i.cache.match_chain(hashes)
+        return RouteContext(
+            now=self.loop.clock.t,
+            match_tokens=matches,
+            loads={i.name: i.load() for i in self.prefill_pool
+                   if not i.failed},
+            page_tokens=self.sim_cfg.prefix_page_tokens
+            if self._prefix_on else 0,
+            cluster=self)
+
+    def _route_prefill(self, req: Request) -> Optional[SimInstance]:
+        """All cluster prefill routing funnels through here: builds the
+        RouteContext and dispatches through the v5->v6 signature adapter
+        (legacy 2-arg policies keep working, with a DeprecationWarning)."""
+        return dispatch_route_prefill(self.policy, req, self.prefill_pool,
+                                      self._route_ctx(req))
+
     def submit(self, req: Request) -> None:
         with self._lock:
             self.requests.append(req)
-            inst = self.policy.route_prefill(req, self.prefill_pool)
+            inst = self._route_prefill(req)
             if inst is None:
                 self._fail_request(req)
                 return
+            if self._maybe_prefix_fetch(req, inst):
+                self._arm_tick()
+                return      # parked at the cluster until the fetch lands
             inst.submit(req)
             self._arm_tick()
 
@@ -1135,11 +1233,155 @@ class Cluster:
     def _reroute(self, req: Request) -> None:
         with self._lock:
             req.reset_for_retry()
-            inst = self.policy.route_prefill(req, self.prefill_pool)
+            inst = self._route_prefill(req)
             if inst is not None:
                 inst.submit(req)
             else:
                 self._fail_request(req)
+
+    # ------------------------------------------------- remote prefix fetch
+    def _maybe_prefix_fetch(self, req: Request, dst: SimInstance) -> bool:
+        """Cross-instance prefix reuse (v6): if a PEER instance caches a
+        strictly longer prefix of this prompt than the routed destination
+        and the cost model says copying those blocks over the KV path
+        beats recomputing them, stream them to the destination first.
+
+        The request parks at the cluster (state QUEUED, no instance) until
+        the fetch settles; fetched blocks are COPIES — the source keeps
+        its cache entries (pinned against eviction for the flight) and
+        stages the outgoing chunks in a send buffer charged to its ledger,
+        so ``check_kv_conservation`` holds at every mid-fetch point.  Any
+        failure (chunk error, severed path, either endpoint dying) falls
+        back to plain local recompute — reuse is an optimization, never a
+        correctness dependency."""
+        if not (self._prefix_on and self.sim_cfg.remote_prefix_fetch):
+            return False
+        if dst.failed or not dst.cache.enabled:
+            return False
+        page = max(1, self.sim_cfg.prefix_page_tokens)
+        hashes = request_block_hashes(req, page)
+        if not hashes:
+            return False
+        local = dst.cache.match_chain(hashes)
+        best, src = local, None
+        for inst in self.instances:
+            if inst is dst or inst.failed or not inst.cache.enabled:
+                continue
+            m = inst.cache.match_chain(hashes)
+            if m > best:
+                best, src = m, inst
+        delta = best - local
+        if src is None or delta < page:
+            return False
+        # benefit in recompute-skippable tokens (at least one prompt token
+        # must always prefill to emit the first token)
+        usable = max(0, req.prompt_len - 1)
+        benefit = min(best, usable) - min(local, usable)
+        if benefit <= 0:
+            return False
+        t_copy = self.cost.transfer_time(
+            delta, bw=self.sim_cfg.transfer_bw,
+            latency_s=self.sim_cfg.transfer_latency_s)
+        t_recompute = self.cost.prefill_time(dst.spec, benefit, context=best)
+        if t_copy >= t_recompute:
+            return False
+        path = self.topology.path(src.name, dst.name)
+        if any(s in self.link_model.failed_segments for s in path):
+            return False
+        chain = hashes[:best // page]
+        start = local // page
+        if not src.cache.pin_chain(chain[start:]):
+            return False     # raced with an eviction — recompute locally
+        # stage the outgoing copy: send-buffer pages charged at the source
+        # for the flight, freed chunk-by-chunk as each lands (the same
+        # per-chunk ledger arithmetic as prefill->decode transfers)
+        src.kv_used += delta
+        src.kv_in_transit += delta
+        xid = next(self._transfer_ids)
+        self.inflight_transfers[xid] = {
+            "kind": "prefix_fetch", "req": req, "src": src, "dst": dst,
+            "tokens": delta, "remaining": delta, "chain": chain,
+            "start": start, "aborted": False, "path": path}
+        self.prefix_fetches += 1
+        self.streamer.stream(
+            src.client, dst.daemon, delta, path=path, vstream=src.stream_c,
+            meta={"req_id": req.req_id, "prefix_fetch": True},
+            on_chunk=lambda i, ctoks, last, f, x=xid:
+                self._prefix_chunk_done(x, ctoks, last, f))
+        src.kick()
+        return True
+
+    def _prefix_chunk_done(self, xid: int, ctoks: int, last: bool,
+                           fut) -> None:
+        """One prefix-fetch chunk settled: free the source's send-buffer
+        share, and on the LAST chunk unpin the source blocks, graft the
+        fetched chain into the destination cache, and deliver the parked
+        request (or fall back to recompute if anything went wrong)."""
+        with self._lock:
+            entry = self.inflight_transfers.get(xid)
+            if entry is None:
+                return           # source failed: entry dropped, request
+                #                  already resubmitted for local recompute
+            req, src, dst = entry["req"], entry["src"], entry["dst"]
+            entry["remaining"] -= ctoks
+            if not src.failed:
+                src.kv_in_transit -= ctoks
+                src.kv_used -= ctoks      # send-buffer share of this chunk
+                assert src.kv_used >= 0 and src.kv_in_transit >= 0, \
+                    (src.name, src.kv_used, src.kv_in_transit)
+                src._retry_parked()
+            failed_chunk = False
+            try:
+                fut.result()
+            except Exception:
+                failed_chunk = True
+            if any(s in self.link_model.failed_segments
+                   for s in entry["path"]):
+                failed_chunk = True
+            if last:
+                self.inflight_transfers.pop(xid, None)
+                if not src.failed:
+                    src.cache.unpin_chain(entry["chain"][entry["start"]:])
+            if entry["aborted"]:
+                return           # fault handling already resubmitted it
+            if failed_chunk or dst.failed:
+                entry["aborted"] = True
+                self.prefix_fetch_fails += 1
+                if not dst.failed:
+                    self._submit_after_fetch(req, dst)
+                else:
+                    # destination died before _fail_instance_locked saw
+                    # this entry — resubmit through fresh routing
+                    self._submit_after_fetch(req, None)
+                return
+            self.prefix_fetch_tokens += ctoks
+            if last:
+                # graft the fetched chain into the destination's cache;
+                # have_from skips blocks it already held, and a mid-fetch
+                # eviction of the local head orphans the tail harmlessly
+                # (insert_chain skips orphans — the request just recomputes
+                # more than hoped)
+                dst.cache.insert_chain(entry["chain"], self.loop.clock.t,
+                                       have_from=entry["start"])
+                self._submit_after_fetch(req, dst)
+
+    def _submit_after_fetch(self, req: Request,
+                            dst: Optional[SimInstance]) -> None:
+        """Deliver a cluster-parked request after its prefix fetch settled
+        (or failed): to the fetch destination if it still serves prefill,
+        else through fresh routing.  Never starts another fetch."""
+        if req.state in TERMINAL_STATES:
+            return
+        if dst is not None and not dst.failed \
+                and dst.role in ("prefill", "both"):
+            dst.submit(req)
+        else:
+            inst = self._route_prefill(req)
+            if inst is None:
+                self._fail_request(req)
+                return
+            inst.submit(req)
+        self._arm_tick()
 
     # ------------------------------------------------------ role switching
     def switch_role(self, inst, new_role: str) -> bool:
@@ -1182,7 +1424,7 @@ class Cluster:
                 # finish here and _transfer_to_decode admits them locally
                 waiting, inst.prefill_waiting = inst.prefill_waiting, []
                 for r in waiting:
-                    target = self.policy.route_prefill(r, self.prefill_pool)
+                    target = self._route_prefill(r)
                     if target is not None:
                         target.submit(r)
                     else:
@@ -1203,7 +1445,7 @@ class Cluster:
                 waiting.extend(moved)
             waiting.sort(key=lambda r: r.arrival_time)
             for r in waiting:
-                target = self.policy.route_prefill(r, self.prefill_pool)
+                target = self._route_prefill(r)
                 if target is not None:
                     target.submit(r)
                 else:
@@ -1273,8 +1515,37 @@ class Cluster:
             # startup, folded into the wall-clock pacing) — recorded so
             # BENCH artifacts show how faithful the threaded timing was
             out["calibration"] = self._backend.calibration()
+        if self._prefix_on:
+            out["prefix_cache"] = self.prefix_cache_telemetry()
         out["policy"] = self.policy_telemetry()
         return out
+
+    def prefix_cache_telemetry(self) -> Dict:
+        """Prefix-reuse observability (v6): aggregate hit rate, recompute
+        FLOPs avoided, and cross-instance fetch traffic, plus the raw
+        per-instance cache stats — folded into ``run`` results so
+        BENCH_*.json artifacts record reuse behavior."""
+        per_inst = {i.name: i.cache.stats() for i in self.instances
+                    if i.cache.enabled}
+        matched = sum(s["matched_tokens"] for s in per_inst.values())
+        prompts = sum(s["prompt_tokens"] for s in per_inst.values())
+        return {
+            "policy": self.sim_cfg.prefix_cache,
+            "page_tokens": self.sim_cfg.prefix_page_tokens,
+            "matched_tokens": matched,
+            "prompt_tokens": prompts,
+            "hit_rate": round(matched / prompts, 6) if prompts else 0.0,
+            "flops_saved": sum(i.prefix_flops_saved for i in self.instances),
+            "inserts": sum(s["inserts"] for s in per_inst.values()),
+            "evictions": sum(s["evictions"] for s in per_inst.values()),
+            "remote_fetches": self.prefix_fetches,
+            "remote_fetch_fails": self.prefix_fetch_fails,
+            "remote_fetch_tokens": self.prefix_fetch_tokens,
+            "remote_fetch_bytes": round(
+                self.prefix_fetch_tokens * self.cost.kv_bytes_per_token(),
+                3),
+            "per_instance": per_inst,
+        }
 
     def close(self) -> None:
         """Stop daemon threads (threaded drive); idempotent."""
@@ -1357,6 +1628,29 @@ class Cluster:
         lost = inst.fail()
         n_lost = len(lost)
         for xid, entry in list(self.inflight_transfers.items()):
+            if entry.get("kind") == "prefix_fetch":
+                # prefix fetches never hold request KV — the request is
+                # parked at the cluster and the blocks are copies — so the
+                # only cleanup is resubmitting the parked request for
+                # local recompute (and, source-side, dropping the entry:
+                # its chunk futures died with the daemon and fail()
+                # zeroed the send-buffer accounting + cache pins)
+                if entry["src"] is inst:
+                    del self.inflight_transfers[xid]
+                    if not entry["aborted"]:
+                        entry["aborted"] = True
+                        self.prefix_fetch_fails += 1
+                        self._submit_after_fetch(entry["req"], entry["dst"])
+                        n_lost += 1
+                elif entry["dst"] is inst and not entry["aborted"]:
+                    # source chunks keep settling their send buffer as
+                    # each op completes; the fetched copy died with the
+                    # destination — reroute the parked request now
+                    entry["aborted"] = True
+                    self.prefix_fetch_fails += 1
+                    self._submit_after_fetch(entry["req"], None)
+                    n_lost += 1
+                continue
             if entry["src"] is inst:
                 # the remaining chunk ops were drained with the daemon: no
                 # completion callbacks will fire, and fail() zeroed the
@@ -1382,7 +1676,7 @@ class Cluster:
                 self._reroute(entry["req"])
                 n_lost += 1
         for r in lost:
-            target = self.policy.route_prefill(r, self.prefill_pool)
+            target = self._route_prefill(r)
             if target is not None:
                 target.submit(r)
             else:
@@ -1407,6 +1701,14 @@ class Cluster:
                 if seg not in entry.get("path", ()) or entry["aborted"]:
                     continue
                 entry["aborted"] = True
+                if entry.get("kind") == "prefix_fetch":
+                    # nothing landed at the destination to evict (the
+                    # chain grafts only on the LAST chunk) — the parked
+                    # request falls back to local recompute
+                    self.prefix_fetch_fails += 1
+                    self._submit_after_fetch(entry["req"], entry["dst"])
+                    n += 1
+                    continue
                 if not entry["dst"].failed:
                     self._evict_partial(entry)
                 self._reroute(entry["req"])

@@ -20,8 +20,8 @@ from repro.traffic.spec import (DEFAULT_CLASSES, PromptClass, TrafficSpec,
 from repro.traffic.tenants import TenantClass, default_tiers
 from repro.traffic.workloads import (bursty_phase_shift, closed_loop,
                                      deepseek_1k1k, deepseek_1k4k,
-                                     make_workload, qwen_grid, tiered,
-                                     tiered_burst)
+                                     make_workload, multi_turn, qwen_grid,
+                                     tiered, tiered_burst)
 
 __all__ = [
     "SLO", "ARRIVALS", "LENGTHS", "DEFAULT_CLASSES",
@@ -32,5 +32,6 @@ __all__ = [
     "PromptClass", "TrafficSpec", "zipf_probs",
     "TenantClass", "default_tiers", "ClosedLoopPool",
     "make_workload", "bursty_phase_shift", "deepseek_1k1k",
-    "deepseek_1k4k", "qwen_grid", "tiered", "tiered_burst", "closed_loop",
+    "deepseek_1k4k", "multi_turn", "qwen_grid", "tiered", "tiered_burst",
+    "closed_loop",
 ]

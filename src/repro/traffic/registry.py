@@ -1,62 +1,50 @@
 """Traffic registry: construct any workload by name.
 
-Mirrors ``repro.sched.make_policy`` / ``repro.parallel.make_topology``::
+Mirrors ``repro.sched.make_policy`` / ``repro.transport.make_topology`` /
+``repro.cache.make_cache`` — all four ride the shared
+:mod:`repro.registry` helper since v6::
 
     from repro.traffic import make_traffic
 
     make_traffic("deepseek_1k1k", n=200)          # List[Request]
-    make_traffic("tiered_burst", burst_mult=10.0)  # multi-tenant trace
+    make_traffic("multi_turn", conversations=8)    # shared-prefix chat
     make_traffic("closed_loop", users=32)          # ClosedLoopPool
 
 Open-loop entries return a ``List[Request]``; ``closed_loop`` returns a
 :class:`~repro.traffic.closed_loop.ClosedLoopPool` — both feed straight
 into ``Cluster.run`` (requests positionally, pools via ``traffic=``).
-Unknown names raise ``KeyError`` listing what IS registered; unknown
-knobs raise ``TypeError`` naming the accepted set.
+Unknown names raise the unified
+:class:`~repro.registry.UnknownNameError` (a ``ValueError``; also a
+``KeyError`` through the migration window) listing what IS registered;
+unknown knobs raise ``TypeError`` naming the accepted set.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, NamedTuple
+from typing import Callable, List
 
+from repro.registry import Registry
 from repro.traffic import workloads as _w
 
-
-class _Entry(NamedTuple):
-    factory: Callable
-    knobs: tuple                 # accepted keyword names (for errors/--help)
-    closed_loop: bool            # returns a pool, not a request list
-
-
-_REGISTRY: Dict[str, _Entry] = {}
+_REG = Registry("traffic")
 
 
 def register_traffic(name: str, factory: Callable, knobs: tuple = (),
                      closed_loop: bool = False) -> None:
     """Register a workload constructor under a sweepable name."""
-    _REGISTRY[name] = _Entry(factory, tuple(knobs), closed_loop)
+    _REG.register(name, factory, knobs=knobs, closed_loop=closed_loop)
 
 
 def list_traffic() -> List[str]:
-    return sorted(_REGISTRY)
+    return _REG.names()
 
 
 def traffic_is_closed_loop(name: str) -> bool:
-    return _REGISTRY[name].closed_loop
+    return bool(_REG.meta(name)["closed_loop"])
 
 
 def make_traffic(name: str, **knobs):
     """Build the workload registered as ``name`` with the given knobs."""
-    try:
-        entry = _REGISTRY[name]
-    except KeyError:
-        raise KeyError(
-            f"unknown traffic {name!r}; registered: {list_traffic()}") \
-            from None
-    bad = [k for k in knobs if entry.knobs and k not in entry.knobs]
-    if bad:
-        raise TypeError(f"traffic {name!r} accepts knobs {entry.knobs}, "
-                        f"got {bad}")
-    return entry.factory(**knobs)
+    return _REG.make(name, **knobs)
 
 
 register_traffic("open_loop", _w.make_workload,
@@ -71,6 +59,10 @@ register_traffic("deepseek_1k1k", _w.deepseek_1k1k,
 register_traffic("deepseek_1k4k", _w.deepseek_1k4k,
                  knobs=("n", "rate", "seed"))
 register_traffic("qwen_grid", _w.qwen_grid)
+register_traffic("multi_turn", _w.multi_turn,
+                 knobs=("n", "rate", "seed", "conversations",
+                        "system_tokens", "turn_tokens", "output_tokens",
+                        "zipf_alpha", "arrival", "vocab"))
 register_traffic("tiered", _w.tiered,
                  knobs=("n", "rate", "seed", "zipf_alpha", "ttft_scale",
                         "tpot_scale", "tiers"))

@@ -95,6 +95,57 @@ def qwen_grid():
             for i, o in cells}
 
 
+# --- shared-prefix multi-turn traffic (prefix-cache tier, v6) --------------
+
+def multi_turn(n: int = 300, rate: float = 30.0, seed: int = 0,
+               conversations: int = 16, system_tokens: int = 512,
+               turn_tokens: int = 128, output_tokens: int = 64,
+               zipf_alpha: float = 1.1, arrival: str = "poisson",
+               vocab: int = 32000) -> List[Request]:
+    """Shared-prefix chat traffic: every request carries REAL token ids.
+
+    ``conversations`` concurrent conversations share one ``system_tokens``
+    system-prompt head; each conversation then grows its own history —
+    turn ``t``'s prompt is the system head, the ``t`` previous (user turn
+    + assistant reply) exchanges, and a fresh ``turn_tokens`` user turn.
+    Arrivals are drawn per the arrival process and conversations are
+    picked Zipf-``zipf_alpha`` (hot conversations turn over fast), so
+    consecutive requests of one conversation share a long, growing
+    prefix and ALL requests share the system head — the regime where a
+    page-aligned prefix index converts prompt tokens into cache hits.
+
+    Token ids are deterministic in ``seed``: the cache tier (and its
+    benchmark) sees identical hash chains run-to-run."""
+    rng = np.random.default_rng(seed)
+    arrivals = make_arrivals(arrival, rng, n, rate)
+    system = rng.integers(0, vocab, size=system_tokens, dtype=np.int32)
+    # per-conversation token streams, grown lazily as turns accumulate
+    streams: List[np.ndarray] = [
+        np.empty(0, np.int32) for _ in range(max(1, conversations))]
+    turns = [0] * len(streams)
+    # Zipf over conversation ranks (same zeta idiom as TrafficSpec)
+    ranks = np.arange(1, len(streams) + 1, dtype=np.float64)
+    weights = ranks ** -zipf_alpha
+    weights /= weights.sum()
+    reqs: List[Request] = []
+    per_turn = turn_tokens + output_tokens
+    for t in arrivals:
+        c = int(rng.choice(len(streams), p=weights))
+        need = turns[c] * per_turn + turn_tokens
+        if streams[c].shape[0] < need:
+            grow = rng.integers(0, vocab, size=need - streams[c].shape[0],
+                                dtype=np.int32)
+            streams[c] = np.concatenate([streams[c], grow])
+        prompt = np.concatenate([system, streams[c][:need]])
+        turns[c] += 1
+        reqs.append(Request(prompt_len=int(prompt.shape[0]),
+                            max_new_tokens=int(output_tokens),
+                            arrival_time=float(t),
+                            tenant=f"conv{c}",
+                            prompt_tokens=prompt))
+    return reqs
+
+
 # --- tiered multi-tenant traffic -------------------------------------------
 
 def tiered(n: int = 400, rate: float = 40.0, seed: int = 0,

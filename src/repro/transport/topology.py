@@ -114,26 +114,26 @@ class Topology:
                    n_spines=max(1, n_spines))
 
 
-_TOPOLOGIES = {
-    "flat": Topology.flat,
-    "shared_spine": Topology.shared_spine,
-}
+from repro.registry import Registry  # noqa: E402  (registry after classes)
+
+_REG = Registry("topology")
+_REG.register("flat", Topology.flat, knobs=("bw",))
+_REG.register("shared_spine", Topology.shared_spine,
+              knobs=("ingress_bw", "egress_bw", "spine_bw", "n_spines"))
+
+
+def register_topology(name: str, factory, knobs: tuple = ()) -> None:
+    _REG.register(name, factory, knobs=knobs)
 
 
 def make_topology(name: str, **knobs) -> Topology:
-    """Registry-style constructor (mirrors ``repro.sched.make_policy``) so
-    benchmarks and example CLIs sweep topologies by name."""
-    try:
-        factory = _TOPOLOGIES[name]
-    except KeyError:
-        raise KeyError(f"unknown topology {name!r}; "
-                       f"known: {sorted(_TOPOLOGIES)}") from None
-    try:
-        return factory(**knobs)
-    except TypeError as e:
-        raise TypeError(f"topology {name!r} rejected knobs {knobs}: {e}") \
-            from None
+    """Registry-style constructor on the shared :mod:`repro.registry`
+    helper (mirrors ``make_policy`` / ``make_traffic`` / ``make_cache``)
+    so benchmarks and example CLIs sweep topologies by name.  Unknown
+    names raise the unified ``UnknownNameError`` (a ``ValueError``);
+    unknown knobs raise ``TypeError`` naming the accepted set."""
+    return _REG.make(name, **knobs)
 
 
 def list_topologies():
-    return sorted(_TOPOLOGIES)
+    return _REG.names()

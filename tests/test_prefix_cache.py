@@ -1,0 +1,472 @@
+"""Prefix-cache tier (v6): refcounted page sharing, the bucketed block
+index, eviction policies, the unified registry error contract, the v5->v6
+route_prefill migration, and cross-instance reuse end-to-end in BOTH
+FLEX_DRIVE modes (conservation through evictions, mid-fetch faults, and
+role switches included)."""
+import numpy as np
+import pytest
+from conftest import drive_modes
+
+from repro.cache import (NullPrefixCache, PrefixCache, list_caches,
+                         make_cache, request_block_hashes)
+from repro.cache.index import block_hashes
+from repro.registry import UnknownNameError
+from repro.serving.kvcache import OutOfPages, PagedAllocator
+from repro.serving.request import Request
+
+
+# =====================================================================
+# PagedAllocator: refcounted sharing
+# =====================================================================
+
+def test_allocator_shared_prefix_counts_once():
+    a = PagedAllocator(num_pages=8, page_size=64)
+    p1 = a.allocate(1, 256)                      # 4 pages
+    p2 = a.allocate(2, 256, shared=p1[:2])       # 2 shared + 2 fresh
+    assert p2[:2] == p1[:2]
+    assert a.used_pages == 6                     # shared pages count ONCE
+    assert a.shared_pages() == 2
+    assert a.ref_count(p1[0]) == 2
+    a.check_invariants()
+
+
+def test_allocator_free_keeps_live_refs():
+    a = PagedAllocator(num_pages=8, page_size=64)
+    p1 = a.allocate(1, 128)
+    a.allocate(2, 128, shared=p1)
+    # freeing table 1 releases NOTHING: table 2 still references both pages
+    assert a.free(1) == 0
+    assert a.used_pages == 2
+    a.check_invariants()
+    assert a.free(2) == 2                        # last refs go -> released
+    assert a.used_pages == 0
+    a.check_invariants()
+
+
+def test_allocator_pin_blocks_release():
+    a = PagedAllocator(num_pages=4, page_size=64)
+    pages = a.allocate(1, 128)
+    a.pin(pages[0])
+    assert a.free(1) == 1                        # only the unpinned page
+    assert a.used_pages == 1
+    a.check_invariants()
+    assert a.unpin(pages[0]) is True             # last reference released
+    assert a.used_pages == 0
+    with pytest.raises(KeyError):
+        a.unpin(pages[0])
+    with pytest.raises(KeyError):
+        a.pin(pages[0])                          # cannot pin a free page
+
+
+def test_allocator_shared_must_be_owned():
+    a = PagedAllocator(num_pages=4, page_size=64)
+    with pytest.raises(KeyError, match="not owned"):
+        a.allocate(1, 64, shared=[3])
+    a.allocate(1, 192)
+    with pytest.raises(OutOfPages):
+        a.allocate(2, 192)                       # only 1 free page left
+    a.check_invariants()
+
+
+# =====================================================================
+# Block index: chained page-aligned hashing
+# =====================================================================
+
+def test_block_hashes_chained_and_page_aligned():
+    t = np.arange(200, dtype=np.int64)
+    h = block_hashes(t, 64)
+    assert len(h) == 3                           # partial tail not indexed
+    # chain property: equal prefixes share keys, divergence breaks ALL
+    # later keys even when a later block's bytes match
+    t2 = t.copy()
+    t2[0] += 1
+    h2 = block_hashes(t2, 64)
+    assert h2[0] != h[0] and h2[1] != h[1] and h2[2] != h[2]
+    assert block_hashes(t[:128], 64) == h[:2]
+
+
+def test_request_block_hashes_memoized_and_capped():
+    toks = np.arange(300, dtype=np.int32)
+    r = Request(prompt_len=200, max_new_tokens=1, prompt_tokens=toks)
+    h = request_block_hashes(r, 64)
+    assert len(h) == 3                           # capped at prompt_len
+    assert request_block_hashes(r, 64) is h      # memo hit
+    assert request_block_hashes(
+        Request(prompt_len=100, max_new_tokens=1), 64) == ()
+
+
+# =====================================================================
+# PrefixCache: match / acquire / insert / evict
+# =====================================================================
+
+def _req(tokens, prompt_len=None):
+    arr = np.asarray(tokens, dtype=np.int32)
+    return Request(prompt_len=prompt_len or len(arr), max_new_tokens=1,
+                   prompt_tokens=arr)
+
+
+def test_cache_match_and_usable_cap():
+    c = PrefixCache(capacity_tokens=1024, page_tokens=64)
+    r1 = _req(np.arange(256))
+    assert c.acquire(r1, now=0.0) == 0           # cold
+    c.release(r1)
+    c.insert(r1, now=0.0)
+    assert c.tokens() == 256
+    # identical prompt: full match, capped at prompt_len - 1
+    r2 = _req(np.arange(256))
+    assert c.acquire(r2, now=1.0) == 255
+    c.release(r2)
+    # longer prompt sharing the head: matches the indexed 4 pages
+    r3 = _req(np.arange(512))
+    assert c.acquire(r3, now=2.0) == 256
+    c.release(r3)
+    c.check_invariants()
+    s = c.stats()
+    assert s["requests"] == 3 and s["request_hits"] == 2
+    assert 0.0 <= s["hit_rate"] <= 1.0
+
+
+def test_cache_pinned_blocks_survive_eviction():
+    c = PrefixCache(capacity_tokens=256, page_tokens=64)    # 4 pages
+    r1 = _req(np.arange(256))
+    c.insert(r1, now=0.0)
+    r2 = _req(np.arange(256))
+    assert c.acquire(r2, now=1.0) == 255         # pins all 4 blocks
+    # a different chain wants room: nothing is evictable while pinned
+    assert c.insert(_req(np.arange(1000, 1256)), now=2.0) == 0
+    assert c.stats()["insert_skips"] == 1
+    c.release(r2)
+    # unpinned now: leaf-first eviction makes room
+    assert c.insert(_req(np.arange(1000, 1256)), now=3.0) == 4
+    assert c.stats()["evictions"] == 4
+    c.check_invariants()
+
+
+def test_cache_leaf_only_eviction_order():
+    c = PrefixCache(capacity_tokens=256, page_tokens=64)
+    c.insert(_req(np.arange(256)), now=0.0)      # chain of 4
+    # evicting one page must take the LEAF (last block), never the root
+    assert c.evict_tokens(1, now=1.0) == 64
+    r = _req(np.arange(256))
+    assert c.acquire(r, now=2.0) == 192          # head 3 blocks survive
+    c.release(r)
+    c.check_invariants()
+
+
+def test_cache_lru_vs_lfu_victim():
+    for policy, expect_survivor in (("lru", "hot_recent"),
+                                    ("lfu", "hot_frequent")):
+        c = make_cache(policy, capacity_tokens=128, page_tokens=64)
+        a, b = _req([1] * 64), _req([2] * 64)
+        c.insert(a, now=0.0)
+        c.insert(b, now=1.0)
+        if policy == "lfu":
+            for t in (2.0, 3.0):                 # a is frequent, b recent
+                c.acquire(a, now=t)
+                c.release(a)
+            c.acquire(b, now=4.0)
+            c.release(b)
+            survivor, victim = a, b              # fewer hits evicts first
+        else:
+            c.acquire(a, now=5.0)                # a is most recent
+            c.release(a)
+            survivor, victim = a, b
+        c.evict_tokens(1, now=6.0)
+        assert c.match_tokens(survivor) == 64, (policy, expect_survivor)
+        assert c.match_tokens(victim) == 0
+
+
+def test_cache_ttl_expiry_and_sweep():
+    c = make_cache("ttl", ttl_s=5.0, capacity_tokens=1024, page_tokens=64)
+    c.insert(_req(np.arange(128)), now=0.0)
+    assert c.sweep(now=4.0) == 0
+    assert c.sweep(now=10.0) == 2                # both blocks expired
+    assert c.stats()["expired"] == 2
+    assert c.tokens() == 0
+
+
+def test_cache_insert_chain_orphan_skip():
+    c = PrefixCache(capacity_tokens=1024, page_tokens=64)
+    h = block_hashes(np.arange(256, dtype=np.int64), 64)
+    # a fetch landed blocks [2:4] but the local head [0:2] was evicted
+    # mid-flight: the tail is orphaned, nothing is inserted
+    assert c.insert_chain(h, now=0.0, have_from=2) == 0
+    assert c.stats()["orphan_skips"] == 1
+    assert c.tokens() == 0
+    # with the head present the same call grafts the tail
+    c.insert_chain(h[:2], now=1.0)
+    assert c.insert_chain(h, now=2.0, have_from=2) == 2
+    assert c.match_chain(h) == 256
+    c.check_invariants()
+
+
+def test_cache_pin_chain_all_or_nothing():
+    c = PrefixCache(capacity_tokens=1024, page_tokens=64)
+    h = block_hashes(np.arange(192, dtype=np.int64), 64)
+    c.insert_chain(h, now=0.0)
+    assert c.pin_chain(h) is True
+    assert c.evict_tokens(999, now=1.0) == 0     # everything pinned
+    c.unpin_chain(h)
+    missing = h + (12345,)
+    assert c.pin_chain(missing) is False         # no partial pins taken
+    assert c.evict_tokens(999, now=2.0) == 192   # so nothing stayed pinned
+    c.check_invariants()
+
+
+def test_cache_clear_keeps_counters_and_tolerates_stale_handles():
+    c = PrefixCache(capacity_tokens=1024, page_tokens=64)
+    r = _req(np.arange(128))
+    c.insert(r, now=0.0)
+    c.acquire(r, now=1.0)
+    before = c.stats()["inserts"]
+    c.clear()                                    # instance fault
+    assert c.tokens() == 0
+    assert c.stats()["inserts"] == before        # cumulative telemetry
+    c.release(r)                                 # stale pin handle: no-op
+    c.unpin_chain(block_hashes(np.arange(128, dtype=np.int64), 64))
+    c.check_invariants()
+
+
+def test_cache_room_fn_gates_inserts():
+    room = {"free": 0}
+    c = PrefixCache(capacity_tokens=1024, page_tokens=64,
+                    room_fn=lambda: room["free"])
+    assert c.insert(_req(np.arange(128)), now=0.0) == 0   # no KV headroom
+    room["free"] = 1 << 20
+    assert c.insert(_req(np.arange(128)), now=1.0) == 2
+
+
+def test_cache_on_delta_ledger_hook():
+    ledger = {"kv": 0}
+
+    def delta(d):
+        ledger["kv"] += d
+
+    c = PrefixCache(capacity_tokens=256, page_tokens=64, on_delta=delta)
+    c.insert(_req(np.arange(256)), now=0.0)
+    assert ledger["kv"] == 256
+    c.evict_tokens(256, now=1.0)
+    assert ledger["kv"] == 0
+
+
+# =====================================================================
+# Unified registries (satellite a): one error contract across all four
+# =====================================================================
+
+def test_make_cache_registry():
+    assert set(list_caches()) >= {"none", "lru", "lfu", "ttl"}
+    assert isinstance(make_cache("none"), NullPrefixCache)
+    assert make_cache("lfu", capacity_tokens=128).name == "lfu"
+    assert make_cache("ttl", ttl_s=2.0).policy.ttl_s == 2.0
+
+
+@pytest.mark.parametrize("kind,factory", [
+    ("policy", lambda n, **k: __import__(
+        "repro.sched", fromlist=["make_policy"]).make_policy(n, **k)),
+    ("topology", lambda n, **k: __import__(
+        "repro.transport", fromlist=["make_topology"]).make_topology(
+            n, **k)),
+    ("traffic", lambda n, **k: __import__(
+        "repro.traffic", fromlist=["make_traffic"]).make_traffic(n, **k)),
+    ("cache", lambda n, **k: make_cache(n, **k)),
+])
+def test_registries_unified_error_contract(kind, factory):
+    """All four ``make_*`` registries raise the SAME unknown-name error
+    shape — an ``UnknownNameError`` that is a ``ValueError`` (and, for
+    the migration window, a ``KeyError``) whose message names the kind
+    and lists what IS registered — and ``TypeError`` on unknown knobs
+    naming the accepted set."""
+    with pytest.raises(ValueError, match=f"unknown {kind}") as ei:
+        factory("definitely_not_registered")
+    assert isinstance(ei.value, UnknownNameError)
+    assert isinstance(ei.value, KeyError)        # migration window
+    assert "registered:" in str(ei.value)
+    known = {"policy": "fifo", "topology": "flat",
+             "traffic": "open_loop", "cache": "lru"}[kind]
+    with pytest.raises(TypeError, match="accepts knobs"):
+        factory(known, bogus_knob_xyz=1)
+
+
+# =====================================================================
+# route_prefill v5 -> v6 (tentpole API redesign)
+# =====================================================================
+
+def test_legacy_two_arg_route_prefill_adapter():
+    from repro.sched import RouteContext, dispatch_route_prefill
+
+    class LegacyPolicy:
+        def route_prefill(self, req, pool):       # v5 signature
+            return pool[0]
+
+    class ModernPolicy:
+        def route_prefill(self, req, pool, ctx=None):
+            return (pool[0], ctx)
+
+    pool = ["i0"]
+    ctx = RouteContext(now=1.0)
+    legacy = LegacyPolicy()
+    with pytest.warns(DeprecationWarning, match="two-argument signature"):
+        assert dispatch_route_prefill(legacy, None, pool, ctx) == "i0"
+    # verdict is cached: no second warning
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        assert dispatch_route_prefill(legacy, None, pool, ctx) == "i0"
+        got = dispatch_route_prefill(ModernPolicy(), None, pool, ctx)
+    assert got == ("i0", ctx)
+
+
+def test_prefix_affinity_policy_unit():
+    from repro.sched import PrefixAffinityPolicy, RouteContext, make_policy
+
+    class FakeInst:
+        def __init__(self, name, load):
+            self.name, self._load = name, load
+            self.failed, self.ewma_step = False, 0.0
+
+        def load(self):
+            return self._load
+
+    pool = [FakeInst("A", 5.0), FakeInst("B", 0.0)]
+    p = make_policy("prefix_affinity")
+    assert isinstance(p, PrefixAffinityPolicy)
+    # match >= one page on the BUSIER instance: affinity wins over load
+    ctx = RouteContext(match_tokens={"A": 128, "B": 0}, page_tokens=64)
+    assert p.route_prefill(None, pool, ctx).name == "A"
+    # sub-page match: degrade to load-based routing
+    ctx2 = RouteContext(match_tokens={"A": 32, "B": 0}, page_tokens=64)
+    assert p.route_prefill(None, pool, ctx2).name == "B"
+    # no context at all (legacy caller): still routes
+    assert p.route_prefill(None, pool).name == "B"
+    st = p.debug_state()
+    assert st["affinity_routes"] == 1 and st["fallback_routes"] == 2
+
+
+# =====================================================================
+# End-to-end: reuse in the cluster, both drives
+# =====================================================================
+
+def _cluster(drive, cache="lru", policy="prefix_affinity", instances=2,
+             **sim_knobs):
+    from repro.configs import get_config
+    from repro.serving import Cluster, SimConfig, deployment_dynamic
+    cfg = get_config("mixtral-8x7b")
+    sc = SimConfig(prefix_cache=cache, prefix_page_tokens=64, **sim_knobs)
+    deploy = deployment_dynamic(total=48 * instances, instances=instances)
+    deploy.cluster_policy = policy
+    return Cluster(cfg, deploy, sim_cfg=sc, drive=drive, time_scale=0.01)
+
+
+@pytest.mark.parametrize("drive", drive_modes())
+def test_cluster_prefix_reuse_end_to_end(drive):
+    """Shared-prefix traffic through a cached cluster: hits happen, FLOPs
+    are saved, affinity routes conversations to their cache, and KV
+    conservation holds at sampled mid-run instants."""
+    from repro.traffic import make_traffic
+    cl = _cluster(drive, instances=3)
+    wl = make_traffic("multi_turn", n=60, rate=60.0, conversations=4,
+                      seed=7)
+    for t in (0.1, 0.4, 0.9, 1.6):
+        cl.loop.at(t, cl.check_kv_conservation)
+    out = cl.run(wl)
+    cl.check_kv_conservation()
+    for inst in cl.instances:
+        inst.cache.check_invariants()
+    assert out["failed"] == 0 and out["completed"] == 60
+    pc = out["prefix_cache"]
+    assert pc["hit_rate"] > 0.2
+    assert pc["flops_saved"] > 0
+    assert pc["matched_tokens"] <= pc["prompt_tokens"]
+    assert out["policy"]["cluster"]["affinity_routes"] > 0
+
+
+@pytest.mark.parametrize("drive", drive_modes())
+def test_cluster_remote_prefix_fetch(drive):
+    """A request routed to an instance whose peer holds a longer match
+    fetches the blocks over the KV path instead of recomputing: fetch
+    bytes flow, the destination serves the match, and conservation holds
+    mid-fetch."""
+    X = np.arange(4096, dtype=np.int32)
+    Y = np.arange(10_000, 18_192, dtype=np.int32)
+    reqs = [
+        Request(prompt_len=4096, max_new_tokens=4, arrival_time=0.0,
+                prompt_tokens=X),
+        # filler keeps C0's queue visibly busy at t=1.0 so the reused
+        # prompt routes to C1 (its only match source is then remote)
+        Request(prompt_len=8192, max_new_tokens=4, arrival_time=1.0,
+                prompt_tokens=Y),
+        Request(prompt_len=4096, max_new_tokens=4, arrival_time=1.001,
+                prompt_tokens=X),
+    ]
+    cl = _cluster(drive, policy="least_loaded", chunk_prefill_tokens=1024)
+    for t in (1.002, 1.004, 1.01, 1.05):
+        cl.loop.at(t, cl.check_kv_conservation)
+    out = cl.run(reqs)
+    cl.check_kv_conservation()
+    assert out["failed"] == 0
+    pc = out["prefix_cache"]
+    assert pc["remote_fetches"] >= 1
+    assert pc["remote_fetch_tokens"] >= 4096
+    assert pc["remote_fetch_bytes"] > 0
+    assert reqs[2].cached_tokens >= 4095
+
+
+@pytest.mark.parametrize("drive", drive_modes())
+def test_cluster_eviction_under_pressure_tiny_cache(drive):
+    """A cache sized to ONE page churns constantly (insert -> evict) under
+    multi-conversation traffic; accounting and conservation survive the
+    churn in both drives."""
+    from repro.traffic import make_traffic
+    cl = _cluster(drive, instances=2, prefix_cache_frac=1e-6)
+    for inst in cl.instances:
+        assert inst.cache.capacity_pages == 1
+    wl = make_traffic("multi_turn", n=30, rate=60.0, conversations=3,
+                      seed=11)
+    for t in (0.1, 0.3, 0.7):
+        cl.loop.at(t, cl.check_kv_conservation)
+    out = cl.run(wl)
+    cl.check_kv_conservation()
+    for inst in cl.instances:
+        inst.cache.check_invariants()
+        assert inst.cache.tokens() <= 64
+    assert out["failed"] == 0 and out["completed"] == 30
+
+
+@pytest.mark.parametrize("drive", drive_modes())
+def test_cluster_instance_fault_clears_cache(drive):
+    """Killing an instance mid-run wipes its cache with its ledger; the
+    survivors keep serving (requests re-route and recompute) and
+    conservation holds through the fault."""
+    from repro.traffic import make_traffic
+    cl = _cluster(drive, instances=3)
+    wl = make_traffic("multi_turn", n=40, rate=80.0, conversations=4,
+                      seed=5)
+    cl.loop.at(0.25, lambda: cl.fail_instance("C1"))
+    cl.loop.at(0.26, cl.check_kv_conservation)
+    cl.loop.at(0.6, cl.check_kv_conservation)
+    out = cl.run(wl)
+    cl.check_kv_conservation()
+    dead = next(i for i in cl.instances if i.name == "C1")
+    assert dead.cache.tokens() == 0
+    assert out["completed"] + out["failed"] == 40
+    assert out["completed"] >= 35       # survivors absorbed the work
+
+
+def test_cache_off_is_bit_compatible_with_v5():
+    """prefix_cache='none' must not change a single event: same summary
+    as a run with the knob entirely absent (the v5 contract)."""
+    from repro.configs import get_config
+    from repro.serving import Cluster, SimConfig, deployment_dynamic
+    from repro.traffic import make_traffic
+    cfg = get_config("mixtral-8x7b")
+    wl1 = make_traffic("multi_turn", n=20, rate=40.0, seed=3)
+    wl2 = make_traffic("multi_turn", n=20, rate=40.0, seed=3)
+    outs = []
+    for wl in (wl1, wl2):
+        cl = Cluster(cfg, deployment_dynamic(total=96, instances=2),
+                     sim_cfg=SimConfig(prefix_cache="none"))
+        o = cl.run(wl)
+        o.pop("policy")
+        outs.append(o)
+    assert "prefix_cache" not in outs[0]
+    assert outs[0] == outs[1]

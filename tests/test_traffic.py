@@ -198,14 +198,32 @@ def test_registry_make_traffic():
         make_traffic("tiered", bogus_knob=3)
 
 
-def test_workload_shim_reexports_traffic():
-    """One-release shim: repro.serving.workload must re-export the SAME
-    callables repro.traffic.workloads defines."""
-    import repro.serving.workload as shim
+def test_workload_shim_removed():
+    """The one-release ``repro.serving.workload`` shim is GONE (v6): the
+    module neither imports nor exists on disk, and no src/ module still
+    references the deleted path (grep-test, so a reintroduced import
+    fails CI)."""
+    import pathlib
+
+    with pytest.raises(ImportError):
+        import repro.serving.workload  # noqa: F401
+    import repro.serving as serving
+    root = pathlib.Path(serving.__file__).parents[1]   # src/repro
+    assert not (root / "serving" / "workload.py").exists()
+    offenders = []
+    for py in root.rglob("*.py"):
+        for line in py.read_text().splitlines():
+            ls = line.strip()
+            if ls.startswith(("import ", "from ")) \
+                    and "serving.workload" in ls:
+                offenders.append(f"{py}: {ls}")
+    assert not offenders, f"modules importing the deleted shim: {offenders}"
+    # the package-level re-exports stay public API and must be the SAME
+    # objects repro.traffic.workloads defines
     import repro.traffic.workloads as traffic
     for name in ("make_workload", "bursty_phase_shift", "deepseek_1k1k",
                  "deepseek_1k4k", "qwen_grid"):
-        assert getattr(shim, name) is getattr(traffic, name), name
+        assert getattr(serving, name) is getattr(traffic, name), name
 
 
 def test_make_workload_v4_rng_byte_compat():
