@@ -1,0 +1,29 @@
+"""Project-specific correctness tooling (v7).
+
+Two halves, one philosophy — FlexNPU interposes once at the AscendCL
+boundary and checks every guest op there; this package interposes once at
+OUR boundaries (the lock discipline, the layer DAG, the registry
+contracts, the request ledger, the daemon dispatch path) and checks every
+line / every op there:
+
+* **flexlint** (static): ``python -m repro.analysis.lint src/repro`` —
+  an AST lint driver with four project-specific passes
+  (``lock-discipline``, ``layering``, ``registry-contract``,
+  ``terminal-state``).  See :mod:`repro.analysis.lint`.
+* **HazardSanitizer** (dynamic, opt-in via ``FLEX_SANITIZE=1``): a
+  vector-clock happens-before checker threaded through ``FlexDaemon``
+  dispatch.  See :mod:`repro.analysis.hazards`.
+"""
+__all__ = ["Finding", "HazardSanitizer", "lint_paths", "sanitize_enabled"]
+
+
+def __getattr__(name):
+    # lazy (PEP 562): ``python -m repro.analysis.lint`` must not import
+    # the lint module a first time as a side effect of package init
+    if name in ("HazardSanitizer", "sanitize_enabled"):
+        from repro.analysis import hazards
+        return getattr(hazards, name)
+    if name in ("Finding", "lint_paths"):
+        from repro.analysis import lint
+        return getattr(lint, name)
+    raise AttributeError(name)

@@ -1,0 +1,137 @@
+"""flexlint pass: layering — the import DAG and expired-name bans.
+
+**Rank rule.**  The package layering, lowest (most fundamental) first::
+
+    core (0) -> transport (1) -> serving (2) -> sched / cache / traffic (3)
+
+A ranked module may import same-or-lower ranks only; unranked modules
+(``repro.registry``, ``repro.configs``, ``repro.models``,
+``repro.analysis``, top-level ``repro``) are importable from anywhere
+and may import anything.  The handful of real upward edges the codebase
+keeps on purpose (documented cycle-breaks: the daemon consuming the
+policy plane through submodule imports, serving constructing its
+plug-ins) are allowlisted in-source with reasons — new upward edges must
+argue their case the same way.
+
+**Ban rules.**  Shim modules removed in earlier releases
+(``repro.core.scheduler`` v4, ``repro.serving.workload`` v6), the
+one-release re-export names whose migration window has closed
+(``ThreadedLinkTimer`` and the transport types out of the serving
+modules), and the v4 compat attribute ``.engine_slots`` (v7: read
+``daemon.queue_slots``; only the ``PolicyContext`` field keeps the name,
+so ``ctx``/``context``/``self`` receivers stay legal).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.lint import FileContext, Finding
+
+RULE = "layering"
+
+RANKS = {"core": 0, "transport": 1, "serving": 2,
+         "sched": 3, "cache": 3, "traffic": 3}
+
+BANNED_MODULES = {
+    "repro.core.scheduler":
+        "removed in v4 — import repro.sched instead",
+    "repro.serving.workload":
+        "removed in v6 — import repro.traffic instead",
+}
+
+# expired one-release re-exports: (module, name) -> where it lives now
+BANNED_FROM_IMPORTS = {
+    ("repro.serving.realtime", "ThreadedLinkTimer"):
+        "repro.transport.drivers",
+    ("repro.serving.simulator", "KVStreamer"): "repro.transport",
+    ("repro.serving.simulator", "LinkModel"): "repro.transport",
+    ("repro.serving.simulator", "Topology"): "repro.transport",
+    ("repro.serving.simulator", "LinkDriver"): "repro.transport.drivers",
+}
+
+BANNED_ATTRS = {
+    "engine_slots": "removed from FlexDaemon in v7 — use queue_slots "
+                    "(PolicyContext.engine_slots is the surviving name)",
+}
+# receivers that legally keep a banned attribute name (the PolicyContext
+# field and its in-class self accesses)
+ATTR_EXEMPT_RECEIVERS = {"ctx", "context", "self"}
+
+
+def _rank_of(module: str) -> Optional[int]:
+    parts = module.split(".")
+    if len(parts) < 2 or parts[0] != "repro":
+        return None
+    return RANKS.get(parts[1])
+
+
+def _resolve_relative(ctx: FileContext, node: ast.ImportFrom) -> Optional[str]:
+    if node.level == 0:
+        return node.module
+    anchor = ctx.module.split(".")
+    if not ctx.is_package:
+        anchor = anchor[:-1]
+    anchor = anchor[:len(anchor) - (node.level - 1)]
+    if not anchor:
+        return node.module
+    return ".".join(anchor + ([node.module] if node.module else []))
+
+
+def run(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    own_rank = _rank_of(ctx.module)
+
+    def check_target(target: Optional[str], line: int,
+                     names: Optional[List[ast.alias]] = None) -> None:
+        if not target:
+            return
+        for banned, hint in BANNED_MODULES.items():
+            if target == banned or target.startswith(banned + "."):
+                findings.append(Finding(
+                    ctx.path, line, RULE,
+                    f"import of {banned}: {hint}"))
+                return
+        if names is not None:
+            for alias in names:
+                hint = BANNED_FROM_IMPORTS.get((target, alias.name))
+                if hint is not None:
+                    findings.append(Finding(
+                        ctx.path, line, RULE,
+                        f"{alias.name} is no longer re-exported by "
+                        f"{target} (shim expired); import it from {hint}"))
+        tgt_rank = _rank_of(target)
+        if own_rank is not None and tgt_rank is not None \
+                and tgt_rank > own_rank:
+            findings.append(Finding(
+                ctx.path, line, RULE,
+                f"{ctx.module} (layer rank {own_rank}) imports {target} "
+                f"(rank {tgt_rank}); the DAG is core -> transport -> "
+                f"serving -> sched/cache/traffic — invert the dependency "
+                f"or allowlist the documented cycle-break"))
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                check_target(alias.name, node.lineno)
+        elif isinstance(node, ast.ImportFrom):
+            target = _resolve_relative(ctx, node)
+            check_target(target, node.lineno, node.names)
+            # "from repro import sched"-style submodule pulls: the ranked
+            # (or banned) name is the ALIAS, not the from-target
+            if target and ctx.module != target:
+                target_ranked = _rank_of(target) is not None
+                for alias in node.names:
+                    sub = f"{target}.{alias.name}"
+                    if sub in BANNED_MODULES or \
+                            (not target_ranked and _rank_of(sub) is not None):
+                        check_target(sub, node.lineno)
+        elif isinstance(node, ast.Attribute) and node.attr in BANNED_ATTRS:
+            recv = node.value
+            if isinstance(recv, ast.Name) and \
+                    recv.id in ATTR_EXEMPT_RECEIVERS:
+                continue
+            findings.append(Finding(
+                ctx.path, node.lineno, RULE,
+                f".{node.attr} {BANNED_ATTRS[node.attr]}"))
+    return findings

@@ -1,0 +1,213 @@
+"""flexlint: the project's AST lint driver (v7).
+
+Run it over the library package (CI does exactly this)::
+
+    PYTHONPATH=src python -m repro.analysis.lint src/repro
+
+Four project-specific passes ship with it, each its own module so new
+ones plug in by adding an entry to :data:`PASSES`:
+
+* ``lock-discipline`` (+ its ``lock-order`` sub-rule) — attributes
+  annotated ``# guarded-by: <lock>`` may only be touched under
+  ``with self.<lock>``, and syntactically nested lock acquisitions must
+  respect the declared partial order (:mod:`.lock_discipline`);
+* ``layering`` — the import DAG ``core -> transport -> serving ->
+  sched/cache/traffic`` plus bans on removed shims and expired
+  compat symbols (:mod:`.layering`);
+* ``registry-contract`` — every ``Registry`` registration's declared
+  knobs must match the factory's signature (:mod:`.registry_contract`);
+* ``terminal-state`` — terminal ``RequestState`` writes must route
+  through the designated ledger-release helpers and set ``finish_time``
+  (:mod:`.terminal_state`).
+
+**Allowlisting.**  An intentional violation is suppressed in-source, on
+the offending line or the line directly above, with a MANDATORY reason::
+
+    self.hint = n  # flexlint: ignore[lock-discipline] -- advisory, GIL-atomic
+
+An ignore without a ``-- reason`` is itself a finding (``bad-ignore``),
+so the allowlist can never silently grow.  The exit code is the count
+contract CI relies on: 0 when clean, 1 when any finding survives.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import io
+import os
+import re
+import sys
+import tokenize
+from typing import Callable, Dict, List, NamedTuple, Optional, Set
+
+
+class Finding(NamedTuple):
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+# "# flexlint: ignore[rule-a,rule-b] -- why this is intentional"
+_IGNORE_RE = re.compile(
+    r"flexlint:\s*ignore\[([A-Za-z0-9_,\- ]+)\]\s*(?:--\s*(\S.*))?")
+
+
+def _module_name(path: str) -> str:
+    """Dotted module name, anchored at the first ``repro`` path segment.
+
+    Fixture trees replicate the anchor (``tmp/repro/serving/x.py`` lints
+    as ``repro.serving.x``); paths without one lint as their bare stem,
+    which disables the layering rank rules but keeps every other pass."""
+    parts = os.path.normpath(path).split(os.sep)
+    if "repro" in parts:
+        parts = parts[parts.index("repro"):]
+    else:
+        parts = parts[-1:]
+    if parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][:-3]
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+class FileContext:
+    """Parsed view of one source file, handed to every pass."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.module = _module_name(path)
+        self.is_package = os.path.basename(path) == "__init__.py"
+        self.comments: Dict[int, str] = {}
+        self.standalone_comments: set = set()   # whole-line comments
+        try:
+            for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+                if tok.type == tokenize.COMMENT:
+                    self.comments[tok.start[0]] = tok.string
+                    if tok.line.lstrip().startswith("#"):
+                        self.standalone_comments.add(tok.start[0])
+        except tokenize.TokenError:
+            pass
+        self.ignores: Dict[int, Set[str]] = {}
+        self.bad_ignore_lines: List[int] = []
+        for line, text in self.comments.items():
+            m = _IGNORE_RE.search(text)
+            if m is None:
+                continue
+            if not m.group(2):
+                self.bad_ignore_lines.append(line)
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            self.ignores.setdefault(line, set()).update(rules)
+
+    def comment_on(self, first: int, last: Optional[int] = None) -> str:
+        """Concatenated comment text on lines ``first-1 .. last``.  The
+        lead-in line counts only when it is a STANDALONE comment — a
+        trailing comment there belongs to the previous statement."""
+        last = first if last is None else last
+        out = [self.comments[i] for i in range(first, last + 1)
+               if i in self.comments]
+        if first - 1 in self.standalone_comments:
+            out.insert(0, self.comments[first - 1])
+        return " ".join(out)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        if rule in self.ignores.get(line, ()):
+            return True
+        return line - 1 in self.standalone_comments and \
+            rule in self.ignores.get(line - 1, ())
+
+
+def _passes() -> Dict[str, Callable[[FileContext], List[Finding]]]:
+    # imported lazily so ``python -m repro.analysis.lint --help`` works
+    # even if a pass module is mid-edit
+    from repro.analysis import (layering, lock_discipline, registry_contract,
+                                terminal_state)
+    return {
+        "lock-discipline": lock_discipline.run,
+        "layering": layering.run,
+        "registry-contract": registry_contract.run,
+        "terminal-state": terminal_state.run,
+    }
+
+
+PASS_NAMES = ("lock-discipline", "layering", "registry-contract",
+              "terminal-state")
+
+
+def iter_py_files(paths: List[str]) -> List[str]:
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, names in sorted(os.walk(p)):
+                files.extend(os.path.join(root, n) for n in sorted(names)
+                             if n.endswith(".py"))
+        else:
+            files.append(p)
+    return files
+
+
+def lint_file(path: str, select: Optional[Set[str]] = None) -> List[Finding]:
+    with open(path, "r", encoding="utf-8") as fh:
+        source = fh.read()
+    try:
+        ctx = FileContext(path, source)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 1, "parse", f"syntax error: {e.msg}")]
+    passes = _passes()
+    if select:
+        passes = {k: v for k, v in passes.items() if k in select}
+    raw: List[Finding] = []
+    for run in passes.values():
+        raw.extend(run(ctx))
+    out = [f for f in raw if not ctx.suppressed(f.rule, f.line)]
+    # a reasonless ignore is a finding in its own right and cannot itself
+    # be ignored — otherwise the allowlist grows without audit trail
+    out.extend(Finding(path, ln, "bad-ignore",
+                       "flexlint ignore without a '-- reason'")
+               for ln in sorted(ctx.bad_ignore_lines))
+    return out
+
+
+def lint_paths(paths: List[str],
+               select: Optional[Set[str]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in iter_py_files(paths):
+        findings.extend(lint_file(path, select))
+    return sorted(findings)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="flexlint",
+        description="project-specific static analysis for the FlexNPU "
+                    "virtualization runtime")
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated pass names to run "
+                         f"(default: all of {', '.join(PASS_NAMES)})")
+    args = ap.parse_args(argv)
+    select = None
+    if args.select:
+        select = {s.strip() for s in args.select.split(",") if s.strip()}
+        unknown = select - set(PASS_NAMES)
+        if unknown:
+            ap.error(f"unknown pass(es) {sorted(unknown)}; "
+                     f"available: {list(PASS_NAMES)}")
+    findings = lint_paths(args.paths, select)
+    for f in findings:
+        print(f.render())
+    if findings:
+        print(f"flexlint: {len(findings)} finding(s)")
+        return 1
+    print("flexlint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,219 @@
+"""flexlint pass: lock discipline for the threaded-drive classes.
+
+Two rules:
+
+``lock-discipline`` — **guarded attribute access.**  An attribute
+assignment in ``__init__`` may carry a ``# guarded-by: <lock>``
+annotation (on the same line or the line above).  Every OTHER method of
+that class may then touch ``self.<attr>`` only
+
+* lexically inside ``with self.<lock>:`` (alias-aware, see below), or
+* in a method marked ``# holds: <lock>`` on/above its ``def`` line — the
+  caller-holds-the-lock convention the runtime already documents in
+  docstrings ("Caller holds ``_cv``"), now machine-checked: a
+  same-class call to a holds-marked method must itself happen with the
+  lock held.
+
+A lock attribute built over another lock declares that with
+``# lock-alias: <canonical>`` (e.g. ``self._all_done =
+threading.Condition(self._lock)``) so acquiring either name counts.
+
+``lock-order`` — **acquisition order.**  Syntactically nested ``with``
+acquisitions must move INWARD through the declared partial order (outer
+level strictly below inner level); re-acquiring the textually identical
+expression is allowed (RLock reentrancy).  The declared order, outermost
+first::
+
+    10  serving-layer locks (Cluster/SimInstance/RealEngine ``_lock``,
+        ``_all_done``) — policy/ledger decisions happen here
+    15  ThreadedLinkTimer ``_lock`` — the link model under the serving
+        layer's feet
+    20  daemon/RealTimeLoop ``_cv`` — the dispatch data plane
+    30  handle-table locks (``HandleTable._lock``,
+        ``SharedEventTable.lock``) — leaf bookkeeping, never calls out
+
+Receivers the pass cannot level statically (``inst._lock`` seen from
+another class, bare names) are skipped, not guessed.  Classes with no
+``guarded-by`` annotation are exempt from the access rule entirely, so
+the pass never fires on plain data classes.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.lint import FileContext, Finding
+
+RULE = "lock-discipline"
+ORDER_RULE = "lock-order"
+
+_GUARDED_RE = re.compile(r"guarded-by:\s*([A-Za-z_]\w*)")
+_ALIAS_RE = re.compile(r"lock-alias:\s*([A-Za-z_]\w*)")
+_HOLDS_RE = re.compile(r"holds:\s*([A-Za-z_]\w*)")
+
+# declared partial order (see module docstring); final-attribute names
+# with one project-wide level ...
+ATTR_LEVELS = {"_all_done": 10, "_cv": 20, "lock": 30}
+# ... and the per-class level of a ``self._lock`` (the name is reused at
+# three different depths of the stack)
+CLASS_LOCK_LEVELS = {
+    "Cluster": 10, "SimInstance": 10, "RealEngine": 10, "_Replica": 10,
+    "ThreadedLinkTimer": 15,
+    "HandleTable": 30, "SharedEventTable": 30,
+}
+
+
+def _self_attr(node: ast.expr) -> Optional[str]:
+    """``self.X`` -> ``"X"``; anything else -> None."""
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _lock_level(expr: ast.expr, class_name: Optional[str]) -> Optional[int]:
+    if not isinstance(expr, ast.Attribute):
+        return None
+    if expr.attr == "_lock":
+        if _self_attr(expr) is not None and class_name is not None:
+            return CLASS_LOCK_LEVELS.get(class_name)
+        return None          # a peer's _lock: level unknowable statically
+    return ATTR_LEVELS.get(expr.attr)
+
+
+class _ClassInfo:
+    def __init__(self, node: ast.ClassDef, ctx: FileContext):
+        self.node = node
+        self.guarded: Dict[str, str] = {}     # attr -> canonical lock
+        self.aliases: Dict[str, str] = {}     # lock attr -> canonical lock
+        self.holds: Dict[str, str] = {}       # method -> canonical lock
+        init = next((n for n in node.body
+                     if isinstance(n, ast.FunctionDef)
+                     and n.name == "__init__"), None)
+        if init is not None:
+            for stmt in ast.walk(init):
+                if not isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                    continue
+                targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                    else [stmt.target]
+                attrs = [a for a in map(_self_attr, targets) if a]
+                if not attrs:
+                    continue
+                text = ctx.comment_on(stmt.lineno, stmt.end_lineno)
+                m = _ALIAS_RE.search(text)
+                if m:
+                    for a in attrs:
+                        self.aliases[a] = m.group(1)
+                m = _GUARDED_RE.search(text)
+                if m:
+                    for a in attrs:
+                        self.guarded[a] = m.group(1)
+        for meth in node.body:
+            if isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                m = _HOLDS_RE.search(ctx.comment_on(meth.lineno))
+                if m:
+                    self.holds[meth.name] = self.canon(m.group(1))
+        self.guarded = {a: self.canon(lk) for a, lk in self.guarded.items()}
+
+    def canon(self, lock: str) -> str:
+        return self.aliases.get(lock, lock)
+
+
+def _check_method(info: _ClassInfo, meth: ast.FunctionDef, ctx: FileContext,
+                  findings: List[Finding]) -> None:
+    cls = info.node.name
+    base: Set[str] = set()
+    if meth.name in info.holds:
+        base.add(info.holds[meth.name])
+
+    def visit(node: ast.AST, held: Set[str]) -> None:
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            inner = set(held)
+            for item in node.items:
+                attr = _self_attr(item.context_expr)
+                if attr is not None:
+                    inner.add(info.canon(attr))
+            for child in node.body:
+                visit(child, inner)
+            for item in node.items:           # the lock expr itself
+                visit(item.context_expr, held)
+            return
+        if isinstance(node, ast.Attribute):
+            attr = _self_attr(node)
+            if attr in info.guarded and info.guarded[attr] not in held:
+                lk = info.guarded[attr]
+                findings.append(Finding(
+                    ctx.path, node.lineno, RULE,
+                    f"{cls}.{attr} is guarded by {lk!r} but touched outside "
+                    f"'with self.{lk}' (lock it, mark the method "
+                    f"'# holds: {lk}', or allowlist with a reason)"))
+        if isinstance(node, ast.Call):
+            callee = node.func
+            attr = _self_attr(callee) if isinstance(callee, ast.Attribute) \
+                else None
+            if attr in info.holds and info.holds[attr] not in held:
+                findings.append(Finding(
+                    ctx.path, node.lineno, RULE,
+                    f"{cls}.{attr}() requires the caller to hold "
+                    f"{info.holds[attr]!r} ('# holds:' marker) but is "
+                    f"called without it"))
+        for child in ast.iter_child_nodes(node):
+            visit(child, held)
+
+    for stmt in meth.body:
+        visit(stmt, set(base))
+
+
+def _check_order(tree: ast.Module, ctx: FileContext,
+                 aliases_by_class: Dict[str, Dict[str, str]],
+                 findings: List[Finding]) -> None:
+    def canon_text(expr: ast.expr, class_name: Optional[str]) -> str:
+        attr = _self_attr(expr)
+        if attr is not None and class_name in aliases_by_class:
+            attr = aliases_by_class[class_name].get(attr, attr)
+            return f"self.{attr}"
+        return ast.unparse(expr)
+
+    def visit(node: ast.AST, class_name: Optional[str],
+              stack: List[Tuple[int, str]]) -> None:
+        if isinstance(node, ast.ClassDef):
+            class_name = node.name
+        new_stack = stack
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                level = _lock_level(item.context_expr, class_name)
+                if level is None:
+                    continue
+                text = canon_text(item.context_expr, class_name)
+                if new_stack:
+                    out_level, out_text = new_stack[-1]
+                    if text != out_text and level <= out_level:
+                        findings.append(Finding(
+                            ctx.path, item.context_expr.lineno, ORDER_RULE,
+                            f"acquires {text} (level {level}) while holding "
+                            f"{out_text} (level {out_level}); the declared "
+                            f"order requires strictly increasing levels "
+                            f"(outermost 10 .. innermost 30)"))
+                new_stack = new_stack + [(level, text)]
+        for child in ast.iter_child_nodes(node):
+            visit(child, class_name, new_stack)
+
+    visit(tree, None, [])
+
+
+def run(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    infos = [_ClassInfo(node, ctx) for node in ast.walk(ctx.tree)
+             if isinstance(node, ast.ClassDef)]
+    for info in infos:
+        if not info.guarded:
+            continue
+        for meth in info.node.body:
+            if isinstance(meth, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and meth.name != "__init__":
+                _check_method(info, meth, ctx, findings)
+    _check_order(ctx.tree, ctx,
+                 {i.node.name: i.aliases for i in infos if i.aliases},
+                 findings)
+    return findings

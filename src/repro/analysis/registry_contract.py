@@ -1,0 +1,163 @@
+"""flexlint pass: registry contracts — declared knobs must be real.
+
+Every ``Registry.register(name, factory, knobs=...)`` promises that
+``make_*(name, knob=...)`` forwards each declared knob into ``factory``.
+The runtime enforces the OTHER half strictly (an undeclared knob is a
+``TypeError`` at ``make`` time); this pass closes the remaining gap
+statically: a knob declared but not accepted by the factory's signature
+would survive until the first caller actually passes it.
+
+For files that CONSTRUCT a ``Registry`` the pass imports the module
+(registries register at import time — exactly what ``make_*`` callers
+see) and validates every entry's knob tuple against
+``inspect.signature(entry.factory)``; ``**kwargs`` factories accept
+anything.  Findings anchor to the ``register``/``register_*`` call line
+that names the entry.  When the module cannot be imported (fixture
+snippets outside the package), a same-file static fallback checks
+``<reg>.register("name", factory, knobs=(...))`` calls whose factory is
+defined in the same file.
+"""
+from __future__ import annotations
+
+import ast
+import importlib
+import inspect
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.lint import FileContext, Finding
+
+RULE = "registry-contract"
+
+
+def _constructs_registry(tree: ast.Module) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            fn = node.func
+            name = fn.id if isinstance(fn, ast.Name) else \
+                fn.attr if isinstance(fn, ast.Attribute) else None
+            if name == "Registry":
+                return True
+    return False
+
+
+def _register_lines(tree: ast.Module) -> Dict[str, int]:
+    """Entry name -> line of the ``*register*("name", ...)`` call."""
+    lines: Dict[str, int] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or not node.args:
+            continue
+        fn = node.func
+        callee = fn.attr if isinstance(fn, ast.Attribute) else \
+            fn.id if isinstance(fn, ast.Name) else ""
+        if "register" not in callee:
+            continue
+        first = node.args[0]
+        if isinstance(first, ast.Constant) and isinstance(first.value, str):
+            lines.setdefault(first.value, node.lineno)
+    return lines
+
+
+def _bad_knobs(factory, knobs: Sequence[str]) -> List[str]:
+    try:
+        sig = inspect.signature(factory)
+    except (TypeError, ValueError):
+        return []
+    params = sig.parameters.values()
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params):
+        return []
+    accepted = {p.name for p in params
+                if p.kind in (inspect.Parameter.POSITIONAL_OR_KEYWORD,
+                              inspect.Parameter.KEYWORD_ONLY)}
+    return [k for k in knobs if k not in accepted]
+
+
+def _run_imported(ctx: FileContext) -> Optional[List[Finding]]:
+    try:
+        mod = importlib.import_module(ctx.module)
+        from repro.registry import Registry
+    except Exception:
+        return None
+    findings: List[Finding] = []
+    lines = _register_lines(ctx.tree)
+    for reg in vars(mod).values():
+        if not isinstance(reg, Registry):
+            continue
+        for name in reg.names():
+            entry = reg.entry(name)
+            bad = _bad_knobs(entry.factory, entry.knobs)
+            if bad:
+                findings.append(Finding(
+                    ctx.path, lines.get(name, 1), RULE,
+                    f"{reg.kind} entry {name!r} declares knob(s) {bad} "
+                    f"that {getattr(entry.factory, '__name__', entry.factory)!r} "
+                    f"does not accept"))
+    return findings
+
+
+def _static_params(node) -> Optional[set]:
+    """Accepted keyword names of a same-file def/class (None: **kwargs)."""
+    if isinstance(node, ast.ClassDef):
+        init = next((n for n in node.body if isinstance(n, ast.FunctionDef)
+                     and n.name == "__init__"), None)
+        if init is None:
+            return set()
+        return _static_params(init)
+    args = node.args
+    if args.kwarg is not None:
+        return None
+    names = {a.arg for a in args.args + args.kwonlyargs}
+    names.discard("self")
+    return names
+
+
+def _run_static(ctx: FileContext) -> List[Finding]:
+    defs = {node.name: node for node in ctx.tree.body
+            if isinstance(node, (ast.FunctionDef, ast.ClassDef))}
+    reg_vars = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            fn = node.value.func
+            callee = fn.id if isinstance(fn, ast.Name) else \
+                fn.attr if isinstance(fn, ast.Attribute) else ""
+            if callee == "Registry":
+                reg_vars.update(t.id for t in node.targets
+                                if isinstance(t, ast.Name))
+    findings: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call) or len(node.args) < 2:
+            continue
+        fn = node.func
+        if not (isinstance(fn, ast.Attribute) and fn.attr == "register"
+                and isinstance(fn.value, ast.Name)
+                and fn.value.id in reg_vars):
+            continue
+        name_node, factory_node = node.args[0], node.args[1]
+        if not (isinstance(name_node, ast.Constant)
+                and isinstance(factory_node, ast.Name)
+                and factory_node.id in defs):
+            continue
+        accepted = _static_params(defs[factory_node.id])
+        if accepted is None:
+            continue
+        knobs = []
+        for kw in node.keywords:
+            if kw.arg == "knobs" and isinstance(kw.value,
+                                               (ast.Tuple, ast.List)):
+                knobs = [e.value for e in kw.value.elts
+                         if isinstance(e, ast.Constant)]
+        bad = [k for k in knobs if k not in accepted]
+        if bad:
+            findings.append(Finding(
+                ctx.path, node.lineno, RULE,
+                f"entry {name_node.value!r} declares knob(s) {bad} that "
+                f"{factory_node.id!r} does not accept"))
+    return findings
+
+
+def run(ctx: FileContext) -> List[Finding]:
+    if not _constructs_registry(ctx.tree):
+        return []
+    imported = _run_imported(ctx)
+    if imported is not None:
+        return imported
+    return _run_static(ctx)

@@ -1,0 +1,100 @@
+"""flexlint pass: terminal-state accounting on the request ledger.
+
+A request entering a terminal state (``DONE`` / ``FAILED`` /
+``REJECTED``) is a LEDGER event: ``finish_time`` must be stamped (the
+conservation and attainment math in ``summarize`` divides by terminal
+counts and reads finish times) and KV pages / slots must be released —
+the bug class PRs 4 and 6 each fixed once after tests caught it late.
+
+Two rules, both on literal ``<expr>.state = RequestState.<terminal>``
+assignments:
+
+* the assignment must live in one of the designated ledger-release
+  helpers (:data:`DESIGNATED_HELPERS`) — everything else routes through
+  them so release logic exists exactly once per engine;
+* the helper must also assign ``<same expr>.finish_time`` somewhere in
+  its body (receivers compared structurally).
+
+Non-literal writes (``req.state = state_var``) are invisible to the
+pass by design; the runtime keeps its dynamic checks for those.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.lint import FileContext, Finding
+
+RULE = "terminal-state"
+
+TERMINAL_NAMES = {"DONE", "FAILED", "REJECTED"}
+
+# the ledger-release helpers: sim instance, cluster, real engine
+DESIGNATED_HELPERS = {
+    "_retire", "_reject", "_fail_request",
+    "_reject_locked", "_finish_locked", "_fail_locked",
+}
+
+
+def _terminal_assign(node: ast.AST) -> Optional[ast.Attribute]:
+    """The ``x.state`` target of ``x.state = RequestState.<terminal>``."""
+    if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+        return None
+    tgt, val = node.targets[0], node.value
+    if not (isinstance(tgt, ast.Attribute) and tgt.attr == "state"):
+        return None
+    if isinstance(val, ast.Attribute) and val.attr in TERMINAL_NAMES \
+            and isinstance(val.value, ast.Name) \
+            and val.value.id == "RequestState":
+        return tgt
+    return None
+
+
+def _sets_finish_time(func: ast.AST, receiver: ast.expr) -> bool:
+    want = ast.dump(receiver)
+    for node in ast.walk(func):
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                if isinstance(t, ast.Attribute) and t.attr == "finish_time" \
+                        and ast.dump(t.value) == want:
+                    return True
+    return False
+
+
+def _own_nodes(func: ast.AST):
+    """Nodes of ``func`` excluding nested function bodies (those are
+    visited as functions in their own right)."""
+    stack = list(ast.iter_child_nodes(func))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def run(ctx: FileContext) -> List[Finding]:
+    findings: List[Finding] = []
+    for func in ast.walk(ctx.tree):
+        if not isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for node in _own_nodes(func):
+            tgt = _terminal_assign(node)
+            if tgt is None:
+                continue
+            state = node.value.attr            # type: ignore[attr-defined]
+            if func.name not in DESIGNATED_HELPERS:
+                findings.append(Finding(
+                    ctx.path, node.lineno, RULE,
+                    f"RequestState.{state} assigned in {func.name!r}; "
+                    f"terminal states must route through a designated "
+                    f"ledger-release helper "
+                    f"({', '.join(sorted(DESIGNATED_HELPERS))})"))
+            elif not _sets_finish_time(func, tgt.value):
+                findings.append(Finding(
+                    ctx.path, node.lineno, RULE,
+                    f"{func.name!r} sets RequestState.{state} without "
+                    f"stamping finish_time on the same request — terminal "
+                    f"telemetry (attainment, conservation) reads it"))
+    return findings

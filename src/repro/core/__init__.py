@@ -16,7 +16,9 @@ from repro.core.profiler import Profiler
 # window — import from repro.sched (see docs/api.md migration table).
 # Submodule imports (not the repro.sched package) keep the core <-> sched
 # import cycle acyclic: sched's own __init__ imports repro.core.api.
+# flexlint: ignore[layering] -- documented cycle-break: core re-exports the
 from repro.sched.context import PolicyContext
+# flexlint: ignore[layering] -- policy plane for the v2 public surface
 from repro.sched.dispatch import (DispatchPolicy, DynamicPDConfig,
                                   DynamicPDPolicy, FIFOPolicy,
                                   StaticTimeSlicePolicy)
@@ -29,6 +31,7 @@ def make_policy(name: str, **knobs):
     """Lazy re-export of :func:`repro.sched.make_policy` (the registry
     imports the cluster-policy layer, which would close the import cycle
     if pulled in here eagerly)."""
+    # flexlint: ignore[layering] -- lazy re-export, see docstring
     from repro.sched.registry import make_policy as _mp
     return _mp(name, **knobs)
 

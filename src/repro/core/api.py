@@ -147,7 +147,8 @@ class OpDescriptor:
 class Future:
     """Completion token for an async op (client-side view of an event)."""
 
-    __slots__ = ("_done", "_value", "_error", "_cv", "_callbacks")
+    __slots__ = ("_done", "_value", "_error", "_cv", "_callbacks",
+                 "_hb_observed")
 
     def __init__(self):
         self._done = False
@@ -155,6 +156,16 @@ class Future:
         self._error: Optional[BaseException] = None
         self._cv = threading.Condition()
         self._callbacks = []
+        # FLEX_SANITIZE hook, set at completion by the hazard sanitizer:
+        # fires when the host OBSERVES this future (result() returns or a
+        # done-callback runs), publishing the op's clock as a host-side
+        # happens-before edge for later enqueues
+        self._hb_observed = None
+
+    def _hb_observe(self):
+        cb = self._hb_observed
+        if cb is not None:
+            cb()
 
     def set_result(self, value):
         with self._cv:
@@ -162,6 +173,8 @@ class Future:
             self._done = True
             cbs = list(self._callbacks)
             self._cv.notify_all()
+        if cbs:
+            self._hb_observe()
         for cb in cbs:
             cb(self)
 
@@ -171,6 +184,8 @@ class Future:
             self._done = True
             cbs = list(self._callbacks)
             self._cv.notify_all()
+        if cbs:
+            self._hb_observe()
         for cb in cbs:
             cb(self)
 
@@ -186,6 +201,7 @@ class Future:
             else:
                 self._callbacks.append(cb)
         if run_now:
+            self._hb_observe()
             cb(self)
 
     def result(self, timeout: Optional[float] = None):
@@ -194,6 +210,8 @@ class Future:
                 self._cv.wait(timeout)
             if not self._done:
                 raise TimeoutError("op did not complete")
+        self._hb_observe()
+        with self._cv:
             if self._error is not None:
                 raise self._error
             return self._value

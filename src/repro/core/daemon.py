@@ -63,8 +63,11 @@ from repro.core.profiler import Profiler
 # import from the submodules, not the repro.sched package: the daemon loads
 # while repro.sched's own __init__ may still be executing (sched.cluster ->
 # repro.core.api -> this module), and submodule imports break that cycle
+# flexlint: ignore[layering] -- the one upward edge the core keeps: the daemon
 from repro.sched.context import PolicyContext
+# flexlint: ignore[layering] -- consumes the policy plane (cycle-break above)
 from repro.sched.dispatch import DispatchPolicy as SchedulerPolicy
+# flexlint: ignore[layering] -- consumes the policy plane (cycle-break above)
 from repro.sched.dispatch import FIFOPolicy
 
 
@@ -137,21 +140,24 @@ class FlexDaemon:
                  policy: Optional[SchedulerPolicy] = None,
                  profiler: Optional[Profiler] = None,
                  shared_events: Optional[SharedEventTable] = None,
-                 queues=None):
+                 queues=None, sanitizer=None):
         self.device_id = device_id
         self.backend = backend
         self.policy = policy or FIFOPolicy()
         self.profiler = profiler or Profiler()
-        self.queues: Dict[Phase, Deque[OpDescriptor]] = {
+        self.queues: Dict[Phase, Deque[OpDescriptor]] = {  # guarded-by: _cv
             p: deque() for p in Phase}
         self.streams = HandleTable("stream")
         self.events = HandleTable("event")
         self.memory = HandleTable("memory")
         self.shared_events = shared_events    # session-scoped (may be None)
-        self.allocated_bytes = 0
-        self.peak_bytes = 0
-        self.allocated_by_instance: Dict[str, int] = {}
-        self.failed = False
+        # opt-in happens-before checker (repro.analysis.hazards; one per
+        # session) — None means every hook below is skipped
+        self.sanitizer = sanitizer
+        self.allocated_bytes = 0              # guarded-by: _cv
+        self.peak_bytes = 0                   # guarded-by: _cv
+        self.allocated_by_instance: Dict[str, int] = {}  # guarded-by: _cv
+        self.failed = False                   # guarded-by: _cv
         self.closed = False      # set by Session.close(): reject new work
         self.last_heartbeat = 0.0
         # optional LinkModel.stats provider — the cluster wires this in so
@@ -159,37 +165,42 @@ class FlexDaemon:
         self.link_stats_fn = None
         self._cv = threading.Condition()
         self._thread: Optional[threading.Thread] = None
-        self._stop = False
-        self._inflight: set = set()           # dispatched-not-yet-complete
+        self._stop = False                    # guarded-by: _cv
+        # dispatched-not-yet-complete
+        self._inflight: set = set()           # guarded-by: _cv
         # --- execution queues (v4): one op in flight per queue.  The
         # default spec (compute x 1, copy x 1) is the v3 engine-slot
         # behavior: copy-engine memcpys overlap compute launches; extra
         # compute queues let compute ops overlap each other too.
         self.queue_slots: Dict[str, int] = parse_queue_spec(queues)
-        self._queue_inflight: Dict[QueueId, OpDescriptor] = {}
+        self._queue_inflight: Dict[QueueId, OpDescriptor] = {}  # guarded-by: _cv
         self._queue_workers: Dict[QueueId, "queue.Queue"] = {}
         self._queue_threads: List[threading.Thread] = []
         # --- ordering state (v2) ---
         # per-vstream FIFO of enqueued-not-yet-dispatched ops
-        self._stream_pending: Dict[int, Deque[OpDescriptor]] = {}
+        self._stream_pending: Dict[int, Deque[OpDescriptor]] = {}  # guarded-by: _cv
         # per-vstream count of dispatched-not-yet-complete ops
-        self._stream_inflight: Dict[int, int] = {}
+        self._stream_inflight: Dict[int, int] = {}  # guarded-by: _cv
         # per-event [records_enqueued, records_completed]: a wait snapshots
         # records_enqueued at ITS enqueue and is satisfied once that many
         # records completed — records issued after the wait never block it
         # (CUDA/ACL semantics)
-        self._event_state: Dict[int, list] = {}
+        self._event_state: Dict[int, list] = {}  # guarded-by: _cv
         # per-memory-handle count of queued/in-flight memcpys referencing it
         # (free refuses while nonzero so a stream-ordered copy can't lose
         # its buffer underneath it)
-        self._mem_refs: Dict[int, int] = {}
+        self._mem_refs: Dict[int, int] = {}   # guarded-by: _cv
 
     # ------------------------------------------------------------ enqueue
     def enqueue(self, op: OpDescriptor) -> Future:
-        if self.failed or self.closed:
+        # fast-path rejection; the authoritative check re-runs under _cv
+        # below, after the (lock-free) size/ref preamble
+        # flexlint: ignore[lock-discipline] -- advisory read; re-checked under _cv
+        failed = self.failed
+        if failed or self.closed:
             op.future.set_error(RuntimeError(
                 f"device {self.device_id} "
-                + ("failed" if self.failed else "closed")))
+                + ("failed" if failed else "closed")))
             return op.future
         op.enqueue_time = self.backend.now()
         # Control-plane ops that only mutate handle tables complete inline —
@@ -237,29 +248,44 @@ class FlexDaemon:
                     return op.future
                 op.meta.update(nbytes=nb, bytes=nb,
                                est_duration=memcpy_model_time(kind, nb))
+        reject: Optional[str] = None
         with self._cv:
-            if op.op == OpType.RECORD_EVENT:
-                ev = op.vhandles[0]
-                if ev < 0:
-                    with self.shared_events.lock:
-                        self.shared_events.state[ev][0] += 1
-                else:
-                    st = self._event_state.setdefault(ev, [0, 0])
-                    st[0] += 1
-            elif op.op == OpType.WAIT_EVENT:
-                ev = op.vhandles[0]
-                if ev < 0:
-                    with self.shared_events.lock:
-                        st = self.shared_events.state.get(ev)
-                else:
-                    st = self._event_state.get(ev)
-                op.meta["wait_target"] = st[0] if st else 0
-            elif op.op in (OpType.MEMCPY, OpType.MEMCPY_PEER):
-                for h in op.vhandles:
-                    self._mem_refs[h] = self._mem_refs.get(h, 0) + 1
-            self.queues[op.phase].append(op)
-            self._stream_pending.setdefault(op.vstream, deque()).append(op)
-            self._cv.notify()
+            if self.failed or self.closed:
+                # fail()/close() landed since the unlocked head check and
+                # already drained the queues — appending now would wedge
+                # the op forever (nothing will ever dispatch it)
+                reject = "failed" if self.failed else "closed"
+            else:
+                if op.op == OpType.RECORD_EVENT:
+                    ev = op.vhandles[0]
+                    if ev < 0:
+                        with self.shared_events.lock:
+                            self.shared_events.state[ev][0] += 1
+                    else:
+                        st = self._event_state.setdefault(ev, [0, 0])
+                        st[0] += 1
+                elif op.op == OpType.WAIT_EVENT:
+                    ev = op.vhandles[0]
+                    if ev < 0:
+                        with self.shared_events.lock:
+                            st = self.shared_events.state.get(ev)
+                    else:
+                        st = self._event_state.get(ev)
+                    op.meta["wait_target"] = st[0] if st else 0
+                elif op.op in (OpType.MEMCPY, OpType.MEMCPY_PEER):
+                    for h in op.vhandles:
+                        self._mem_refs[h] = self._mem_refs.get(h, 0) + 1
+                if self.sanitizer is not None:
+                    self.sanitizer.on_enqueue(self, op)
+                self.queues[op.phase].append(op)
+                self._stream_pending.setdefault(op.vstream,
+                                                deque()).append(op)
+                self._cv.notify()
+        if reject is not None:
+            if op.op == OpType.MEMCPY_PEER:
+                self._drop_dst_ref(op)        # undo the peer ref taken above
+            op.future.set_error(RuntimeError(
+                f"device {self.device_id} {reject}"))
         return op.future
 
     def _control_op(self, op: OpDescriptor) -> None:
@@ -278,18 +304,20 @@ class FlexDaemon:
                                     "tag": op.meta.get("tag", ""),
                                     "instance": instance,
                                     "data": None})
-            self.allocated_bytes += nbytes
-            self.peak_bytes = max(self.peak_bytes, self.allocated_bytes)
-            self.allocated_by_instance[instance] = \
-                self.allocated_by_instance.get(instance, 0) + nbytes
+            with self._cv:
+                # control ops run inline on caller threads: two clients
+                # allocating concurrently must not lose an accounting
+                # update (read-modify-write on the ledger counters)
+                self.allocated_bytes += nbytes
+                self.peak_bytes = max(self.peak_bytes, self.allocated_bytes)
+                self.allocated_by_instance[instance] = \
+                    self.allocated_by_instance.get(instance, 0) + nbytes
+            if self.sanitizer is not None:
+                self.sanitizer.on_malloc(self, h)
             return h
         if op.op == OpType.FREE:
-            rec = self.memory.resolve(op.vhandles[0])
-            with self._cv:
-                if self._mem_refs.get(op.vhandles[0]):
-                    raise RuntimeError(
-                        f"free({op.vhandles[0]}): buffer has pending memcpy "
-                        f"work")
+            h = op.vhandles[0]
+            rec = self.memory.resolve(h)
             owner = rec.get("instance", "")
             # owned buffers are freeable only by their owner; untagged
             # buffers (owner "") are shared
@@ -297,10 +325,19 @@ class FlexDaemon:
                 raise PermissionError(
                     f"instance {instance!r} cannot free buffer owned by "
                     f"{owner!r} (handle isolation)")
-            self.memory.release(op.vhandles[0])
-            self.allocated_bytes -= rec["nbytes"]
-            self.allocated_by_instance[owner] = \
-                self.allocated_by_instance.get(owner, 0) - rec["nbytes"]
+            with self._cv:
+                # ref check + release + accounting are ONE atom: a memcpy
+                # enqueue taking a ref between the check and the release
+                # could otherwise lose its buffer underneath it
+                if self._mem_refs.get(h):
+                    raise RuntimeError(
+                        f"free({h}): buffer has pending memcpy work")
+                self.memory.release(h)
+                self.allocated_bytes -= rec["nbytes"]
+                self.allocated_by_instance[owner] = \
+                    self.allocated_by_instance.get(owner, 0) - rec["nbytes"]
+            if self.sanitizer is not None:
+                self.sanitizer.on_free(self, h)
             return None
         if op.op == OpType.CREATE_STREAM:
             engine = op.meta.get("engine", ENGINE_COMPUTE)
@@ -347,7 +384,7 @@ class FlexDaemon:
         raise ValueError(f"not a control op: {op.op}")
 
     # --------------------------------------------------- stepped interface
-    def pending_count(self) -> int:
+    def pending_count(self) -> int:  # holds: _cv
         return sum(len(q) for q in self.queues.values())
 
     def oldest_pending_time(self, phase: Optional[Phase] = None) \
@@ -362,6 +399,7 @@ class FlexDaemon:
 
     def backlog(self, phase: Phase) -> int:
         """Pending-op depth of one phase queue (cheap, thread-safe)."""
+        # flexlint: ignore[lock-discipline] -- advisory probe; deque len is atomic
         return len(self.queues[phase])
 
     def stream_engine(self, vstream: int) -> str:
@@ -380,18 +418,13 @@ class FlexDaemon:
             return None
 
     # ----------------------------------------------------- queue occupancy
-    @property
-    def engine_slots(self) -> Dict[str, int]:
-        """Per-class queue counts (the v3 name, kept for policy views)."""
-        return dict(self.queue_slots)
-
-    def _free_queues(self) -> Dict[str, List[int]]:
+    def _free_queues(self) -> Dict[str, List[int]]:  # holds: _cv
         """Free queue indices per class.  Caller holds ``_cv``."""
         return {cls: [i for i in range(n)
                       if (cls, i) not in self._queue_inflight]
                 for cls, n in self.queue_slots.items()}
 
-    def _engine_free(self) -> Dict[str, int]:
+    def _engine_free(self) -> Dict[str, int]:  # holds: _cv
         """Free dispatch slots per class.  Caller holds ``_cv``."""
         busy: Dict[str, int] = {}
         for (cls, _i) in self._queue_inflight:
@@ -399,7 +432,7 @@ class FlexDaemon:
         return {cls: n - busy.get(cls, 0)
                 for cls, n in self.queue_slots.items()}
 
-    def _queue_occupancy_locked(self) -> Dict[str, Optional[str]]:
+    def _queue_occupancy_locked(self) -> Dict[str, Optional[str]]:  # holds: _cv
         """Queue key -> phase of the op in flight there (None = idle).
         Caller holds ``_cv``."""
         return {queue_key(cls, i):
@@ -414,7 +447,7 @@ class FlexDaemon:
         with self._cv:
             return self._queue_occupancy_locked()
 
-    def _remote_edge_pending(self) -> bool:
+    def _remote_edge_pending(self) -> bool:  # holds: _cv
         """True if any stream head waits on a session-scoped event — its
         release may come from a PEER daemon, which never notifies our cv
         (the threaded dispatcher polls only in that case).  Caller holds
@@ -424,7 +457,7 @@ class FlexDaemon:
                 return True
         return False
 
-    def _event_progress(self, vevent: int) -> Optional[list]:
+    def _event_progress(self, vevent: int) -> Optional[list]:  # holds: _cv
         """[enqueued, completed] for a local or session-scoped event."""
         if vevent < 0:
             if self.shared_events is None:
@@ -434,7 +467,7 @@ class FlexDaemon:
                 return list(st) if st is not None else None
         return self._event_state.get(vevent)
 
-    def _ready_heads(self) -> List[OpDescriptor]:
+    def _ready_heads(self) -> List[OpDescriptor]:  # holds: _cv
         """Heads of all streams whose next op may legally dispatch now."""
         heads = []
         free = self._free_queues()
@@ -508,6 +541,11 @@ class FlexDaemon:
                 result = self._apply_effect(op, result)
             except BaseException as e:
                 error = e
+            else:
+                if self.sanitizer is not None:
+                    # effect applied = the op's buffer/event footprint is
+                    # final: stamp clocks + check happens-before edges
+                    self.sanitizer.on_complete(self, op)
         self.profiler.on_complete(op)
         # Free the STREAM before resolving the future: completion callbacks
         # routinely enqueue follow-up work on the same stream and must find
@@ -661,8 +699,11 @@ class FlexDaemon:
     def fail(self, requeue_sink: Optional[Callable] = None):
         """Simulated device failure: error every queued op (the engine's
         fault-tolerance layer re-queues them elsewhere)."""
-        self.failed = True
         with self._cv:
+            # the flag flips under the SAME lock that drains: an enqueue
+            # racing this method either sees failed (and rejects) or
+            # appends before the drain below sweeps it up — never both
+            self.failed = True
             drained = []
             for q in self.queues.values():
                 drained.extend(q)
@@ -683,7 +724,8 @@ class FlexDaemon:
 
     # -------------------------------------------------------- thread drive
     def start(self):
-        self._stop = False
+        with self._cv:
+            self._stop = False
         # one executor thread per execution queue: ops on different queues
         # (compute vs copy, or two compute queues) execute concurrently;
         # ops sharing a queue serialize

@@ -16,8 +16,8 @@ class HandleTable:
     def __init__(self, kind: str, start: int = 1):
         self.kind = kind
         self._lock = threading.Lock()
-        self._next = itertools.count(start)
-        self._v2p: Dict[int, Any] = {}
+        self._next = itertools.count(start)  # guarded-by: _lock
+        self._v2p: Dict[int, Any] = {}       # guarded-by: _lock
 
     def create(self, physical: Any = None) -> int:
         with self._lock:
@@ -64,8 +64,8 @@ class SharedEventTable:
 
     def __init__(self):
         self.lock = threading.Lock()
-        self._next = itertools.count(1)
-        self.state: Dict[int, list] = {}
+        self._next = itertools.count(1)      # guarded-by: lock
+        self.state: Dict[int, list] = {}     # guarded-by: lock
 
     def create(self) -> int:
         with self.lock:

@@ -43,6 +43,7 @@ from repro.core.api import ENGINE_COMPUTE, Future, MemcpyKind, Phase, RuntimeAPI
 from repro.core.client import FlexClient, PassthroughClient
 from repro.core.daemon import FlexDaemon, RealBackend
 from repro.core.handles import SharedEventTable
+# flexlint: ignore[layering] -- documented cycle-break (see repro.core.daemon)
 from repro.sched.dispatch import DispatchPolicy as SchedulerPolicy
 
 MODES = ("flex", "passthrough", "sim")
@@ -74,11 +75,15 @@ class Session(RuntimeAPI):
 
     def __init__(self, mode: str, clients: List[RuntimeAPI],
                  daemons: List[Optional[FlexDaemon]],
-                 shared_events: Optional[SharedEventTable] = None):
+                 shared_events: Optional[SharedEventTable] = None,
+                 sanitizer=None):
         self.mode = mode
         self._clients = clients
         self.daemons = daemons
         self.shared_events = shared_events
+        # happens-before checker shared by every daemon of this session
+        # (FLEX_SANITIZE=1; see repro.analysis.hazards) — None when off
+        self.sanitizer = sanitizer
         self._current = 0
         self._closed = False
 
@@ -226,6 +231,11 @@ class Session(RuntimeAPI):
         for c in self._clients:
             if isinstance(c, PassthroughClient):
                 c.close()
+        if self.sanitizer is not None and self.sanitizer.hazards:
+            hazards = self.sanitizer.drain()
+            raise RuntimeError(
+                "FLEX_SANITIZE found %d happens-before hazard(s):\n  %s"
+                % (len(hazards), "\n  ".join(hazards)))
 
     def __enter__(self) -> "Session":
         return self
@@ -259,6 +269,11 @@ def connect(mode: str = "flex", devices: int = 1, *,
     clients: List[RuntimeAPI] = []
     daemons: List[Optional[FlexDaemon]] = []
     shared = SharedEventTable() if mode != "passthrough" else None
+    sanitizer = None
+    if mode != "passthrough":
+        from repro.analysis.hazards import HazardSanitizer, sanitize_enabled
+        if sanitize_enabled():
+            sanitizer = HazardSanitizer()   # one checker spans the session
     for i in range(devices):
         if mode == "passthrough":
             clients.append(PassthroughClient())
@@ -266,9 +281,11 @@ def connect(mode: str = "flex", devices: int = 1, *,
             continue
         d = FlexDaemon(i, _backend_for(backend, i),
                        policy=_policy_for(policy, i), shared_events=shared,
-                       queues=queues(i) if callable(queues) else queues)
+                       queues=queues(i) if callable(queues) else queues,
+                       sanitizer=sanitizer)
         if mode == "flex":
             d.start()
         clients.append(FlexClient(d, instance=instance))
         daemons.append(d)
-    return Session(mode, clients, daemons, shared_events=shared)
+    return Session(mode, clients, daemons, shared_events=shared,
+                   sanitizer=sanitizer)

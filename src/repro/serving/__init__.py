@@ -8,6 +8,7 @@ from repro.serving.simulator import (Cluster, DeploymentSpec, EventLoop,
 # Workload generators live in repro.traffic (the serving.workload shim
 # was removed after its one-release deprecation window, v6); these
 # package-level re-exports remain part of the public surface.
+# flexlint: ignore[layering] -- compat re-export kept for the public API
 from repro.traffic.workloads import (bursty_phase_shift, deepseek_1k1k,
                                      deepseek_1k4k, make_workload, qwen_grid)
 

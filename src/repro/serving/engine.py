@@ -56,6 +56,9 @@ import numpy as np
 
 from repro.core.api import Phase
 from repro.core.session import connect
+# The engine consumes the sched policy plane by design; the layering rank
+# exists to ban the reverse direction (sched importing serving).
+# flexlint: ignore[layering] -- serving -> sched policy-plane use is the API
 from repro.sched import (AdmissionPolicy, AdmissionView, ClusterPolicy,
                          DynamicPDConfig, DynamicPDPolicy, FIFOPolicy,
                          GatedAdmission, RouteContext, UngatedAdmission,
@@ -179,7 +182,7 @@ class RealEngine:
             raise ValueError("the engine needs at least one replica")
         self.n_replicas = int(replicas)
         self._lock = threading.RLock()
-        self._all_done = threading.Condition(self._lock)
+        self._all_done = threading.Condition(self._lock)  # lock-alias: _lock
         # control plane (v3): dispatch policies resolve through the registry
         # by name; admission is a shared AdmissionPolicy (the same object
         # type the cluster simulator uses — no copy-pasted gating)
@@ -250,12 +253,12 @@ class RealEngine:
             lambda p, toks, cache, lens: model.decode(p, toks, cache, lens))
 
         # engine-level queues
-        self.waiting_admission: List[Request] = []   # awaiting admission
-        self.outstanding = 0
-        self.finished: List[Request] = []
+        self.waiting_admission: List[Request] = []  # guarded-by: _lock
+        self.outstanding = 0                        # guarded-by: _lock
+        self.finished: List[Request] = []           # guarded-by: _lock
         # honest rejection telemetry (v5): requests the admission policy
         # shed — they end REJECTED and count toward run() accounting
-        self.rejected: List[Request] = []
+        self.rejected: List[Request] = []           # guarded-by: _lock
         # terminal-transition hook (v5): called with each request as it
         # ends (done/failed/rejected) — closed-loop traffic generators
         # plug in here, same contract as the cluster simulator's
@@ -305,7 +308,7 @@ class RealEngine:
         self.session.close()
 
     # ------------------------------------------------------------ prefill
-    def _admission_view(self, rep: _Replica, idx: int = 0) -> AdmissionView:
+    def _admission_view(self, rep, idx: int = 0) -> AdmissionView:  # holds: _lock
         cand = self.waiting_admission[idx] \
             if idx < len(self.waiting_admission) else None
         return AdmissionView(
@@ -319,7 +322,7 @@ class RealEngine:
             next_tenant=cand.tenant if cand else "",
             next_priority=cand.priority if cand else 0)
 
-    def _drain_admission_locked(self):
+    def _drain_admission_locked(self):  # holds: _lock
         # load shedding first (v5): doomed requests end REJECTED with
         # honest telemetry — the same policy hooks the simulator drives
         for r in self.admission.shed(self.waiting_admission,
@@ -349,7 +352,7 @@ class RealEngine:
             rep.prefilling_count += 1
             self._launch_prefill(rep, req)
 
-    def _reject_locked(self, req: Request) -> None:
+    def _reject_locked(self, req: Request) -> None:  # holds: _lock
         req.state = RequestState.REJECTED
         req.finish_time = time.monotonic()
         self.rejected.append(req)
@@ -358,7 +361,7 @@ class RealEngine:
             self.on_request_done(req)
         self._all_done.notify_all()
 
-    def _launch_prefill(self, rep: _Replica, req: Request) -> None:
+    def _launch_prefill(self, rep: _Replica, req: Request) -> None:  # holds: _lock
         req.state = RequestState.PREFILLING
         req.instance = rep.name
         toks = jnp.asarray(np.asarray(req.prompt_tokens, np.int32))[None, :]
@@ -378,12 +381,7 @@ class RealEngine:
         except Exception:
             with self._lock:
                 rep.prefilling_count = max(0, rep.prefilling_count - 1)
-                req.state = RequestState.FAILED
-                self.outstanding -= 1
-                if self.on_request_done is not None:
-                    self.on_request_done(req)
-                self._drain_admission_locked()
-                self._all_done.notify_all()
+                self._fail_locked(req)
             return
         tok = int(np.argmax(np.asarray(logits[0])))
         now = time.monotonic()
@@ -464,11 +462,7 @@ class RealEngine:
             cache = _unpack_cache(blob, treedef, spec)
         except Exception:
             with self._lock:
-                req.state = RequestState.FAILED
-                self.outstanding -= 1
-                if self.on_request_done is not None:
-                    self.on_request_done(req)
-                self._all_done.notify_all()
+                self._fail_locked(req)
             return
         finally:
             try:  # the peer copies completed before the readbacks (event edge)
@@ -484,7 +478,7 @@ class RealEngine:
             self._ensure_decode_locked(rep)
 
     # ------------------------------------------------------------- decode
-    def _fill_slots_locked(self, rep: _Replica):
+    def _fill_slots_locked(self, rep: _Replica):  # holds: _lock
         if rep.decode_inflight:
             # the in-flight decode holds a snapshot of slot_cache; inserting
             # now would be overwritten when it completes (lost update)
@@ -503,7 +497,7 @@ class RealEngine:
             req.state = RequestState.DECODING
             rep.active_count += 1
 
-    def _ensure_decode_locked(self, rep: _Replica):
+    def _ensure_decode_locked(self, rep: _Replica):  # holds: _lock
         if rep.decode_inflight or rep.active_count == 0:
             return
         rep.decode_inflight = True
@@ -548,7 +542,7 @@ class RealEngine:
             self._fill_slots_locked(rep)
             self._ensure_decode_locked(rep)
 
-    def _finish_locked(self, req: Request):
+    def _finish_locked(self, req: Request):  # holds: _lock
         req.state = RequestState.DONE
         req.finish_time = time.monotonic()
         self.finished.append(req)
@@ -558,5 +552,18 @@ class RealEngine:
         # a finished sequence releases its slot claim: gated admission may
         # now let the next request in (also covers requests that finish at
         # prefill, which never reach the decode-completion drain)
+        self._drain_admission_locked()
+        self._all_done.notify_all()
+
+    def _fail_locked(self, req: Request):  # holds: _lock
+        """Terminal FAILED with full ledger release: finish_time stamped,
+        the outstanding count dropped, admission re-drained (a failed
+        prefill/transfer releases its slot claim exactly like a finished
+        one), and run() waiters woken."""
+        req.state = RequestState.FAILED
+        req.finish_time = time.monotonic()
+        self.outstanding -= 1
+        if self.on_request_done is not None:
+            self.on_request_done(req)
         self._drain_admission_locked()
         self._all_done.notify_all()

@@ -87,7 +87,7 @@ class RealTimeLoop:
     def __init__(self, time_scale: float = 0.05):
         self.scale = float(time_scale)
         self.clock = WallClock(self.scale)
-        self._heap: List[Tuple[float, int, Callable]] = []
+        self._heap: List[Tuple[float, int, Callable]] = []  # guarded-by: _cv
         self._seq = itertools.count()
         self._cv = threading.Condition()
 

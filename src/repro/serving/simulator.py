@@ -51,11 +51,13 @@ import math
 import threading
 from typing import Callable, Dict, List, Optional, Tuple
 
+# flexlint: ignore[layering] -- serving -> cache prefix-reuse use is the API
 from repro.cache import make_cache, request_block_hashes
 from repro.configs.base import ModelConfig
 from repro.core.api import OpDescriptor, OpType, Phase
 from repro.core.queues import flops_key
 from repro.core.session import connect
+# flexlint: ignore[layering] -- serving -> sched policy-plane use is the API
 from repro.sched import (AdmissionPolicy, AdmissionView, ClusterPolicy,
                          DynamicPDConfig, DynamicPDPolicy, FIFOPolicy,
                          GatedAdmission, RouteContext, UngatedAdmission,
@@ -192,7 +194,8 @@ class SimInstance:
         self.cost = cost
         self.loop = loop
         self.sim_cfg = sim_cfg
-        self.role = role  # "prefill" | "decode" | "both" (switchable)
+        # "prefill" | "decode" | "both" (switchable)
+        self.role = role                # guarded-by: _lock
         self.drive = drive
         # shared admission policy (control plane v3) — the same object type
         # RealEngine uses, so gating decisions cannot drift between them
@@ -223,9 +226,10 @@ class SimInstance:
             self.stream_d = client.create_stream(phase=Phase.DECODE)
         self.stream_p = self.streams_p[0]
         self.stream_c = client.copy_engine_stream()   # KV transfers
-        self._rr_prefill = 0           # round-robin over prefill streams
-        self.slow_factor = 1.0
-        self.failed = False
+        # round-robin over prefill streams
+        self._rr_prefill = 0            # guarded-by: _lock
+        self.slow_factor = 1.0          # guarded-by: _lock
+        self.failed = False             # guarded-by: _lock
         self.link_driver: Optional[LinkDriver] = None  # set by the Cluster
         # compute-contention model (set by the Cluster when the device has
         # >1 compute queue): concurrent compute ops on this device split
@@ -233,17 +237,18 @@ class SimInstance:
         self.compute_key = flops_key(name)
         self.compute_driver = None     # stepped drive (LinkDriver)
         self.shares_compute = cq > 1   # threaded drive routes through timer
-        # request state
-        self.prefill_waiting: List[Request] = []   # awaiting admission (gated)
-        self.prefilling: Dict[int, Request] = {}  # prefill queued/in-flight
-        self.decode_pending: List[Request] = []    # prefilled, awaiting slot
-        self.active: List[Request] = []            # decoding
+        # request state: awaiting admission (gated) -> prefill queued or
+        # in flight -> prefilled awaiting a slot -> decoding
+        self.prefill_waiting: List[Request] = []    # guarded-by: _lock
+        self.prefilling: Dict[int, Request] = {}    # guarded-by: _lock
+        self.decode_pending: List[Request] = []     # guarded-by: _lock
+        self.active: List[Request] = []             # guarded-by: _lock
         # finished decoding but their KV tail is still streaming in: they
         # cannot retire (pages partly in flight) until the stream completes
-        self.stalled: Dict[int, Request] = {}
-        self._stall_start: Dict[int, float] = {}
-        self.decode_stall_s = 0.0
-        self.stalls = 0
+        self.stalled: Dict[int, Request] = {}       # guarded-by: _lock
+        self._stall_start: Dict[int, float] = {}    # guarded-by: _lock
+        self.decode_stall_s = 0.0                   # guarded-by: _lock
+        self.stalls = 0                             # guarded-by: _lock
         self.kv_capacity = cost.kv_capacity_tokens(
             spec, sim_cfg.kv_reserve_frac)
         if self.kv_capacity <= 0:
@@ -251,11 +256,11 @@ class SimInstance:
                 f"{name}: weights ({cost.weights_bytes() / 1e9:.0f} GB) do "
                 f"not fit {spec.chips} chips x 16 GB HBM — choose a larger "
                 f"instance or a smaller/quantized model")
-        self.kv_used = 0
+        self.kv_used = 0                            # guarded-by: _lock
         # prompt tokens whose KV is still charged here while a copy-engine
         # transfer to a decode instance is in flight (conservation: the
         # source pages are only freed once the destination holds the copy)
-        self.kv_in_transit = 0
+        self.kv_in_transit = 0                      # guarded-by: _lock
         # prefix-cache tier (v6, repro.cache): retained prompt-KV blocks
         # this instance can re-serve.  Occupancy is charged into kv_used
         # through on_delta (cached blocks are real HBM pages), inserts are
@@ -269,35 +274,35 @@ class SimInstance:
             page_tokens=max(1, sim_cfg.prefix_page_tokens),
             on_delta=self._cache_delta, room_fn=self.kv_free,
             **sim_cfg.prefix_cache_knobs)
-        self.prefix_flops_saved = 0.0
-        self._decode_op_inflight = False
+        self.prefix_flops_saved = 0.0               # guarded-by: _lock
+        self._decode_op_inflight = False            # guarded-by: _lock
         # rejection telemetry (v5): requests the admission policy shed on
         # this instance — honest accounting's per-instance counter
-        self.rejected = 0
+        self.rejected = 0                           # guarded-by: _lock
         self.on_request_done: Optional[Callable] = None
         self.on_request_rejected: Optional[Callable] = None
         self.on_prefill_done: Optional[Callable] = None
         # cluster hook: a completion other instances may be blocked on
         # (shared-event record, peer copy) — kicks the sibling daemons
         self.on_cross_device: Optional[Callable] = None
-        self.steps = {"prefill": 0, "decode": 0}
-        self.ewma_step = 0.0
+        self.steps = {"prefill": 0, "decode": 0}    # guarded-by: _lock
+        self.ewma_step = 0.0                        # guarded-by: _lock
 
     # ---------------------------------------------------------- utilities
     @property
     def now(self) -> float:
         return self.loop.clock.t
 
-    def load(self) -> float:
+    def load(self) -> float:  # holds: _lock
         """Router load signal: queued work normalized by capacity."""
         q = (len(self.prefill_waiting) + len(self.decode_pending)
              + len(self.active) + self.daemon.pending_count())
         return q / max(self.spec.chips, 1)
 
-    def kv_free(self) -> int:
+    def kv_free(self) -> int:  # holds: _lock
         return max(0, self.kv_capacity - self.kv_used)
 
-    def _cache_delta(self, tokens: int) -> None:
+    def _cache_delta(self, tokens: int) -> None:  # holds: _lock
         """Prefix-cache occupancy ledger hook: cached blocks live in this
         instance's HBM, so inserts charge ``kv_used`` and evictions refund
         it (the conservation check sees cache pages like any others)."""
@@ -310,7 +315,7 @@ class SimInstance:
             self.prefill_waiting.append(req)
             self._drain_admission()
 
-    def _admission_view(self, idx: int = 0) -> AdmissionView:
+    def _admission_view(self, idx: int = 0) -> AdmissionView:  # holds: _lock
         cand = self.prefill_waiting[idx] \
             if idx < len(self.prefill_waiting) else None
         return AdmissionView(
@@ -324,7 +329,7 @@ class SimInstance:
             next_tenant=cand.tenant if cand else "",
             next_priority=cand.priority if cand else 0)
 
-    def _drain_admission(self) -> None:
+    def _drain_admission(self) -> None:  # holds: _lock
         """Admit waiting requests per the AdmissionPolicy.  The policy
         first sheds doomed requests (honest rejection), then picks each
         admission candidate (``pick_next`` — FIFO for v3/v4 policies,
@@ -348,7 +353,7 @@ class SimInstance:
             self._enqueue_prefill(req)
             n -= 1
 
-    def _reject(self, req: Request) -> None:
+    def _reject(self, req: Request) -> None:  # holds: _lock
         """Load shedding: the request leaves the system REJECTED — a
         terminal state reported through the same completion plumbing as
         DONE, so telemetry (and closed-loop clients) always see it."""
@@ -373,7 +378,7 @@ class SimInstance:
             off += n
         return out
 
-    def _enqueue_prefill(self, req: Request) -> None:
+    def _enqueue_prefill(self, req: Request) -> None:  # holds: _lock
         # prefix-cache admission hook (v6): pin the longest cached prefix
         # match for this prompt — matched tokens skip recomputation and
         # only the SUFFIX is launched/charged to the cost model.  The
@@ -488,14 +493,14 @@ class SimInstance:
             self.active = [r for r in self.active if r.kv_stream_pending]
             return drained
 
-    def _fill_slots(self) -> None:
+    def _fill_slots(self) -> None:  # holds: _lock
         while (self.decode_pending
                and len(self.active) < self.sim_cfg.max_num_seqs):
             r = self.decode_pending.pop(0)
             r.state = RequestState.DECODING
             self.active.append(r)
 
-    def _ensure_decode_op(self) -> None:
+    def _ensure_decode_op(self) -> None:  # holds: _lock
         if self._decode_op_inflight or not (self.active or self.decode_pending):
             return
         self._decode_op_inflight = True
@@ -509,7 +514,7 @@ class SimInstance:
         fut.add_done_callback(self._decode_done)
         self.kick()
 
-    def _decode_estimate(self) -> float:
+    def _decode_estimate(self) -> float:  # holds: _lock
         b = max(1, len(self.active))
         ctx = (sum(r.total_tokens for r in self.active) // b) if self.active \
             else 1024
@@ -589,7 +594,7 @@ class SimInstance:
             self._fill_slots()
             self._ensure_decode_op()
 
-    def _retire(self, r: Request) -> None:
+    def _retire(self, r: Request) -> None:  # holds: _lock
         """Free a finished request's pages and report completion."""
         self.kv_used -= r.total_tokens
         r.state = RequestState.DONE
@@ -629,7 +634,7 @@ class SimInstance:
             self._drain_admission()
 
     # ----------------------------------------------------- device driving
-    def kick(self) -> None:
+    def kick(self) -> None:  # holds: _lock
         """Dispatch every ready op the device's engines can take.
 
         The daemon hands out at most one op per free engine slot, so a
@@ -669,20 +674,25 @@ class SimInstance:
         self.loop.after(self.op_duration(op), lambda o=op: self._complete(o))
 
     def _complete(self, op: OpDescriptor) -> None:
-        if self.failed:
-            # the op was in flight when the fault hit: its result is void,
-            # but cross-device effects must settle (a shared record peers
-            # wait on, a peer's memcpy ref) or siblings wedge/leak
-            self.daemon.abandon_inflight(op)
+        # stepped-drive completion callback (event loop / link driver):
+        # the fault flag and everything kick() touches live under the
+        # serving-state lock like every other mutation path
+        with self._lock:
+            if self.failed:
+                # the op was in flight when the fault hit: its result is
+                # void, but cross-device effects must settle (a shared
+                # record peers wait on, a peer's memcpy ref) or siblings
+                # wedge/leak
+                self.daemon.abandon_inflight(op)
+                if self.on_cross_device is not None and \
+                        op.op in (OpType.RECORD_EVENT, OpType.MEMCPY_PEER):
+                    self.on_cross_device()
+                return
+            self.daemon.mark_complete(op, self.now)
             if self.on_cross_device is not None and \
                     op.op in (OpType.RECORD_EVENT, OpType.MEMCPY_PEER):
                 self.on_cross_device()
-            return
-        self.daemon.mark_complete(op, self.now)
-        if self.on_cross_device is not None and \
-                op.op in (OpType.RECORD_EVENT, OpType.MEMCPY_PEER):
-            self.on_cross_device()
-        self.kick()
+            self.kick()
 
     # ------------------------------------------------------------ faults
     def fail(self) -> List[Request]:
@@ -784,9 +794,9 @@ class Cluster:
         self.deploy = deploy
         self.cost = cost or CostModel(cfg)
         self.sim_cfg = sim_cfg or SimConfig()
-        self.requests: List[Request] = []
-        self.prefill_pool: List[SimInstance] = []
-        self.decode_pool: List[SimInstance] = []
+        self.requests: List[Request] = []           # guarded-by: _lock
+        self.prefill_pool: List[SimInstance] = []   # guarded-by: _lock
+        self.decode_pool: List[SimInstance] = []    # guarded-by: _lock
         self.instances: List[SimInstance] = []
         # ONE serving-state lock shared by the cluster and every instance:
         # the threaded drive mutates state from daemon engine threads
@@ -857,23 +867,24 @@ class Cluster:
         self.policy: ClusterPolicy = make_policy(
             deploy.cluster_policy or "least_loaded", **deploy.cluster_knobs)
         self.policy.bind(self)
-        self.role_flips = 0
-        self._tick_armed = False
+        self.role_flips = 0                         # guarded-by: _lock
+        self._tick_armed = False                    # guarded-by: _lock
         # transfer-id -> {"req", "src", "dst", "tokens", "remaining",
         # "dst_charged", "admitted", "aborted"} while a KV stream is in
         # flight (fault handling + per-chunk conservation checks).
         # Keyed by a UNIQUE id, not req_id: a re-routed request may start a
         # second stream while its aborted first one is still settling.
-        self.inflight_transfers: Dict[int, Dict] = {}
+        self.inflight_transfers: Dict[int, Dict] = {}   # guarded-by: _lock
         self._transfer_ids = itertools.count(1)
         # closed-loop traffic sources attached by run(traffic=...): fed at
         # every terminal request transition through loop.defer
-        self._sources: List = []
+        self._sources: List = []                    # guarded-by: _lock
         # cross-instance prefix reuse telemetry (v6)
-        self.prefix_fetches = 0
-        self.prefix_fetch_fails = 0
-        self.prefix_fetch_tokens = 0
-        self._build()
+        self.prefix_fetches = 0                     # guarded-by: _lock
+        self.prefix_fetch_fails = 0                 # guarded-by: _lock
+        self.prefix_fetch_tokens = 0                # guarded-by: _lock
+        with self._lock:
+            self._build()
         self._prefix_on = any(i.cache.enabled for i in self.instances)
 
     # ----------------------------------------------------------- topology
@@ -890,7 +901,7 @@ class Cluster:
             return DynamicPDPolicy(d.dynamic_cfg)
         return FIFOPolicy()   # disagg instances are single-phase anyway
 
-    def _build(self):
+    def _build(self):  # holds: _lock
         d = self.deploy
         # plan (name, spec, policy, sim_cfg, role) per device, then open ONE
         # multi-device session routing each instance to its own daemon
@@ -970,7 +981,7 @@ class Cluster:
     def _healthy(self, pool: List[SimInstance]) -> List[SimInstance]:
         return self.policy.healthy(pool)
 
-    def _route_ctx(self, req: Request) -> RouteContext:
+    def _route_ctx(self, req: Request) -> RouteContext:  # holds: _lock
         """Per-request routing context (v6 ``route_prefill`` signature):
         the cluster probes every healthy prefill instance's prefix cache
         for its longest match so affinity policies can route reuse."""
@@ -991,7 +1002,7 @@ class Cluster:
             if self._prefix_on else 0,
             cluster=self)
 
-    def _route_prefill(self, req: Request) -> Optional[SimInstance]:
+    def _route_prefill(self, req) -> Optional[SimInstance]:  # holds: _lock
         """All cluster prefill routing funnels through here: builds the
         RouteContext and dispatches through the v5->v6 signature adapter
         (legacy 2-arg policies keep working, with a DeprecationWarning)."""
@@ -1012,7 +1023,7 @@ class Cluster:
             self._arm_tick()
 
     # ------------------------------------------- terminal-state plumbing
-    def _fail_request(self, req: Request) -> None:
+    def _fail_request(self, req: Request) -> None:  # holds: _lock
         """The ONE place a cluster request ends FAILED: idempotent, and
         reported to traffic sources like any other terminal transition."""
         if req.state in TERMINAL_STATES:
@@ -1021,13 +1032,13 @@ class Cluster:
         req.finish_time = self.loop.clock.t
         self._notify_sources(req)
 
-    def _request_done(self, inst: SimInstance, req: Request) -> None:
+    def _request_done(self, inst, req: Request) -> None:  # holds: _lock
         self._notify_sources(req)
 
-    def _request_rejected(self, inst: SimInstance, req: Request) -> None:
+    def _request_rejected(self, inst, req: Request) -> None:  # holds: _lock
         self._notify_sources(req)
 
-    def _notify_sources(self, req: Request) -> None:
+    def _notify_sources(self, req: Request) -> None:  # holds: _lock
         """Feed closed-loop traffic sources through the driver-loop defer
         hook: terminal transitions happen deep inside instance call stacks
         (and, threaded, on daemon engine threads) — the source callback
@@ -1045,7 +1056,7 @@ class Cluster:
                                  lambda r=nxt: self.submit(r))
 
     # ------------------------------------------------- periodic policy tick
-    def _arm_tick(self) -> None:
+    def _arm_tick(self) -> None:  # holds: _lock
         iv = self.policy.tick_interval()
         if iv <= 0 or self._tick_armed:
             return
@@ -1060,7 +1071,7 @@ class Cluster:
                 self._arm_tick()   # re-arm only while work remains, so the
                 #                    stepped event loop can still drain
 
-    def _kick_all(self) -> None:
+    def _kick_all(self) -> None:  # holds: _lock
         """A cross-device edge resolved (shared record / peer copy done):
         sibling daemons may have unblocked stream heads."""
         for inst in self.instances:
@@ -1133,7 +1144,7 @@ class Cluster:
                     self._chunk_done(x, ctoks, last, f))
             src.kick()
 
-    def _admit_local(self, inst: SimInstance, req: Request) -> None:
+    def _admit_local(self, inst, req: Request) -> None:  # holds: _lock
         """Admit for decode on the instance that already holds the KV
         (prefill finished on an instance that now serves decode).  The
         prompt pages are charged since enqueue; only the generated tokens
@@ -1213,7 +1224,7 @@ class Cluster:
                     self._transfer_to_decode(dst, req,
                                              tokens=req.total_tokens)
 
-    def _evict_partial(self, entry: Dict) -> None:
+    def _evict_partial(self, entry: Dict) -> None:  # holds: _lock
         """Refund a live destination for a stream that died mid-flight:
         every page charged there for this request (landed chunks, the
         admission top-up, decode appends) comes back off its ledger, and
@@ -1240,7 +1251,7 @@ class Cluster:
                 self._fail_request(req)
 
     # ------------------------------------------------- remote prefix fetch
-    def _maybe_prefix_fetch(self, req: Request, dst: SimInstance) -> bool:
+    def _maybe_prefix_fetch(self, req, dst) -> bool:  # holds: _lock
         """Cross-instance prefix reuse (v6): if a PEER instance caches a
         strictly longer prefix of this prompt than the routed destination
         and the cost model says copying those blocks over the KV path
@@ -1365,8 +1376,7 @@ class Cluster:
                                        have_from=entry["start"])
                 self._submit_after_fetch(req, dst)
 
-    def _submit_after_fetch(self, req: Request,
-                            dst: Optional[SimInstance]) -> None:
+    def _submit_after_fetch(self, req, dst) -> None:  # holds: _lock
         """Deliver a cluster-parked request after its prefix fetch settled
         (or failed): to the fetch destination if it still serves prefill,
         else through fresh routing.  Never starts another fetch."""
@@ -1432,7 +1442,7 @@ class Cluster:
             self.role_flips += 1
             return True
 
-    def _rebalance_prefill_queues(self) -> None:
+    def _rebalance_prefill_queues(self) -> None:  # holds: _lock
         """Re-route every not-yet-admitted prefill through the cluster
         policy (arrival order preserved).  Cheap: waiting requests hold no
         KV and no daemon state, so moving them is pure routing."""
@@ -1468,59 +1478,68 @@ class Cluster:
         list of objects with ``initial()`` / ``on_complete(req, now)`` /
         ``exhausted()`` — e.g. :class:`repro.traffic.ClosedLoopPool`), or
         both."""
-        if traffic is not None:
-            self._sources = list(traffic) if isinstance(
-                traffic, (list, tuple)) else [traffic]
-        for req in (workload or []):
-            self.loop.at(req.arrival_time, lambda r=req: self.submit(r))
-        for src in self._sources:
-            for req in src.initial():
+        with self._lock:
+            # the threaded drive's daemon engine threads are already live
+            # here: attach sources and schedule arrivals under the same
+            # lock every terminal-transition path takes
+            if traffic is not None:
+                self._sources = list(traffic) if isinstance(
+                    traffic, (list, tuple)) else [traffic]
+            for req in (workload or []):
                 self.loop.at(req.arrival_time, lambda r=req: self.submit(r))
+            for src in self._sources:
+                for req in src.initial():
+                    self.loop.at(req.arrival_time,
+                                 lambda r=req: self.submit(r))
         if self.drive == "threaded":
             self.loop.run(until=until, idle=lambda: not self._outstanding())
             self.close()   # stop daemon dispatch threads (leak-free)
         else:
             self.loop.run(until=until)
         from repro.serving.request import summarize
-        out = summarize(self.requests)
-        out["chips"] = self.deploy.total_chips
-        out["mode"] = self.deploy.mode
-        out["drive"] = self.drive
-        retries = sum(r.retries for r in self.requests)
-        if retries:
-            out["retries"] = retries
-        # honest shedding telemetry (v5): the instances' rejection counters
-        # must agree with the REJECTED request states summarize() counted —
-        # a policy cannot drop work without it showing up here
-        shed = sum(i.rejected for i in self.instances)
-        if shed or self.deploy.admission_policy:
-            out["shed_requests"] = shed
-        if self.link_model.completed:
-            out.update(self.link_model.stats())
-            out["topology"] = self.topology.name
-            out["kv_chunk_tokens"] = self.sim_cfg.kv_chunk_tokens
-            # decode stalls: requests that finished decoding before their
-            # KV tail landed (visible cost of streaming too coarsely)
-            out["decode_stall_s"] = round(
-                sum(i.decode_stall_s for i in self.instances), 6)
-            out["decode_stalls"] = sum(i.stalls for i in self.instances)
-        if self.sim_cfg.compute_queues > 1 or self.sim_cfg.copy_queues > 1 \
-                or self.sim_cfg.chunk_prefill_tokens:
-            out["queues"] = {
-                "compute": max(1, self.sim_cfg.compute_queues),
-                "copy": max(1, self.sim_cfg.copy_queues),
-                "chunk_prefill_tokens": self.sim_cfg.chunk_prefill_tokens}
-        if self.drive == "threaded":
-            # per-op dispatch-overhead calibration (measured at backend
-            # startup, folded into the wall-clock pacing) — recorded so
-            # BENCH artifacts show how faithful the threaded timing was
-            out["calibration"] = self._backend.calibration()
-        if self._prefix_on:
-            out["prefix_cache"] = self.prefix_cache_telemetry()
-        out["policy"] = self.policy_telemetry()
-        return out
+        with self._lock:
+            out = summarize(self.requests)
+            out["chips"] = self.deploy.total_chips
+            out["mode"] = self.deploy.mode
+            out["drive"] = self.drive
+            retries = sum(r.retries for r in self.requests)
+            if retries:
+                out["retries"] = retries
+            # honest shedding telemetry (v5): the instances' rejection
+            # counters must agree with the REJECTED request states
+            # summarize() counted — a policy cannot drop work without it
+            # showing up here
+            shed = sum(i.rejected for i in self.instances)
+            if shed or self.deploy.admission_policy:
+                out["shed_requests"] = shed
+            if self.link_model.completed:
+                out.update(self.link_model.stats())
+                out["topology"] = self.topology.name
+                out["kv_chunk_tokens"] = self.sim_cfg.kv_chunk_tokens
+                # decode stalls: requests that finished decoding before
+                # their KV tail landed (cost of streaming too coarsely)
+                out["decode_stall_s"] = round(
+                    sum(i.decode_stall_s for i in self.instances), 6)
+                out["decode_stalls"] = sum(i.stalls for i in self.instances)
+            if self.sim_cfg.compute_queues > 1 \
+                    or self.sim_cfg.copy_queues > 1 \
+                    or self.sim_cfg.chunk_prefill_tokens:
+                out["queues"] = {
+                    "compute": max(1, self.sim_cfg.compute_queues),
+                    "copy": max(1, self.sim_cfg.copy_queues),
+                    "chunk_prefill_tokens":
+                        self.sim_cfg.chunk_prefill_tokens}
+            if self.drive == "threaded":
+                # per-op dispatch-overhead calibration (measured at backend
+                # startup, folded into the wall-clock pacing) — recorded so
+                # BENCH artifacts show how faithful the threaded timing was
+                out["calibration"] = self._backend.calibration()
+            if self._prefix_on:
+                out["prefix_cache"] = self.prefix_cache_telemetry()
+            out["policy"] = self.policy_telemetry()
+            return out
 
-    def prefix_cache_telemetry(self) -> Dict:
+    def prefix_cache_telemetry(self) -> Dict:  # holds: _lock
         """Prefix-reuse observability (v6): aggregate hit rate, recompute
         FLOPs avoided, and cross-instance fetch traffic, plus the raw
         per-instance cache stats — folded into ``run`` results so
@@ -1551,7 +1570,7 @@ class Cluster:
         """Stop daemon threads (threaded drive); idempotent."""
         self.session.close()
 
-    def policy_telemetry(self) -> Dict:
+    def policy_telemetry(self) -> Dict:  # holds: _lock
         """Control-plane observability: per-daemon dispatch debug state
         (realized decode share, targets), cluster-policy state (role flips,
         pressure), current roles, and queue depths.  Folded into ``run``
@@ -1623,7 +1642,7 @@ class Cluster:
         with self._lock:
             return self._fail_instance_locked(name)
 
-    def _fail_instance_locked(self, name: str) -> int:
+    def _fail_instance_locked(self, name: str) -> int:  # holds: _lock
         inst = next(i for i in self.instances if i.name == name)
         lost = inst.fail()
         n_lost = len(lost)
@@ -1723,8 +1742,11 @@ class Cluster:
             return n
 
     def slow_instance(self, name: str, factor: float) -> None:
-        inst = next(i for i in self.instances if i.name == name)
-        inst.slow_factor = factor
+        # threaded drive: op_duration reads slow_factor from daemon engine
+        # threads — publish the straggler injection under the shared lock
+        with self._lock:
+            inst = next(i for i in self.instances if i.name == name)
+            inst.slow_factor = factor
 
     def utilization(self) -> Dict[str, float]:
         return {i.name: i.daemon.profiler.device_utilization(self.loop.clock.t)

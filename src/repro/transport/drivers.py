@@ -92,7 +92,9 @@ class ThreadedLinkTimer:
 
     def __init__(self, model: LinkModel, clock, scale: float,
                  sleep_overhead_s: float = 0.0):
-        self.model = model
+        # the shared LinkModel: every mutation/poll runs under _lock (the
+        # copy-engine worker threads and fault injectors all route here)
+        self.model = model                   # guarded-by: _lock
         self.clock = clock
         self.scale = float(scale)
         self.sleep_overhead_s = float(sleep_overhead_s)

@@ -1,0 +1,572 @@
+"""repro.analysis tests: flexlint passes, the happens-before hazard
+sanitizer, and regressions for the bugs the tooling surfaced.
+
+Structure:
+  * per-pass fixture snippets (positive, negative, allowlisted) driven
+    through the real lint driver over a ``tmp_path/repro/...`` tree;
+  * vector-clock unit tests against stub daemons/ops (FIFO, event, and
+    memcpy-peer edges; free-vs-use);
+  * sanitizer end-to-end over live sessions and the dual-drive cluster;
+  * regressions for the enqueue/fail race, the engine's terminal
+    FAILED accounting, and the removed ``engine_slots`` compat name.
+"""
+import copy
+import textwrap
+import threading
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+from conftest import drive_modes
+
+from repro.analysis import lint
+from repro.analysis.hazards import HazardSanitizer, sanitize_enabled
+from repro.configs import get_config
+from repro.core import connect
+from repro.core.api import (Future, MemcpyKind, OpDescriptor, OpType)
+from repro.core.daemon import FlexDaemon
+from repro.serving import Cluster, deployment_6p2d, make_workload
+from repro.serving.request import Request, RequestState
+
+
+# --------------------------------------------------------------- helpers
+def lint_snippet(tmp_path, source, rel="repro/serving/flexfix_mod.py"):
+    """Lint one dedented fixture snippet placed under a repro-anchored
+    tree (module names resolve, so the layering pass ranks it)."""
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(source))
+    return path, lint.lint_paths([str(path)])
+
+
+def rules(findings):
+    return [f.rule for f in findings]
+
+
+# ==================================================== pass: lock-discipline
+LOCK_FIXTURE = """
+    import threading
+
+    class Cluster:
+        def __init__(self):
+            self._lock = threading.RLock()
+            self.requests = []   # guarded-by: _lock
+
+        def locked(self):
+            with self._lock:
+                self.requests.append(1)
+
+        def marked(self):  # holds: _lock
+            self.requests.append(2)
+"""
+
+
+def test_lock_discipline_clean_fixture(tmp_path):
+    _, findings = lint_snippet(tmp_path, LOCK_FIXTURE)
+    assert findings == []
+
+
+def test_lock_discipline_flags_unguarded_access(tmp_path):
+    _, findings = lint_snippet(tmp_path, LOCK_FIXTURE + """
+        def bare(self):
+            return len(self.requests)
+    """)
+    assert rules(findings) == ["lock-discipline"]
+    assert "touched outside" in findings[0].message
+    assert "Cluster.requests" in findings[0].message
+
+
+def test_lock_discipline_allowlist_with_reason(tmp_path):
+    _, findings = lint_snippet(tmp_path, LOCK_FIXTURE + """
+        def bare(self):
+            # flexlint: ignore[lock-discipline] -- advisory read only
+            return len(self.requests)
+    """)
+    assert findings == []
+
+
+def test_lock_discipline_reasonless_ignore_is_a_finding(tmp_path):
+    _, findings = lint_snippet(tmp_path, LOCK_FIXTURE + """
+        def bare(self):
+            return len(self.requests)  # flexlint: ignore[lock-discipline]
+    """)
+    # the original finding survives AND the bare ignore is flagged
+    assert sorted(rules(findings)) == ["bad-ignore", "lock-discipline"]
+
+
+def test_lock_discipline_ignore_must_be_adjacent(tmp_path):
+    # an ignore separated from the code by another comment line does not
+    # carry — only the line itself or the one directly above counts
+    _, findings = lint_snippet(tmp_path, LOCK_FIXTURE + """
+        def bare(self):
+            # flexlint: ignore[lock-discipline] -- too far away
+            # a second comment line breaks adjacency
+            return len(self.requests)
+    """)
+    assert rules(findings) == ["lock-discipline"]
+
+
+def test_lock_discipline_condition_alias_counts_as_lock(tmp_path):
+    _, findings = lint_snippet(tmp_path, """
+        import threading
+
+        class Cluster:
+            def __init__(self):
+                self._lock = threading.RLock()
+                self._all_done = threading.Condition(
+                    self._lock)  # lock-alias: _lock
+                self.outstanding = 0  # guarded-by: _lock
+
+            def wake(self):
+                with self._all_done:
+                    self.outstanding -= 1
+    """)
+    assert findings == []
+
+
+def test_lock_discipline_holds_method_needs_locked_caller(tmp_path):
+    _, findings = lint_snippet(tmp_path, """
+        import threading
+
+        class Cluster:
+            def __init__(self):
+                self._lock = threading.RLock()
+                self.items = []  # guarded-by: _lock
+
+            def _drain(self):  # holds: _lock
+                self.items.clear()
+
+            def inside(self):
+                with self._lock:
+                    self._drain()
+
+            def outside(self):
+                self._drain()
+    """)
+    assert rules(findings) == ["lock-discipline"]
+    assert "requires the caller to hold" in findings[0].message
+
+
+def test_lock_order_flags_inverted_nesting(tmp_path):
+    path, findings = lint_snippet(tmp_path, """
+        class Anything:
+            def bad(self):
+                with self.lock:      # level 30 (handle table)
+                    with self._cv:   # level 20 (daemon) -- inverted
+                        pass
+
+            def fine(self):
+                with self._cv:
+                    with self.lock:
+                        pass
+    """)
+    assert rules(findings) == ["lock-order"]
+    assert "strictly increasing" in findings[0].message
+    assert findings[0].line == 5
+
+
+# ========================================================= pass: layering
+def test_layering_rank_violation_and_banned_shim(tmp_path):
+    _, findings = lint_snippet(tmp_path, """
+        import repro.sched
+        import repro.core.scheduler
+    """, rel="repro/core/flexfix_layer.py")
+    assert rules(findings) == ["layering", "layering"]
+    assert "rank 0" in findings[0].message and "rank 3" in findings[0].message
+    assert "removed in v4" in findings[1].message
+
+
+def test_layering_submodule_pull_is_ranked(tmp_path):
+    _, findings = lint_snippet(tmp_path, """
+        from repro import traffic
+    """, rel="repro/transport/flexfix_pull.py")
+    assert rules(findings) == ["layering"]
+    assert "repro.traffic" in findings[0].message
+
+
+def test_layering_allowlisted_upward_edge(tmp_path):
+    _, findings = lint_snippet(tmp_path, """
+        # flexlint: ignore[layering] -- documented cycle-break (fixture)
+        import repro.sched
+    """, rel="repro/core/flexfix_allow.py")
+    assert findings == []
+
+
+def test_layering_bans_engine_slots_attribute(tmp_path):
+    _, findings = lint_snippet(tmp_path, """
+        def probe(daemon, ctx):
+            n = daemon.engine_slots      # expired v4 compat name
+            m = ctx.engine_slots         # PolicyContext keeps the name
+            return n, m
+    """)
+    assert rules(findings) == ["layering"]
+    assert findings[0].line == 3
+    assert "queue_slots" in findings[0].message
+
+
+# ================================================ pass: registry-contract
+REG_FIXTURE = """
+    from repro.registry import Registry
+
+    def make_thing(alpha, beta=1):
+        return (alpha, beta)
+
+    def make_any(**knobs):
+        return knobs
+
+    REG = Registry("demo")
+    REG.register("open", make_any, knobs=("whatever",))
+"""
+
+
+def test_registry_contract_clean_fixture(tmp_path):
+    _, findings = lint_snippet(
+        tmp_path,
+        REG_FIXTURE
+        + '    REG.register("thing", make_thing, knobs=("alpha",))\n')
+    assert findings == []
+
+
+def test_registry_contract_flags_unknown_knob(tmp_path):
+    _, findings = lint_snippet(
+        tmp_path,
+        REG_FIXTURE
+        + '    REG.register("thing", make_thing, knobs=("alpha", "gamma"))\n')
+    assert rules(findings) == ["registry-contract"]
+    assert "'thing'" in findings[0].message
+    assert "gamma" in findings[0].message
+
+
+# =================================================== pass: terminal-state
+def test_terminal_state_flags_write_outside_helpers(tmp_path):
+    _, findings = lint_snippet(tmp_path, """
+        from repro.serving.request import RequestState
+
+        def sweep(req):
+            req.state = RequestState.FAILED
+    """)
+    assert rules(findings) == ["terminal-state"]
+    assert "ledger-release helper" in findings[0].message
+
+
+def test_terminal_state_helper_must_stamp_finish_time(tmp_path):
+    _, findings = lint_snippet(tmp_path, """
+        from repro.serving.request import RequestState
+
+        class Engine:
+            def _fail_locked(self, req):
+                req.state = RequestState.FAILED
+
+            def _finish_locked(self, req):
+                req.state = RequestState.DONE
+                req.finish_time = 1.0
+    """)
+    assert rules(findings) == ["terminal-state"]
+    assert "finish_time" in findings[0].message
+    assert findings[0].line == 6
+
+
+# =================================================== driver: CLI contract
+def test_seeded_violation_names_rule_and_line(tmp_path, capsys):
+    path = tmp_path / "repro" / "flexfix_seeded.py"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text("from repro.serving.request import RequestState\n"
+                    "\n"
+                    "def drop(req):\n"
+                    "    req.state = RequestState.FAILED\n")
+    assert lint.main([str(path)]) == 1
+    out = capsys.readouterr().out
+    assert f"{path}:4: [terminal-state]" in out
+    assert "flexlint: 1 finding(s)" in out
+
+
+def test_clean_tree_exits_zero(tmp_path, capsys):
+    path = tmp_path / "repro" / "flexfix_clean.py"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text("X = 1\n")
+    assert lint.main([str(path)]) == 0
+    assert "flexlint: clean" in capsys.readouterr().out
+
+
+# ============================================= sanitizer: vector clocks
+def _daemon_stub(device_id=0):
+    return SimpleNamespace(device_id=device_id)
+
+
+def _h2d(handle, vstream):
+    return OpDescriptor(OpType.MEMCPY, vstream=vstream, vhandles=(handle,),
+                        meta={"kind": MemcpyKind.H2D})
+
+
+def _d2h(handle, vstream):
+    return OpDescriptor(OpType.MEMCPY, vstream=vstream, vhandles=(handle,),
+                        meta={"kind": MemcpyKind.D2H})
+
+
+def test_same_stream_fifo_orders_writes():
+    san, d = HazardSanitizer(), _daemon_stub()
+    san.on_complete(d, _h2d(7, vstream=1))
+    san.on_complete(d, _h2d(7, vstream=1))
+    assert san.hazards == []
+
+
+def test_unordered_cross_stream_writes_conflict():
+    san, d = HazardSanitizer(), _daemon_stub()
+    san.on_complete(d, _h2d(7, vstream=1))
+    san.on_complete(d, _h2d(7, vstream=2))
+    assert len(san.hazards) == 1
+    assert "write-write hazard" in san.hazards[0]
+    assert "no happens-before edge" in san.hazards[0]
+
+
+def test_record_wait_event_edge_suppresses_conflict():
+    san, d = HazardSanitizer(), _daemon_stub()
+    san.on_complete(d, _h2d(7, vstream=1))
+    san.on_complete(d, OpDescriptor(OpType.RECORD_EVENT, vstream=1,
+                                    vhandles=(5,)))
+    san.on_complete(d, OpDescriptor(OpType.WAIT_EVENT, vstream=2,
+                                    vhandles=(5,)))
+    san.on_complete(d, _h2d(7, vstream=2))
+    assert san.hazards == []
+
+
+def test_memcpy_peer_write_needs_shared_event_edge():
+    san = HazardSanitizer()
+    d0, d1 = _daemon_stub(0), _daemon_stub(1)
+
+    def run_pair(with_edge):
+        peer = OpDescriptor(OpType.MEMCPY_PEER, vstream=1, vhandles=(4,),
+                            meta={"_dst_daemon": d1, "dst_handle": 9})
+        san.on_complete(d0, peer)          # writes (dev1, handle 9)
+        if with_edge:
+            san.on_complete(d0, OpDescriptor(OpType.RECORD_EVENT, vstream=1,
+                                             vhandles=(-3,)))
+            san.on_complete(d1, OpDescriptor(OpType.WAIT_EVENT, vstream=1,
+                                             vhandles=(-3,)))
+        san.on_complete(d1, _d2h(9, vstream=1))
+        return san.drain()
+
+    hazards = run_pair(with_edge=False)
+    assert len(hazards) == 1 and "write-read hazard" in hazards[0]
+    san = HazardSanitizer()
+    assert run_pair(with_edge=True) == []
+
+
+def test_host_observation_edge_orders_later_enqueues():
+    # await-then-enqueue is synchronization: result() publishes the op's
+    # clock to the host, and the next enqueue snapshots it
+    san, d = HazardSanitizer(), _daemon_stub()
+    m1 = _h2d(7, vstream=1)
+    san.on_complete(d, m1)
+    m1.future.set_result(None)
+    m1.future.result()
+    m2 = _h2d(7, vstream=2)
+    san.on_enqueue(d, m2)
+    san.on_complete(d, m2)
+    assert san.hazards == []
+
+
+def test_completion_without_observation_publishes_nothing():
+    # fire-and-forget: the op completed before the second enqueue, but
+    # the host never looked — still a racy program, still reported
+    san, d = HazardSanitizer(), _daemon_stub()
+    m1 = _h2d(7, vstream=1)
+    san.on_complete(d, m1)
+    m1.future.set_result(None)
+    m2 = _h2d(7, vstream=2)
+    san.on_enqueue(d, m2)
+    san.on_complete(d, m2)
+    assert len(san.hazards) == 1
+    assert "write-write hazard" in san.hazards[0]
+
+
+def test_done_callback_counts_as_host_observation():
+    san, d = HazardSanitizer(), _daemon_stub()
+    m1 = _h2d(7, vstream=1)
+    san.on_complete(d, m1)
+    m1.future.add_done_callback(lambda f: None)
+    m1.future.set_result(None)         # callback fires -> host edge
+    m2 = _h2d(7, vstream=2)
+    san.on_enqueue(d, m2)
+    san.on_complete(d, m2)
+    assert san.hazards == []
+
+
+def test_free_vs_use_reported_and_malloc_resets():
+    san, d = HazardSanitizer(), _daemon_stub()
+    san.on_malloc(d, 7)
+    san.on_complete(d, _h2d(7, vstream=1))
+    san.on_free(d, 7)
+    san.on_complete(d, _d2h(7, vstream=2))
+    assert len(san.hazards) == 1
+    assert "free-vs-use hazard" in san.hazards[0]
+    san.drain()
+    san.on_malloc(d, 7)                    # fresh allocation, clean slate
+    san.on_complete(d, _h2d(7, vstream=3))
+    assert san.hazards == []
+
+
+# ============================================== sanitizer: live sessions
+def test_sanitizer_off_by_default(monkeypatch):
+    monkeypatch.delenv("FLEX_SANITIZE", raising=False)
+    assert not sanitize_enabled()
+    with connect(mode="flex", devices=1) as sess:
+        assert sess.sanitizer is None
+
+
+def test_dropped_event_wait_edge_is_write_write_hazard(monkeypatch):
+    monkeypatch.setenv("FLEX_SANITIZE", "1")
+    sess = connect(mode="flex", devices=1)
+    try:
+        s1, s2 = sess.create_stream(), sess.create_stream()
+        h = sess.malloc(1 << 12)
+        buf = np.zeros(1 << 12, np.uint8)
+        sess.memcpy(h, buf, vstream=s1)
+        # the event edge a correct program would put here is deliberately
+        # dropped: two same-buffer writes race across vstreams
+        sess.memcpy(h, buf, vstream=s2)
+        sess.synchronize(None)
+        hazards = sess.sanitizer.drain()
+        assert any("write-write hazard" in hz for hz in hazards)
+    finally:
+        sess.sanitizer.drain()
+        sess.close()
+
+
+def test_event_ordered_session_is_hazard_clean(monkeypatch):
+    monkeypatch.setenv("FLEX_SANITIZE", "1")
+    with connect(mode="flex", devices=1) as sess:
+        s1, s2 = sess.create_stream(), sess.create_stream()
+        ev = sess.create_event()
+        h = sess.malloc(1 << 12)
+        buf = np.zeros(1 << 12, np.uint8)
+        sess.memcpy(h, buf, vstream=s1)
+        sess.record_event(ev, s1)
+        sess.wait_event(ev, s2)
+        sess.memcpy(h, buf, vstream=s2)
+        sess.synchronize(None)
+        assert sess.sanitizer.hazards == []
+    # context exit closes the session: close() itself raises on hazards
+
+
+def test_session_close_raises_on_hazards(monkeypatch):
+    monkeypatch.setenv("FLEX_SANITIZE", "1")
+    sess = connect(mode="flex", devices=1)
+    s1, s2 = sess.create_stream(), sess.create_stream()
+    h = sess.malloc(1 << 12)
+    buf = np.zeros(1 << 12, np.uint8)
+    sess.memcpy(h, buf, vstream=s1)
+    sess.memcpy(h, buf, vstream=s2)
+    sess.synchronize(None)
+    with pytest.raises(RuntimeError, match="happens-before hazard"):
+        sess.close()
+
+
+@pytest.mark.parametrize("drive", drive_modes())
+def test_cluster_dual_drive_is_hazard_clean(monkeypatch, drive):
+    """The full disagg pipeline (prefill, peer KV copies, shared-event
+    ordering, decode) produces zero hazards under FLEX_SANITIZE=1 in
+    both drive modes — the acceptance bar the CI leg enforces."""
+    monkeypatch.setenv("FLEX_SANITIZE", "1")
+    cluster = Cluster(get_config("mixtral-8x7b"), deployment_6p2d(),
+                      drive=drive, time_scale=0.02)
+    wl = make_workload(24, 1024, 16, rate=1000.0, seed=21)
+    res = cluster.run(copy.deepcopy(wl), until=36000)
+    assert res["completed"] == 24
+    assert cluster.session.sanitizer is not None
+    assert cluster.session.sanitizer.hazards == []
+
+
+# ===================================================== regressions (fixes)
+class _FlipBackend:
+    """now() flips the daemon's fault flag once armed — landing exactly
+    in the window between enqueue's unlocked head check and the
+    authoritative re-check under ``_cv`` (the race flexlint surfaced)."""
+
+    def __init__(self):
+        self.daemon = None
+        self.armed = False
+        self.t = 0.0
+
+    def now(self):
+        if self.armed and self.daemon is not None:
+            with self.daemon._cv:
+                self.daemon.failed = True
+            self.armed = False
+        self.t += 1.0
+        return self.t
+
+    def estimate(self, op):
+        return 1.0
+
+
+def test_enqueue_fail_race_rejects_instead_of_wedging():
+    be = _FlipBackend()
+    d = FlexDaemon(0, be)
+    be.daemon = d
+    op = OpDescriptor(OpType.MEMCPY, vstream=1, vhandles=(7,),
+                      meta={"kind": MemcpyKind.H2D, "nbytes": 64})
+    be.armed = True
+    fut = d.enqueue(op)
+    with pytest.raises(RuntimeError, match="device 0 failed"):
+        fut.result(timeout=1.0)
+    # nothing queued for a dispatcher that will never run it
+    assert all(not q for q in d.queues.values())
+    assert not any(d._stream_pending.values())
+    assert not d._mem_refs
+
+
+def test_enqueue_fail_race_drops_pretaken_peer_ref():
+    be = _FlipBackend()
+    d0, d1 = FlexDaemon(0, be), FlexDaemon(1, _FlipBackend())
+    be.daemon = d0
+    op = OpDescriptor(OpType.MEMCPY_PEER, vstream=1, vhandles=(4,),
+                      meta={"_dst_daemon": d1, "dst_handle": 9, "nbytes": 64})
+    be.armed = True
+    fut = d0.enqueue(op)
+    with pytest.raises(RuntimeError, match="device 0 failed"):
+        fut.result(timeout=1.0)
+    # the destination ref taken before our lock must be returned, or the
+    # peer's buffer can never be freed
+    assert d1._mem_refs.get(9, 0) == 0
+    assert not d0._mem_refs
+
+
+def _engine_harness():
+    from repro.serving.engine import RealEngine
+    eng = RealEngine.__new__(RealEngine)
+    eng._lock = threading.RLock()
+    eng._all_done = threading.Condition(eng._lock)
+    eng.waiting_admission = []
+    eng.admission = SimpleNamespace(shed=lambda *a: [])
+    eng.outstanding = 1
+    eng.finished = []
+    eng.rejected = []
+    eng.on_request_done = None
+    return eng
+
+
+def test_prefill_failure_is_a_full_ledger_event():
+    """A failed prefill future must land as a terminal FAILED with
+    finish_time stamped and the outstanding count released — the
+    terminal-state violation flexlint caught in the real engine."""
+    eng = _engine_harness()
+    done = []
+    eng.on_request_done = done.append
+    req = Request(prompt_len=8, max_new_tokens=4)
+    rep = SimpleNamespace(prefilling_count=1)
+    fut = Future()
+    fut.set_error(RuntimeError("boom"))
+    eng._prefill_done(rep, req, fut, time.monotonic())
+    assert req.state is RequestState.FAILED
+    assert req.finish_time > 0
+    assert eng.outstanding == 0
+    assert rep.prefilling_count == 0
+    assert done == [req]
+
+
+def test_engine_slots_compat_property_removed():
+    d = FlexDaemon(0, _FlipBackend())
+    assert not hasattr(d, "engine_slots")
+    assert d.queue_slots            # the v7 surface callers migrated to
