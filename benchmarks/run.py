@@ -31,6 +31,7 @@ MODULES = [
     ("microbatch_prefill", "benchmarks.microbatch_prefill"),
     ("roofline", "benchmarks.roofline"),
     ("kernels", "benchmarks.kernels_microbench"),
+    ("sim_throughput", "benchmarks.sim_throughput"),
 ]
 
 

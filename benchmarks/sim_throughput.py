@@ -1,0 +1,132 @@
+"""Raw simulator throughput: events/sec and sim-ops/sec on a 384-chip run.
+
+Every remaining experiment (predictive scheduling from traces, elastic
+churn, DeepSeek-R1-scale sweeps) is bounded by how fast the stepped drive
+chews through events — this benchmark makes that a first-class number and
+CI gates on it (benchmarks/validate_artifacts.py fails bench-smoke when
+``events_per_s`` goes missing, NaN, or regresses >30% below the recorded
+floor).
+
+Scenarios are ``examples/cluster_sim_384.py``-shaped: mixtral-8x7b on the
+full 384-chip fleet, both deployments (FlexNPU dynamic 3x128 co-location —
+the dispatch-policy-heavy path — and static 6P2D disaggregation — the
+LinkModel/KV-streaming-heavy path), 1K-1K workload at rate 1e5.
+
+Metrics per scenario:
+  * ``events_per_s``  — event-loop callbacks executed per wall second;
+  * ``ops_per_s``     — daemon ops completed per wall second (the
+    simulated work actually retired, insensitive to how many loop
+    events one op costs);
+  * ``wall_s`` / ``sim_s`` — wall clock vs simulated seconds covered.
+
+``BASELINE_EVENTS_PER_S`` records the pre-optimization numbers measured on
+the same scenarios (PR 9's starting point, dev machine) so artifacts carry
+the speedup factor; ``FLOOR_EVENTS_PER_S`` is the conservative regression
+floor CI enforces (set well below a typical CI runner so machine variance
+does not false-fail, but far above the pre-optimization baseline).
+"""
+from __future__ import annotations
+
+import copy
+import math
+import time
+
+# pre-PR baseline (events/sec, measured before the batched event loop /
+# vectorized cost model landed) — recorded in every artifact row so the
+# speedup factor is auditable
+BASELINE_EVENTS_PER_S = {
+    "dynamic.small": 6343.4,
+    "dynamic.medium": 3441.0,
+    "disagg.small": 6858.7,
+    "disagg.medium": 5444.7,
+}
+
+# CI regression floor: validate_artifacts fails when measured events/sec
+# drops more than 30% below this.  Deliberately conservative (CI runners
+# are slower and noisier than the dev machine that recorded it).
+FLOOR_EVENTS_PER_S = {
+    "dynamic.small": 4000.0,
+    "dynamic.medium": 4200.0,
+    "disagg.small": 4000.0,
+    "disagg.medium": 4400.0,
+}
+
+# (size, n_requests): medium is the ISSUE-9 acceptance scenario
+SIZES = (("small", 120), ("medium", 600))
+
+
+def _scenarios():
+    from repro.serving import deployment_6p2d, deployment_dynamic
+    return (("dynamic", deployment_dynamic()),
+            ("disagg", deployment_6p2d()))
+
+
+def _completed_ops(cluster) -> int:
+    return sum(s.ops_completed
+               for inst in cluster.instances
+               for s in inst.daemon.profiler.stats.values())
+
+
+def run(quick: bool = False, sizes=SIZES):
+    from repro.configs import get_config
+    from repro.serving import Cluster, SimConfig, make_workload
+
+    cfg = get_config("mixtral-8x7b")
+    if quick:
+        sizes = tuple(s for s in sizes if s[0] == "small")
+    rows = []
+    for deploy_name, deploy in _scenarios():
+        for size, n in sizes:
+            wl = make_workload(n, 1024, 1024, rate=1e5, seed=3)
+            cluster = Cluster(cfg, copy.deepcopy(deploy),
+                              sim_cfg=SimConfig())
+            t0 = time.perf_counter()
+            res = cluster.run(copy.deepcopy(wl), until=72000)
+            wall = time.perf_counter() - t0
+            cluster.check_kv_conservation()
+            key = f"{deploy_name}.{size}"
+            events = cluster.loop.events
+            ops = _completed_ops(cluster)
+            ev_rate = events / wall if wall > 0 else math.nan
+            baseline = BASELINE_EVENTS_PER_S.get(key, 0.0)
+            derived = {
+                "scenario": key,
+                "requests": n,
+                "completed": res["completed"],
+                "events": events,
+                "ops": ops,
+                "wall_s": round(wall, 4),
+                "sim_s": round(cluster.loop.clock.t, 3),
+                "events_per_s": round(ev_rate, 1),
+                "ops_per_s": round(ops / wall, 1) if wall > 0 else math.nan,
+                "floor_events_per_s": FLOOR_EVENTS_PER_S.get(key, 0.0),
+                "baseline_events_per_s": baseline,
+            }
+            if baseline > 0:
+                derived["speedup_vs_baseline"] = round(ev_rate / baseline, 2)
+            rows.append((f"sim_throughput.{key}", wall * 1e6 / max(events, 1),
+                         derived))
+    return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    from benchmarks._cli import emit_rows
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: small scenarios only")
+    ap.add_argument("--medium", action="store_true",
+                    help="run the medium (acceptance-gate) scenarios too")
+    ap.add_argument("--json", default="",
+                    help="also write the rows to this JSON file")
+    args = ap.parse_args(argv)
+    quick = (args.quick or args.smoke) and not args.medium
+    rows = run(quick=quick)
+    emit_rows(rows, args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,11 @@ Checks (per row):
     ``completed + rejected (+ failed) == generated`` — shed requests must
     be counted, never silently dropped;
   * rows flagged ``conserved`` actually say true;
+  * simulator-throughput rows (PR 9): ``events_per_s`` must be present,
+    finite, and > 0 wherever a row carries it, and must not fall more
+    than 30% below the row's recorded ``floor_events_per_s`` — a raw
+    sim-speed regression fails CI instead of silently eating every
+    downstream sweep's wall-clock budget;
   * prefix-reuse telemetry (v6) is honest wherever it appears:
     ``hit_rate`` finite in [0, 1], ``flops_saved`` and
     ``remote_fetch_bytes`` finite and >= 0 — and a row that claims reuse
@@ -64,6 +69,21 @@ def check_row(row: dict, where: str) -> list:
                 f" = {total} != generated = {d['generated']}")
     if d.get("conserved") is False:
         errors.append(f"{where}: row self-reports conserved=false")
+    if "events_per_s" in d:
+        ev = d["events_per_s"]
+        if not _finite(ev) or ev <= 0:
+            errors.append(f"{where}: events_per_s = {ev!r} "
+                          "(must be finite and > 0)")
+        else:
+            floor = d.get("floor_events_per_s")
+            if not _finite(floor):
+                errors.append(f"{where}: events_per_s without a finite "
+                              f"floor_events_per_s ({floor!r})")
+            elif floor > 0 and ev < 0.7 * floor:
+                errors.append(
+                    f"{where}: events_per_s = {ev} regressed >30% below "
+                    f"the recorded floor {floor} — simulator hot path "
+                    "got slower")
     if "hit_rate" in d:
         hr = d["hit_rate"]
         if not _finite(hr) or not 0.0 <= hr <= 1.0:

@@ -140,11 +140,14 @@ class FlexDaemon:
                  policy: Optional[SchedulerPolicy] = None,
                  profiler: Optional[Profiler] = None,
                  shared_events: Optional[SharedEventTable] = None,
-                 queues=None, sanitizer=None):
+                 queues=None, sanitizer=None, timeline=None):
         self.device_id = device_id
         self.backend = backend
         self.policy = policy or FIFOPolicy()
         self.profiler = profiler or Profiler()
+        # opt-in per-op Chrome-trace recorder (FLEX_PROFILE=1; one per
+        # session, see repro.core.profiler.Timeline) — None means off
+        self.timeline = timeline
         self.queues: Dict[Phase, Deque[OpDescriptor]] = {  # guarded-by: _cv
             p: deque() for p in Phase}
         self.streams = HandleTable("stream")
@@ -173,6 +176,9 @@ class FlexDaemon:
         # behavior: copy-engine memcpys overlap compute launches; extra
         # compute queues let compute ops overlap each other too.
         self.queue_slots: Dict[str, int] = parse_queue_spec(queues)
+        # immutable after init — lets the select fast path answer
+        # "every queue busy?" in O(1) instead of rebuilding free lists
+        self._total_slots = sum(self.queue_slots.values())
         self._queue_inflight: Dict[QueueId, OpDescriptor] = {}  # guarded-by: _cv
         self._queue_workers: Dict[QueueId, "queue.Queue"] = {}
         self._queue_threads: List[threading.Thread] = []
@@ -495,42 +501,76 @@ class FlexDaemon:
         May be called repeatedly before any completion: it hands out at most
         one op per free execution queue, so a driver that loops until
         ``None`` gets a compute op AND a copy-engine op (and, on a
-        multi-queue device, several compute ops) to run concurrently."""
+        multi-queue device, several compute ops) to run concurrently.
+
+        The policy's ``select`` is consulted on EVERY call — including
+        calls where nothing is dispatchable — so observing policies see
+        the full context stream (the v4 contract)."""
         with self._cv:
-            if self.failed:
-                return None
-            heads = self._ready_heads()
-            ready: Dict[Phase, _ReadyView] = {
-                p: _ReadyView([o for o in heads if o.phase is p],
-                              len(self.queues[p]))
-                for p in Phase}
-            ctx = PolicyContext(
-                queues=ready, prof=self.profiler, now=now,
-                engine_free=self._engine_free(),
-                engine_slots=dict(self.queue_slots),
-                queue_occupancy=self._queue_occupancy_locked(),
-                link_stats_fn=self.link_stats_fn)
-            phase = self.policy.select(ctx)
-            if phase is None or not ready[phase]:
-                return None
-            op = ready[phase][0]
-            self.queues[op.phase].remove(op)
-            self._stream_pending[op.vstream].popleft()
-            self._stream_inflight[op.vstream] = \
-                self._stream_inflight.get(op.vstream, 0) + 1
-            eng = self.stream_engine(op.vstream)
-            pinned = self.stream_queue(op.vstream)
-            idx = pinned if pinned is not None else \
-                min(i for i in range(self.queue_slots.get(eng, 1))
-                    if (eng, i) not in self._queue_inflight)
-            self._queue_inflight[(eng, idx)] = op
-            # resolved once: survives stream destroy / re-binding
-            op.meta["_engine"] = eng
-            op.meta["_queue"] = (eng, idx)
-            op.dispatch_time = now
-            self.policy.on_dispatch(op, self.backend.estimate(op))
-            self._inflight.add(op)
-            return op
+            return self._select_locked(now, fast=False)
+
+    def select_ready(self, now: float) -> List[OpDescriptor]:
+        """Advance to the next decision point: pop EVERY op the device's
+        free queues can legally take, in the same order a
+        ``select_next``-until-``None`` loop would hand them out, under one
+        lock round-trip (PR 9 batched stepped drive).
+
+        Unlike ``select_next``, iterations where no op can dispatch skip
+        the policy machinery entirely (``fast=True``): dispatch policies
+        are pure on an empty ready set (``pick()`` returns None without
+        touching state — see sched/dispatch.py), so the popped op
+        sequence is identical and only no-op ``select`` observations are
+        elided from the hot path."""
+        out: List[OpDescriptor] = []
+        with self._cv:
+            while True:
+                op = self._select_locked(now, fast=True)
+                if op is None:
+                    return out
+                out.append(op)
+
+    def _select_locked(self, now: float,  # holds: _cv
+                       fast: bool = False) -> Optional[OpDescriptor]:
+        if self.failed:
+            return None
+        # fast out before any policy machinery: every queue occupied —
+        # nothing could dispatch regardless of what the policy says
+        if fast and len(self._queue_inflight) >= self._total_slots:
+            return None
+        heads = self._ready_heads()
+        if fast and not heads:
+            return None
+        ready: Dict[Phase, _ReadyView] = {
+            p: _ReadyView([o for o in heads if o.phase is p],
+                          len(self.queues[p]))
+            for p in Phase}
+        ctx = PolicyContext(
+            queues=ready, prof=self.profiler, now=now,
+            engine_free=self._engine_free(),
+            engine_slots=dict(self.queue_slots),
+            queue_occupancy=self._queue_occupancy_locked(),
+            link_stats_fn=self.link_stats_fn)
+        phase = self.policy.select(ctx)
+        if phase is None or not ready[phase]:
+            return None
+        op = ready[phase][0]
+        self.queues[op.phase].remove(op)
+        self._stream_pending[op.vstream].popleft()
+        self._stream_inflight[op.vstream] = \
+            self._stream_inflight.get(op.vstream, 0) + 1
+        eng = self.stream_engine(op.vstream)
+        pinned = self.stream_queue(op.vstream)
+        idx = pinned if pinned is not None else \
+            min(i for i in range(self.queue_slots.get(eng, 1))
+                if (eng, i) not in self._queue_inflight)
+        self._queue_inflight[(eng, idx)] = op
+        # resolved once: survives stream destroy / re-binding
+        op.meta["_engine"] = eng
+        op.meta["_queue"] = (eng, idx)
+        op.dispatch_time = now
+        self.policy.on_dispatch(op, self.backend.estimate(op))
+        self._inflight.add(op)
+        return op
 
     def mark_complete(self, op: OpDescriptor, now: float,
                       result: Any = None, error: Optional[BaseException] = None):
@@ -547,6 +587,8 @@ class FlexDaemon:
                     # final: stamp clocks + check happens-before edges
                     self.sanitizer.on_complete(self, op)
         self.profiler.on_complete(op)
+        if self.timeline is not None:
+            self.timeline.record(self.device_id, op)
         # Free the STREAM before resolving the future: completion callbacks
         # routinely enqueue follow-up work on the same stream and must find
         # it dispatchable (continuous batching relies on this).  The drain

@@ -13,7 +13,11 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, Dict, Tuple
+import itertools
+import json
+import os
+import threading
+from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.core.api import OpDescriptor, OpType, Phase
 
@@ -93,3 +97,75 @@ class Profiler:
                 "tokens": s.tokens_done,
             } for p, s in self.stats.items()
         }
+
+
+# --------------------------------------------------------------- timeline
+def profile_enabled() -> bool:
+    """``FLEX_PROFILE=1`` turns on per-op timeline capture (PR 9)."""
+    return os.environ.get("FLEX_PROFILE", "") == "1"
+
+
+def profile_dir() -> str:
+    """Where ``Session.close`` writes trace files (``FLEX_PROFILE_DIR``,
+    default: current directory)."""
+    return os.environ.get("FLEX_PROFILE_DIR", ".")
+
+
+_TRACE_IDS = itertools.count(1)
+
+
+class Timeline:
+    """Per-op timeline recorder → Chrome-trace JSON (PR 9, opt-in).
+
+    One Timeline spans a session (like the hazard sanitizer): every
+    daemon's ``mark_complete`` appends one complete event per op, and
+    ``Session.close`` dumps ``flextrace-<pid>-<n>.json`` into
+    :func:`profile_dir`.  Load the file in ``chrome://tracing`` or
+    Perfetto: rows are (device, execution queue), one slice per op with
+    dispatch→complete extents and the op's phase/type/meta in ``args``.
+
+    Capture is OFF unless ``FLEX_PROFILE=1`` — the hot path pays only a
+    ``None`` check — and recording is one dict append under a lock, so
+    turning it on perturbs (wall-clock) timing but never simulated time.
+    """
+
+    def __init__(self):
+        self._lk = threading.Lock()
+        self._events: List[dict] = []
+
+    def record(self, device_id: int, op: OpDescriptor) -> None:
+        q = op.meta.get("_queue")
+        tid = f"{q[0]}:{q[1]}" if q else str(op.meta.get("_engine", "?"))
+        ev = {
+            "name": f"{op.phase.value}:{op.op.value}",
+            "ph": "X",                           # complete event
+            "ts": op.dispatch_time * 1e6,        # trace units are µs
+            "dur": max(op.exec_time, 0.0) * 1e6,
+            "pid": device_id,
+            "tid": tid,
+            "args": {"op_id": op.op_id, "vstream": op.vstream,
+                     "queue_delay_us": max(op.queue_delay, 0.0) * 1e6},
+        }
+        for k in ("tokens", "bytes", "flops", "instance", "req_id"):
+            if k in op.meta:
+                ev["args"][k] = op.meta[k]
+        with self._lk:
+            self._events.append(ev)
+
+    def events(self) -> List[dict]:
+        with self._lk:
+            return list(self._events)
+
+    def dump(self, path: Optional[str] = None) -> str:
+        """Write the Chrome-trace file; returns the path written."""
+        if path is None:
+            path = os.path.join(
+                profile_dir(),
+                f"flextrace-{os.getpid()}-{next(_TRACE_IDS)}.json")
+        with self._lk:
+            doc = {"traceEvents": self._events,
+                   "displayTimeUnit": "ms",
+                   "otherData": {"source": "repro.core.profiler.Timeline"}}
+            with open(path, "w") as f:
+                json.dump(doc, f)
+        return path

@@ -76,7 +76,7 @@ class Session(RuntimeAPI):
     def __init__(self, mode: str, clients: List[RuntimeAPI],
                  daemons: List[Optional[FlexDaemon]],
                  shared_events: Optional[SharedEventTable] = None,
-                 sanitizer=None):
+                 sanitizer=None, timeline=None):
         self.mode = mode
         self._clients = clients
         self.daemons = daemons
@@ -84,6 +84,9 @@ class Session(RuntimeAPI):
         # happens-before checker shared by every daemon of this session
         # (FLEX_SANITIZE=1; see repro.analysis.hazards) — None when off
         self.sanitizer = sanitizer
+        # per-op Chrome-trace recorder shared by every daemon
+        # (FLEX_PROFILE=1; see repro.core.profiler.Timeline) — None when off
+        self.timeline = timeline
         self._current = 0
         self._closed = False
 
@@ -231,6 +234,10 @@ class Session(RuntimeAPI):
         for c in self._clients:
             if isinstance(c, PassthroughClient):
                 c.close()
+        if self.timeline is not None:
+            # dump before the sanitizer can raise: the trace of a hazardous
+            # run is exactly what you want on disk
+            self.trace_path = self.timeline.dump()
         if self.sanitizer is not None and self.sanitizer.hazards:
             hazards = self.sanitizer.drain()
             raise RuntimeError(
@@ -270,10 +277,14 @@ def connect(mode: str = "flex", devices: int = 1, *,
     daemons: List[Optional[FlexDaemon]] = []
     shared = SharedEventTable() if mode != "passthrough" else None
     sanitizer = None
+    timeline = None
     if mode != "passthrough":
         from repro.analysis.hazards import HazardSanitizer, sanitize_enabled
         if sanitize_enabled():
             sanitizer = HazardSanitizer()   # one checker spans the session
+        from repro.core.profiler import Timeline, profile_enabled
+        if profile_enabled():
+            timeline = Timeline()           # one recorder spans the session
     for i in range(devices):
         if mode == "passthrough":
             clients.append(PassthroughClient())
@@ -282,10 +293,10 @@ def connect(mode: str = "flex", devices: int = 1, *,
         d = FlexDaemon(i, _backend_for(backend, i),
                        policy=_policy_for(policy, i), shared_events=shared,
                        queues=queues(i) if callable(queues) else queues,
-                       sanitizer=sanitizer)
+                       sanitizer=sanitizer, timeline=timeline)
         if mode == "flex":
             d.start()
         clients.append(FlexClient(d, instance=instance))
         daemons.append(d)
     return Session(mode, clients, daemons, shared_events=shared,
-                   sanitizer=sanitizer)
+                   sanitizer=sanitizer, timeline=timeline)

@@ -15,6 +15,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
 
 PEAK_FLOPS = 197e12          # bf16 / chip
@@ -48,6 +50,15 @@ class CostModel:
         self.n_params = self.cfg.param_count()
         self.n_active = self.cfg.active_param_count()
         self.bytes_per_param = 2 if "16" in self.cfg.param_dtype else 4
+        # one-entry memos for the decode hot path (PR 9): every decode step
+        # evaluates the same (spec, batch, context) point several times
+        # (estimate at enqueue, duration + meta + compute share at
+        # dispatch) — keyed on the VALUES the terms depend on, so a hit is
+        # exactly the recomputation it skips
+        self._terms_key = None
+        self._terms_val = (0.0, 0.0)
+        self._kv_key: Optional[int] = None
+        self._kv_val = 0.0
 
     # ------------------------------------------------------------ helpers
     def kv_bytes_per_token(self) -> float:
@@ -61,6 +72,8 @@ class CostModel:
         return float(kv)
 
     def kv_bytes_total(self, context: int) -> float:
+        if context == self._kv_key:
+            return self._kv_val
         cfg = self.cfg
         eff_ctx = context
         if cfg.sliding_window and not cfg.local_global_alternating:
@@ -70,8 +83,11 @@ class CostModel:
             # half the layers are windowed
             full = per_tok / 2 * context
             local = per_tok / 2 * min(context, cfg.sliding_window)
-            return full + local
-        return per_tok * eff_ctx
+            out = full + local
+        else:
+            out = per_tok * eff_ctx
+        self._kv_key, self._kv_val = context, out
+        return out
 
     def ssm_state_bytes(self) -> float:
         cfg = self.cfg
@@ -102,12 +118,17 @@ class CostModel:
     def _decode_terms(self, spec: InstanceSpec, batch: int,
                       avg_context: int) -> "tuple[float, float]":
         """(t_compute, t_memory) of one decode step (roofline terms)."""
+        key = (spec.chips, spec.compute_eff, spec.bw_eff, batch, avg_context)
+        if key == self._terms_key:
+            return self._terms_val
         flops = 2.0 * self.n_active * batch * self.calibration_flops
         bytes_ = (self.weights_bytes()
                   + batch * self.kv_bytes_total(avg_context)
                   + batch * self.ssm_state_bytes()) * self.calibration_bytes
-        return (flops / (spec.chips * PEAK_FLOPS * spec.compute_eff),
-                bytes_ / (spec.chips * HBM_BW * spec.bw_eff))
+        out = (flops / (spec.chips * PEAK_FLOPS * spec.compute_eff),
+               bytes_ / (spec.chips * HBM_BW * spec.bw_eff))
+        self._terms_key, self._terms_val = key, out
+        return out
 
     def prefill_flops(self, tokens: int, context: int = 0) -> float:
         """Model FLOPs of prefilling ``tokens`` at ``context`` total
@@ -131,6 +152,57 @@ class CostModel:
                     avg_context: int) -> float:
         """One decode step for a batch of sequences at `avg_context`."""
         t = max(self._decode_terms(spec, batch, avg_context))
+        return t * (1 + spec.collective_frac) + spec.launch_overhead_s
+
+    # ------------------------------------------------- vectorized (PR 9)
+    # Array evaluation of the same roofline expressions: one NumPy pass
+    # over every in-flight op of a device instead of a Python call per op.
+    # Each expression below is written in the SAME operand order as its
+    # scalar twin, so element-wise float64 results are bit-identical to a
+    # Python-loop evaluation (IEEE ops are deterministic; only the loop is
+    # vectorized, never the arithmetic).
+
+    def prefill_times(self, spec: InstanceSpec, tokens,
+                      contexts=None) -> np.ndarray:
+        """`prefill_time` over arrays of chunk sizes / attention contexts
+        (the chunked-prefill enqueue costs all chunks in one shot)."""
+        toks = np.asarray(tokens, dtype=np.float64)
+        ctx = np.zeros_like(toks) if contexts is None \
+            else np.asarray(contexts, dtype=np.float64)
+        cfg = self.cfg
+        flops = 2.0 * self.n_active * toks * self.calibration_flops
+        flops = flops + 2.0 * cfg.num_attention_layers() * toks \
+            * np.maximum(ctx, toks) * cfg.num_heads * cfg.head_dim
+        bytes_ = (self.weights_bytes()
+                  + toks * self.kv_bytes_per_token()) * self.calibration_bytes
+        t_c = flops / (spec.chips * PEAK_FLOPS * spec.compute_eff)
+        t_m = bytes_ / (spec.chips * HBM_BW * spec.bw_eff)
+        t = np.maximum(t_c, t_m)
+        return t * (1 + spec.collective_frac) + spec.launch_overhead_s
+
+    def _kv_bytes_total_arr(self, ctx: np.ndarray) -> np.ndarray:
+        cfg = self.cfg
+        per_tok = self.kv_bytes_per_token()
+        if cfg.local_global_alternating and cfg.sliding_window:
+            return per_tok / 2 * ctx \
+                + per_tok / 2 * np.minimum(ctx, cfg.sliding_window)
+        if cfg.sliding_window and not cfg.local_global_alternating:
+            ctx = np.minimum(ctx, cfg.sliding_window)
+        return per_tok * ctx
+
+    def decode_times(self, spec: InstanceSpec, batches,
+                     avg_contexts) -> np.ndarray:
+        """`decode_time` over arrays of batch sizes / average contexts
+        (the fluid engine rates whole drain trajectories in one pass)."""
+        b = np.asarray(batches, dtype=np.float64)
+        ctx = np.asarray(avg_contexts, dtype=np.float64)
+        flops = 2.0 * self.n_active * b * self.calibration_flops
+        bytes_ = (self.weights_bytes()
+                  + b * self._kv_bytes_total_arr(ctx)
+                  + b * self.ssm_state_bytes()) * self.calibration_bytes
+        t_c = flops / (spec.chips * PEAK_FLOPS * spec.compute_eff)
+        t_m = bytes_ / (spec.chips * HBM_BW * spec.bw_eff)
+        t = np.maximum(t_c, t_m)
         return t * (1 + spec.collective_frac) + spec.launch_overhead_s
 
     # ---------------------------------------------- compute-demand shares

@@ -58,10 +58,16 @@ class Request:
     # real-mode payload (None in simulation)
     prompt_tokens: Optional[object] = None
     output_tokens: List[int] = dataclasses.field(default_factory=list)
-    # timing
+    # timing — per-token times collapse to three scalars (PR 9): every
+    # metric ever read from the old per-token list is a function of the
+    # first, second, and last emission times (tpot telescopes to
+    # (last - first) / (n - 1); TTST needs only the second), and dropping
+    # the list removes one Python append per generated token from the
+    # simulator's hottest loop
     prefill_start: float = -1.0
     first_token_time: float = -1.0
-    token_times: List[float] = dataclasses.field(default_factory=list)
+    second_token_time: float = -1.0
+    last_token_time: float = -1.0
     finish_time: float = -1.0
     # placement
     instance: Optional[str] = None
@@ -85,11 +91,13 @@ class Request:
 
     @property
     def tpot(self) -> float:
-        """Mean inter-token latency over decode (excludes the first token)."""
-        if len(self.token_times) < 2:
+        """Mean inter-token latency over decode (excludes the first token):
+        the span sum telescopes, so this is exactly
+        ``(last - first) / (tokens - 1)``."""
+        if self.generated < 2:
             return float("nan")
-        spans = [b - a for a, b in zip(self.token_times, self.token_times[1:])]
-        return sum(spans) / len(spans)
+        return (self.last_token_time - self.first_token_time) \
+            / (self.generated - 1)
 
     @property
     def total_tokens(self) -> int:
@@ -99,15 +107,18 @@ class Request:
         self.generated += 1
         if self.first_token_time < 0:
             self.first_token_time = now
-        self.token_times.append(now)
+        elif self.second_token_time < 0:
+            self.second_token_time = now
+        self.last_token_time = now
 
     def reset_for_retry(self) -> None:
         """Back to QUEUED after a fault: generation restarts from prefill
         (one reset sequence for instance-failure AND transfer re-routes)."""
         self.state = RequestState.QUEUED
         self.generated = 0
-        self.token_times = []
         self.first_token_time = -1.0
+        self.second_token_time = -1.0
+        self.last_token_time = -1.0
         self.kv_stream_pending = False
         self.cached_tokens = 0
         self.retries += 1
@@ -132,7 +143,7 @@ class Request:
         return self.first_token_time >= 0 and self.ttft <= self.slo.ttft_s
 
     def meets_tpot_slo(self) -> bool:
-        if self.slo is None or len(self.token_times) < 2:
+        if self.slo is None or self.generated < 2:
             return True          # one-token outputs have no inter-token gap
         return self.tpot <= self.slo.tpot_s
 
@@ -155,7 +166,7 @@ def _tier_summary(rs: List[Request]) -> dict:
     failed = sum(1 for r in rs if r.state == RequestState.FAILED)
     terminal = len(done) + rejected + failed
     ttfts = sorted(r.ttft for r in done if r.first_token_time >= 0)
-    tpots = sorted(r.tpot for r in done if len(r.token_times) >= 2)
+    tpots = sorted(r.tpot for r in done if r.generated >= 2)
     ttft_ok = sum(1 for r in done if r.meets_ttft_slo())
     tpot_ok = sum(1 for r in done if r.meets_tpot_slo())
     both_ok = sum(1 for r in done
@@ -196,13 +207,13 @@ def summarize(requests: List[Request]) -> dict:
     t1 = max(r.finish_time for r in done)
     out_tokens = sum(r.generated for r in done)
     ttfts = sorted(r.ttft for r in done if r.first_token_time >= 0)
-    tpots = sorted(r.tpot for r in done if len(r.token_times) >= 2)
+    tpots = sorted(r.tpot for r in done if r.generated >= 2)
     # time to SECOND token: under disaggregation the first token comes out
     # of prefill and the second only after the KV reaches a decode
     # instance, so this is the client-visible cost of the KV transfer
     # (what chunked streaming shrinks: decode starts on the first chunk)
-    ttsts = sorted(r.token_times[1] - r.arrival_time for r in done
-                   if len(r.token_times) >= 2)
+    ttsts = sorted(r.second_token_time - r.arrival_time for r in done
+                   if r.generated >= 2)
 
     dur = max(t1 - t0, 1e-9)
     return {

@@ -44,12 +44,13 @@ real concurrency too.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
 import itertools
 import math
 import threading
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 # flexlint: ignore[layering] -- serving -> cache prefix-reuse use is the API
 from repro.cache import make_cache, request_block_hashes
@@ -98,13 +99,36 @@ class SimBackend:
 
 
 class EventLoop:
-    def __init__(self):
+    """Discrete-event loop with a two-lane ready structure (PR 9).
+
+    Events carry a global ``(t, seq)`` order.  Future events live in a
+    heapq; events scheduled AT the current timestamp (``defer`` and
+    clamped ``at`` calls — the driver-loop hook every completion callback
+    funnels through) go to an O(1) FIFO lane instead of round-tripping
+    the heap.  Because the clock is monotonic and ``seq`` increases, the
+    FIFO is already sorted by ``(t, seq)``, so ``run`` merge-pops the two
+    lanes in EXACTLY the order the all-heap loop produced — same-timestamp
+    work drains as one batch without O(log n) churn per callback.
+
+    ``legacy_defer=True`` restores the v5 all-heap path (every event
+    through ``heappush``); the regression tests compare the two lanes'
+    orderings and whole-cluster ``run()`` results bit-for-bit."""
+
+    def __init__(self, legacy_defer: bool = False):
         self.clock = SimClock()
         self._heap: List[Tuple[float, int, Callable]] = []
+        # same-timestamp FIFO lane: (t, seq, fn), nondecreasing in (t, seq)
+        self._deferred: Deque[Tuple[float, int, Callable]] = collections.deque()
         self._seq = itertools.count()
+        self.legacy_defer = legacy_defer
+        self.events = 0    # callbacks executed (sim-throughput telemetry)
 
     def at(self, t: float, fn: Callable) -> None:
-        heapq.heappush(self._heap, (max(t, self.clock.t), next(self._seq), fn))
+        if t <= self.clock.t and not self.legacy_defer:
+            self._deferred.append((self.clock.t, next(self._seq), fn))
+        else:
+            heapq.heappush(self._heap,
+                           (max(t, self.clock.t), next(self._seq), fn))
 
     def after(self, dt: float, fn: Callable) -> None:
         self.at(self.clock.t + dt, fn)
@@ -118,15 +142,30 @@ class EventLoop:
         self.at(self.clock.t, fn)
 
     def run(self, until: float = math.inf, max_events: int = 50_000_000):
+        heap, dq, clock = self._heap, self._deferred, self.clock
         n = 0
-        while self._heap and n < max_events:
-            if self._heap[0][0] > until:
-                self.clock.t = until
+        while (heap or dq) and n < max_events:
+            # merge-pop by (t, seq): the FIFO front is the oldest deferred
+            # event; it wins over the heap top only if strictly older in
+            # the global order (seq ties are impossible — one counter)
+            if dq:
+                use_dq = (not heap or dq[0][0] < heap[0][0]
+                          or (dq[0][0] == heap[0][0]
+                              and dq[0][1] < heap[0][1]))
+            else:
+                use_dq = False
+            t = dq[0][0] if use_dq else heap[0][0]
+            if t > until:
+                clock.t = until
                 return       # beyond-horizon events stay queued for resume
-            t, seq, fn = heapq.heappop(self._heap)
-            self.clock.t = t
+            if use_dq:
+                t, _seq, fn = dq.popleft()
+            else:
+                t, _seq, fn = heapq.heappop(heap)
+            clock.t = t
             fn()
             n += 1
+            self.events += 1
 
 
 @dataclasses.dataclass
@@ -176,6 +215,16 @@ class SimConfig:
     prefix_page_tokens: int = 64
     prefix_cache_frac: float = 0.2
     remote_prefix_fetch: bool = True
+    # Simulation fidelity (PR 9): "discrete" is the exact event-per-step
+    # simulator; "fluid" integrates queue drain rates between decision
+    # points (repro.serving.fluid) — ~100x cheaper per event and clearly
+    # APPROXIMATE (results carry fidelity="fluid"; use for capacity
+    # planning, never for latency-tail or policy-behavior claims).
+    fidelity: str = "discrete"
+    # regression hook: route defer() through the heap like v5 (the
+    # bit-identical event-order tests compare this against the batched
+    # FIFO lane; no production reason to enable it)
+    legacy_event_loop: bool = False
 
 
 class SimInstance:
@@ -242,7 +291,28 @@ class SimInstance:
         self.prefill_waiting: List[Request] = []    # guarded-by: _lock
         self.prefilling: Dict[int, Request] = {}    # guarded-by: _lock
         self.decode_pending: List[Request] = []     # guarded-by: _lock
-        self.active: List[Request] = []             # guarded-by: _lock
+        self._active: List[Request] = []            # guarded-by: _lock
+        # running sum of total_tokens over `active` (guarded-by: _lock):
+        # the decode hot path reads the batch's average context every step,
+        # and an O(batch) sum per step dominated the simulator's profile —
+        # integer increments keep this EXACTLY equal to the full sum.
+        # Reassigning `active` wholesale (tests poke it; drain paths swap
+        # it) re-syncs the counter through the property setter.
+        self._active_tokens = 0
+        # Lazy decode-step bookkeeping (PR 9, guarded-by: _lock): every
+        # active request gains exactly one token per decode step, so the
+        # hot path only bumps aggregate counters and pops this step's
+        # finish bucket — O(finishers), not O(batch).  Per-request fields
+        # (generated / last_token_time) materialize in _materialize_tokens
+        # at every exit from `active` (finish, drain, removal, end of run);
+        # the arithmetic is integer step counts, so materialized values are
+        # EXACTLY what the per-request loop would have produced.
+        self._step_idx = 0                 # decode steps completed here
+        self._last_step_time = -1.0        # clock time of the latest step
+        # req_id -> (join_step, generated_at_join, finish_step)
+        self._decode_join: Dict[int, Tuple[int, int, int]] = {}
+        self._finish_step: Dict[int, List[Request]] = {}
+        self._await_second: List[Request] = []  # need second_token_time
         # finished decoding but their KV tail is still streaming in: they
         # cannot retire (pages partly in flight) until the stream completes
         self.stalled: Dict[int, Request] = {}       # guarded-by: _lock
@@ -289,6 +359,19 @@ class SimInstance:
         self.ewma_step = 0.0                        # guarded-by: _lock
 
     # ---------------------------------------------------------- utilities
+    @property
+    def active(self) -> List[Request]:  # holds: _lock
+        """The decode batch.  In-place mutations (append/remove) must keep
+        ``_active_tokens`` in step by hand — the hot paths do — but a
+        wholesale reassignment (drain paths, tests poking a batch in)
+        re-syncs the running sum here."""
+        return self._active
+
+    @active.setter
+    def active(self, reqs: List[Request]) -> None:  # holds: _lock
+        self._active = reqs
+        self._active_tokens = sum(r.total_tokens for r in reqs)
+
     @property
     def now(self) -> float:
         return self.loop.clock.t
@@ -407,6 +490,12 @@ class SimInstance:
         stream = self.streams_p[self._rr_prefill % len(self.streams_p)]
         self._rr_prefill += 1
         chunks = self._prefill_chunks(req.prompt_len - cached)
+        # one vectorized cost-model pass prices every chunk of the prompt
+        # (bit-identical to per-chunk prefill_time calls — see
+        # CostModel.prefill_times)
+        durations = self.cost.prefill_times(
+            self.spec, [c for c, _ in chunks],
+            [cached + off + c for c, off in chunks])
         for i, (ctoks, off) in enumerate(chunks):
             fut = self.client.launch(
                 stream, None, phase=Phase.PREFILL,
@@ -414,8 +503,7 @@ class SimInstance:
                       "ctx": cached + off + ctoks,
                       "chunk": i, "chunks": len(chunks), "_sim_inst": self,
                       **self.cost.prefill_meta(self.spec, ctoks),
-                      "est_duration": self.cost.prefill_time(
-                          self.spec, ctoks, context=cached + off + ctoks)})
+                      "est_duration": float(durations[i])})
         # the request's prefill completes with its LAST chunk (a failed
         # device errors/abandons every chunk, so the callback still sees
         # the fault through the final chunk's future)
@@ -490,7 +578,13 @@ class SimInstance:
                        if not r.kv_stream_pending]
             self.decode_pending = [r for r in self.decode_pending
                                    if r.kv_stream_pending]
-            self.active = [r for r in self.active if r.kv_stream_pending]
+            kept = [r for r in self.active if r.kv_stream_pending]
+            for r in self.active:
+                if r.kv_stream_pending:
+                    self._materialize_tokens(r)   # stays active here
+                else:
+                    self._forget_decode(r)        # migrates away
+            self.active = kept          # setter re-syncs _active_tokens
             return drained
 
     def _fill_slots(self) -> None:  # holds: _lock
@@ -499,14 +593,61 @@ class SimInstance:
             r = self.decode_pending.pop(0)
             r.state = RequestState.DECODING
             self.active.append(r)
+            self._active_tokens += r.total_tokens
+            # register the deterministic finish step: one token per step,
+            # done when generated reaches max_new_tokens (at least one
+            # step — matches the old per-step `>= max` check exactly)
+            fin = self._step_idx + max(1, r.max_new_tokens - r.generated)
+            self._decode_join[r.req_id] = (self._step_idx, r.generated, fin)
+            self._finish_step.setdefault(fin, []).append(r)
+            if r.second_token_time < 0:
+                self._await_second.append(r)
+
+    def _materialize_tokens(self, r: Request) -> None:  # holds: _lock
+        """Fold the steps a request sat in `active` into its per-request
+        fields (exact integer catch-up of the lazy decode bookkeeping)."""
+        ent = self._decode_join.get(r.req_id)
+        if ent is None:
+            return
+        join_step, gen0, fin = ent
+        steps = self._step_idx - join_step
+        if steps > 0:
+            r.generated = gen0 + steps
+            r.last_token_time = self._last_step_time
+            self._decode_join[r.req_id] = (self._step_idx, r.generated, fin)
+
+    def _forget_decode(self, r: Request) -> None:  # holds: _lock
+        """Materialize + unregister a request leaving `active`."""
+        self._materialize_tokens(r)
+        ent = self._decode_join.pop(r.req_id, None)
+        if ent is not None:
+            bucket = self._finish_step.get(ent[2])
+            if bucket is not None and r in bucket:
+                bucket.remove(r)
+                if not bucket:
+                    del self._finish_step[ent[2]]
+        if r in self._await_second:
+            self._await_second.remove(r)
+
+    def sync_token_state(self) -> None:
+        """Materialize every active request's lazily-advanced token fields
+        (summaries / conservation checks read them mid-run)."""
+        with self._lock:
+            for r in self.active:
+                self._materialize_tokens(r)
+
+    def _decode_ctx(self) -> Tuple[int, int]:  # holds: _lock
+        """(batch, avg_context) of the CURRENT decode batch — the running
+        ``_active_tokens`` sum makes this O(1) per decode step."""
+        b = max(1, len(self.active))
+        ctx = (self._active_tokens // b) if self.active else 1024
+        return b, ctx
 
     def _ensure_decode_op(self) -> None:  # holds: _lock
         if self._decode_op_inflight or not (self.active or self.decode_pending):
             return
         self._decode_op_inflight = True
-        b = max(1, len(self.active))
-        ctx = (sum(r.total_tokens for r in self.active) // b) if self.active \
-            else 1024
+        b, ctx = self._decode_ctx()
         fut = self.client.launch(
             self.stream_d, None, phase=Phase.DECODE,
             meta={"est_duration": self._decode_estimate(), "_sim_inst": self,
@@ -515,9 +656,7 @@ class SimInstance:
         self.kick()
 
     def _decode_estimate(self) -> float:  # holds: _lock
-        b = max(1, len(self.active))
-        ctx = (sum(r.total_tokens for r in self.active) // b) if self.active \
-            else 1024
+        b, ctx = self._decode_ctx()
         return self.cost.decode_time(self.spec, b, ctx)
 
     def op_duration(self, op: OpDescriptor) -> float:
@@ -528,9 +667,7 @@ class SimInstance:
         with self._lock:
             if op.phase == Phase.DECODE:
                 dur = self._decode_estimate()
-                b = max(1, len(self.active))
-                ctx = (sum(r.total_tokens for r in self.active) // b) \
-                    if self.active else 1024
+                b, ctx = self._decode_ctx()
                 op.meta.update(self.cost.decode_meta(self.spec, b, ctx))
             elif op.phase == Phase.PREFILL:
                 dur = float(op.meta.get("est_duration", 1e-3))
@@ -552,9 +689,7 @@ class SimInstance:
         execution time)."""
         with self._lock:
             if op.phase == Phase.DECODE:
-                b = max(1, len(self.active))
-                ctx = (sum(r.total_tokens for r in self.active) // b) \
-                    if self.active else 1024
+                b, ctx = self._decode_ctx()
                 return self.cost.decode_compute_share(self.spec, b, ctx)
             if op.phase == Phase.PREFILL:
                 return self.cost.prefill_compute_share(
@@ -572,14 +707,35 @@ class SimInstance:
             except Exception:
                 return
             self.steps["decode"] += 1
-            finished = []
-            for r in self.active:
-                r.record_token(self.now)
-                self.kv_used += 1  # one token appended
-                if r.done_decoding:
-                    finished.append(r)
+            now = self.loop.clock.t
+            self._step_idx += 1
+            self._last_step_time = now
+            n = len(self.active)
+            self.kv_used += n           # one token appended per sequence
+            self._active_tokens += n
+            # first/second token times are one-shot per request: recorded
+            # the first step(s) after joining, then never touched again
+            if self._await_second:
+                still = []
+                for r in self._await_second:
+                    if r.first_token_time < 0:
+                        r.first_token_time = now
+                        still.append(r)   # second token is the NEXT step
+                    else:
+                        r.second_token_time = now
+                self._await_second = still
+            # requests finishing THIS step were known at join time — pop
+            # the bucket instead of scanning the whole batch (the bucket
+            # preserves join order, which is `active` order)
+            finished = self._finish_step.pop(self._step_idx, [])
             for r in finished:
+                join_step, gen0, _fin = self._decode_join.pop(r.req_id)
+                r.generated = gen0 + (self._step_idx - join_step)
+                r.last_token_time = now
+                if self._await_second and r in self._await_second:
+                    self._await_second.remove(r)  # one/two-token outputs
                 self.active.remove(r)
+                self._active_tokens -= r.total_tokens
                 if r.kv_stream_pending:
                     # decode outran the inbound KV stream: the request
                     # cannot retire while its pages are partly in flight —
@@ -624,7 +780,9 @@ class SimInstance:
             if req in self.decode_pending:
                 self.decode_pending.remove(req)
             if req in self.active:
+                self._forget_decode(req)
                 self.active.remove(req)
+                self._active_tokens -= req.total_tokens
             if self.stalled.pop(req.req_id, None) is not None:
                 self._stall_start.pop(req.req_id, None)
 
@@ -642,10 +800,11 @@ class SimInstance:
         virtual clock (the threaded daemon does the same on real threads)."""
         if self.failed or self.drive != "stepped":
             return  # threaded drive: the daemon's own dispatcher runs ops
-        while True:
-            op = self.daemon.select_next(self.now)
-            if op is None:
-                return
+        # batched decision point (PR 9): one lock round-trip hands out
+        # every op the device's free queues can take — the same op
+        # sequence as the old select-one-dispatch-one loop (dispatching
+        # only schedules future events; it never changes what is ready)
+        for op in self.daemon.select_ready(self.now):
             self._dispatch(op)
 
     def _dispatch(self, op: OpDescriptor) -> None:
@@ -706,6 +865,11 @@ class SimInstance:
             lost.extend(self.active)
             lost.extend(self.stalled.values())     # awaiting their KV tail
             self.prefill_waiting, self.decode_pending, self.active = [], [], []
+            # lost requests reset_for_retry below (token fields zeroed) —
+            # the lazy bookkeeping dies with them (setter zeroed the sum)
+            self._decode_join.clear()
+            self._finish_step.clear()
+            self._await_second = []
             self.prefilling = {}
             self.stalled, self._stall_start = {}, {}
             # cached prefix blocks died with the device: drop index + pins
@@ -832,9 +996,14 @@ class Cluster:
         self.compute_model: Optional[LinkModel] = None
         self.compute_driver: Optional[LinkDriver] = None
         self._compute_timer = None
+        if self.sim_cfg.fidelity not in ("discrete", "fluid"):
+            raise ValueError(f"unknown fidelity {self.sim_cfg.fidelity!r}")
+        if self.sim_cfg.fidelity == "fluid" and drive != "stepped":
+            raise ValueError("fluid fidelity requires the stepped drive")
         shared_flops = self.sim_cfg.compute_queues > 1
         if drive == "stepped":
-            self.loop = EventLoop()
+            self.loop = EventLoop(
+                legacy_defer=self.sim_cfg.legacy_event_loop)
             self.link_driver = LinkDriver(self.loop, self.link_model)
             if shared_flops:
                 self.compute_model = LinkModel(bw=1.0, latency_s=0.0)
@@ -1231,11 +1400,13 @@ class Cluster:
         the request leaves its decode queues."""
         req, dst = entry["req"], entry["dst"]
         if entry["admitted"]:
+            # remove first: it materializes the lazily-advanced token count
+            # the refund below reads (req was actively decoding at dst)
+            dst.remove_request(req)
             # charged so far: dst_charged + (prompt + gen_admit - tokens)
             # + decode appends = dst_charged - tokens + total_tokens
             dst.kv_used -= (entry["dst_charged"] - entry["tokens"]
                             + req.total_tokens)
-            dst.remove_request(req)
         else:
             dst.kv_used -= entry["dst_charged"]
         assert dst.kv_used >= 0, (dst.name, dst.kv_used)
@@ -1477,7 +1648,18 @@ class Cluster:
         or more closed-loop traffic sources (``traffic``: an object or
         list of objects with ``initial()`` / ``on_complete(req, now)`` /
         ``exhausted()`` — e.g. :class:`repro.traffic.ClosedLoopPool`), or
-        both."""
+        both.
+
+        With ``sim_cfg.fidelity="fluid"`` the run is handed to the coarse
+        fluid-approximation engine (:mod:`repro.serving.fluid`): queue
+        drain rates are integrated between decision points instead of
+        simulating every daemon op.  The result dict is clearly labeled
+        (``fidelity="fluid"``, ``approximate=True``) — use it for
+        capacity planning, not latency-tail or policy-behavior claims."""
+        if self.sim_cfg.fidelity == "fluid":
+            from repro.serving.fluid import fluid_run
+            return fluid_run(self, workload=workload, until=until,
+                             traffic=traffic)
         with self._lock:
             # the threaded drive's daemon engine threads are already live
             # here: attach sources and schedule arrivals under the same
@@ -1496,6 +1678,8 @@ class Cluster:
             self.close()   # stop daemon dispatch threads (leak-free)
         else:
             self.loop.run(until=until)
+        for inst in self.instances:
+            inst.sync_token_state()   # runs cut off mid-decode by `until`
         from repro.serving.request import summarize
         with self._lock:
             out = summarize(self.requests)

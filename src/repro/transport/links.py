@@ -26,6 +26,7 @@ can tell spine contention from ingress contention.
 """
 from __future__ import annotations
 
+import os
 from typing import Dict, Hashable, List, Optional, Tuple
 
 from repro.transport.topology import DEFAULT_LINK_BW, Topology
@@ -107,6 +108,20 @@ class LinkModel:
         self.bw_by_link: Dict[Hashable, float] = dict(bw_by_link or {})
         self.topology = topology
         self._active: Dict[LinkTransfer, None] = {}   # insertion-ordered set
+        # Incremental per-segment demand (PR 9): flows indexed by segment,
+        # and each segment's share sum maintained on start/retire by
+        # re-summing ONLY that segment's flows (the flows that share a
+        # segment with the changed path) — never the whole fabric.  The
+        # per-segment flow dicts preserve `_active` insertion order, so an
+        # incremental re-sum adds the SAME floats in the SAME order as the
+        # full `_seg_counts` scan: the maintained counts are bit-identical
+        # to a recompute, not merely close.
+        self._seg_flows: Dict[Hashable, Dict[LinkTransfer, None]] = {}
+        self._counts: Dict[Hashable, float] = {}
+        # FLEX_SANITIZE=1: periodically cross-check the incremental counts
+        # against a full recompute (exact equality, per the order argument)
+        self._sanitize = os.environ.get("FLEX_SANITIZE", "") == "1"
+        self._sanitize_tick = 0
         self._last_t: Optional[float] = None
         self.failed_segments: set = set()
         # aggregate stats (benchmarks report transfer-queueing delay)
@@ -142,14 +157,51 @@ class LinkModel:
 
     # ----------------------------------------------------------- occupancy
     def _seg_counts(self) -> Dict[Hashable, float]:
-        """Per-segment demand: the sum of the shares of the flows crossing
-        it (equal to the flow count when every share is 1.0 — the classic
-        even processor split)."""
+        """Per-segment demand by FULL recompute: the sum of the shares of
+        the flows crossing each segment (equal to the flow count when every
+        share is 1.0 — the classic even processor split).  The hot paths
+        read the incrementally-maintained ``_counts`` instead; this scan
+        remains as the FLEX_SANITIZE cross-check's ground truth."""
         counts: Dict[Hashable, float] = {}
         for x in self._active:
             for s in x.path:
                 counts[s] = counts.get(s, 0.0) + x.share
         return counts
+
+    def _index_flow(self, x: LinkTransfer) -> None:
+        """Register a flow on its segments and refresh exactly those
+        segments' demand sums (the flows sharing a segment with ``x``)."""
+        for s in x.path:
+            flows = self._seg_flows.get(s)
+            if flows is None:
+                flows = self._seg_flows[s] = {}
+            flows[x] = None
+            self._counts[s] = sum(f.share for f in flows)
+
+    def _unindex_flow(self, x: LinkTransfer) -> None:
+        for s in x.path:
+            flows = self._seg_flows.get(s)
+            if flows is None:
+                continue
+            flows.pop(x, None)
+            if flows:
+                self._counts[s] = sum(f.share for f in flows)
+            else:
+                del self._seg_flows[s]
+                self._counts.pop(s, None)
+
+    def _check_counts(self) -> None:
+        """FLEX_SANITIZE cross-check (every 64th mutation): the maintained
+        counts must EQUAL a full recompute — same floats, same order."""
+        self._sanitize_tick += 1
+        if self._sanitize_tick % 64:
+            return
+        full = self._seg_counts()
+        assert full == self._counts, (
+            "incremental link demand diverged from full recompute",
+            {k: (full.get(k), self._counts.get(k))
+             for k in set(full) | set(self._counts)
+             if full.get(k) != self._counts.get(k)})
 
     def _rate(self, x: LinkTransfer, counts: Dict[Hashable, float]) -> float:
         # weighted processor sharing: a segment under-subscribed in total
@@ -163,10 +215,10 @@ class LinkModel:
         return min(x.path, key=lambda s: self.link_bw(s) / max(counts[s], 1.0))
 
     def active_count(self, seg: Hashable) -> int:
-        return sum(1 for x in self._active if seg in x.path)
+        return len(self._seg_flows.get(seg, ()))
 
     def active_on(self, seg: Hashable) -> List[LinkTransfer]:
-        return [x for x in self._active if seg in x.path]
+        return list(self._seg_flows.get(seg, ()))
 
     def active_transfers(self) -> List[LinkTransfer]:
         return list(self._active)
@@ -196,7 +248,7 @@ class LinkModel:
         self._last_t = max(self._last_t, now)
         if dt <= 0 or not self._active:
             return
-        counts = self._seg_counts()
+        counts = self._counts
         for x in self._active:
             if x.remaining <= 0:
                 continue
@@ -217,6 +269,9 @@ class LinkModel:
         self._advance(now)
         x = LinkTransfer(as_path(link), nbytes, now, share=share)
         self._active[x] = None
+        self._index_flow(x)
+        if self._sanitize:
+            self._check_counts()
         for s in x.path:
             st = self._seg(s)
             st.transfers += 1
@@ -230,7 +285,7 @@ class LinkModel:
         1.0 — use ``active_count`` for the flow count proper).  A snapshot
         drivers may pass back into ``eta`` to batch-estimate many flows
         without recomputing the sums per call."""
-        return self._seg_counts()
+        return dict(self._counts)
 
     def eta(self, x: LinkTransfer, now: float,
             counts: Optional[Dict[Hashable, float]] = None) -> float:
@@ -241,7 +296,7 @@ class LinkModel:
         if x not in self._active:
             return max(now, x.done_t)
         if counts is None:
-            counts = self._seg_counts()
+            counts = self._counts
         if x.remaining <= 0:
             return max(x.start_t + self.latency_s, now)
         t_bytes = now + x.remaining / self._rate(x, counts)
@@ -280,6 +335,9 @@ class LinkModel:
         if x not in self._active:
             return False               # stale poll of a retired transfer
         del self._active[x]
+        self._unindex_flow(x)
+        if self._sanitize:
+            self._check_counts()
         x.done_t = now
         if x.lost > 0:
             # torn down by a segment failure: the undelivered remainder is

@@ -1,0 +1,192 @@
+"""PR 9 hot-path regressions: the batched event loop must be invisible.
+
+The rearchitected stepped drive (two-lane EventLoop, batched
+``select_ready``, lazy decode bookkeeping, incremental link shares) is a
+pure speed change — these tests pin the behavioral contract:
+
+  * the defer-FIFO lane executes events in EXACTLY the all-heap order;
+  * whole-cluster ``run()`` result dicts are bit-identical between the
+    batched default and the ``legacy_event_loop=True`` path;
+  * the incremental per-segment share counts equal the full recompute;
+  * fluid fidelity tracks discrete throughput within its documented
+    tolerance and is clearly labeled approximate;
+  * ``FLEX_PROFILE=1`` emits a structurally valid Chrome trace.
+"""
+import copy
+import json
+import random
+
+import pytest
+
+from conftest import drive_modes
+from repro.configs import get_config
+from repro.serving import (Cluster, SimConfig, deployment_6p2d,
+                           deployment_dynamic, make_workload)
+from repro.serving.simulator import EventLoop
+from repro.transport.links import LinkModel
+
+CFG = get_config("mixtral-8x7b")
+
+# FLUID_TOL is the documented fluid-vs-discrete agreement band on
+# steady-state throughput (docs/perf.md): the fluid engine drops
+# per-token jitter and policy behavior, not sustained rates
+FLUID_TOL = 0.15
+
+
+def _scenarios():
+    return [("dynamic", deployment_dynamic()),
+            ("disagg", deployment_6p2d())]
+
+
+# --------------------------------------------------------- event loop
+def _drive_loop(loop: EventLoop, seed: int):
+    """Schedule a reproducible mix of at/after/defer events — including
+    callbacks that schedule more work at the CURRENT timestamp, the
+    pattern the FIFO lane exists for — and record execution order."""
+    order = []
+    rng = random.Random(seed)
+
+    def leaf(tag):
+        order.append((round(loop.clock.t, 9), tag))
+
+    def fanout(tag, depth):
+        order.append((round(loop.clock.t, 9), tag))
+        if depth > 0:
+            # same-timestamp continuations (the driver-loop pattern)
+            loop.defer(lambda: fanout(f"{tag}.d{depth}", depth - 1))
+            loop.at(loop.clock.t, lambda: leaf(f"{tag}.at-now"))
+            loop.after(rng.random() * 0.5, lambda: leaf(f"{tag}.later"))
+
+    for i in range(40):
+        t = rng.random() * 2.0
+        loop.at(t, lambda i=i: fanout(f"root{i}", rng.randint(0, 3)))
+    loop.run()
+    return order
+
+
+def test_defer_fifo_matches_legacy_heap_order():
+    fast = _drive_loop(EventLoop(), seed=11)
+    legacy = _drive_loop(EventLoop(legacy_defer=True), seed=11)
+    assert fast == legacy
+    assert len(fast) > 100          # the mix actually fanned out
+
+
+def test_event_counter_counts_callbacks():
+    loop = EventLoop()
+    for i in range(7):
+        loop.at(i * 0.1, lambda: None)
+    loop.run()
+    assert loop.events == 7
+
+
+# ------------------------------------------- batched vs legacy run()
+@pytest.mark.parametrize("name,deploy", _scenarios())
+def test_run_bit_identical_to_legacy_event_loop(name, deploy):
+    wl = make_workload(150, 512, 256, rate=200.0, seed=9)
+    results = []
+    for legacy in (False, True):
+        cluster = Cluster(CFG, copy.deepcopy(deploy),
+                          sim_cfg=SimConfig(legacy_event_loop=legacy))
+        results.append(cluster.run(copy.deepcopy(wl), until=36000))
+        cluster.check_kv_conservation()
+    assert results[0] == results[1]          # bit-identical, not approx
+    assert results[0]["completed"] == 150
+
+
+@pytest.mark.parametrize("drive", drive_modes())
+def test_run_completes_under_both_drives(drive):
+    wl = make_workload(30, 256, 32, rate=100.0, seed=12)
+    cluster = Cluster(CFG, deployment_dynamic(), drive=drive)
+    res = cluster.run(copy.deepcopy(wl), until=3600)
+    cluster.check_kv_conservation()
+    assert res["completed"] == 30
+    assert res["drive"] == drive
+
+
+# ------------------------------------------------- incremental shares
+def test_incremental_link_shares_match_full_recompute():
+    lm = LinkModel(bw=1e9, latency_s=0.0)
+    rng = random.Random(4)
+    paths = [("a", "b"), ("b", "c"), ("a", "b", "c"), ("d",)]
+    live = []
+    now = 0.0
+    for step in range(200):
+        now += rng.random() * 1e-3
+        if live and rng.random() < 0.4:
+            x = live.pop(rng.randrange(len(live)))
+            lm.poll(x, now)                  # may retire or keep it
+            if x in lm._active:
+                live.append(x)
+        else:
+            live.append(lm.start(rng.choice(paths),
+                                 rng.random() * 1e6, now,
+                                 share=rng.choice((0.5, 1.0, 2.0))))
+        assert lm.occupancy() == lm._seg_counts()   # exact, every step
+    while live:
+        now += 10.0
+        x = live.pop()
+        lm.poll(x, now)
+    assert lm._seg_counts() == {}
+    assert lm.occupancy() == {}
+
+
+def test_sanitize_cross_check_catches_drift(monkeypatch):
+    monkeypatch.setenv("FLEX_SANITIZE", "1")
+    lm = LinkModel(bw=1e9, latency_s=0.0)
+    assert lm._sanitize
+    # corrupt the incremental index, then push enough mutations through
+    # for the periodic (every-64th) cross-check to fire
+    lm.start(("a", "b"), 1e6, 0.0)
+    lm._counts[("a", "b")[0]] = 99.0
+    with pytest.raises(AssertionError):
+        for i in range(130):
+            lm.start(("d",), 1.0, 0.0)
+
+
+# ------------------------------------------------------ fluid fidelity
+@pytest.mark.parametrize("name,deploy", _scenarios())
+def test_fluid_tracks_discrete_throughput(name, deploy):
+    wl = make_workload(200, 1024, 1024, rate=1e5, seed=3)
+    disc = Cluster(CFG, copy.deepcopy(deploy), sim_cfg=SimConfig())
+    rd = disc.run(copy.deepcopy(wl), until=72000)
+    fl = Cluster(CFG, copy.deepcopy(deploy),
+                 sim_cfg=SimConfig(fidelity="fluid"))
+    rf = fl.run(copy.deepcopy(wl), until=72000)
+    fl.check_kv_conservation()               # fluid never charges KV
+    assert rf["fidelity"] == "fluid" and rf["approximate"] is True
+    assert rf["completed"] == rd["completed"] == 200
+    ratio = rf["output_tokens_per_s"] / rd["output_tokens_per_s"]
+    assert 1 - FLUID_TOL < ratio < 1 + FLUID_TOL, \
+        f"{name}: fluid/discrete throughput ratio {ratio:.3f}"
+
+
+def test_fluid_requires_stepped_drive():
+    with pytest.raises(ValueError, match="stepped"):
+        Cluster(CFG, deployment_dynamic(),
+                sim_cfg=SimConfig(fidelity="fluid"), drive="threaded")
+    with pytest.raises(ValueError, match="fidelity"):
+        Cluster(CFG, deployment_dynamic(),
+                sim_cfg=SimConfig(fidelity="bogus"))
+
+
+# ----------------------------------------------------------- profiler
+def test_flex_profile_emits_chrome_trace(tmp_path, monkeypatch):
+    monkeypatch.setenv("FLEX_PROFILE", "1")
+    monkeypatch.setenv("FLEX_PROFILE_DIR", str(tmp_path))
+    wl = make_workload(20, 256, 64, rate=100.0, seed=8)
+    cluster = Cluster(CFG, deployment_dynamic())
+    res = cluster.run(copy.deepcopy(wl), until=3600)
+    cluster.check_kv_conservation()
+    cluster.close()
+    assert res["completed"] == 20
+    with open(cluster.session.trace_path) as f:
+        doc = json.load(f)
+    evs = doc["traceEvents"]
+    assert evs, "profiled run produced no trace events"
+    for ev in evs:
+        assert ev["ph"] == "X"
+        assert ev["dur"] >= 0 and ev["ts"] >= 0
+        assert isinstance(ev["pid"], int)
+        assert ":" in ev["tid"]              # engine:queue-index rows
+    phases = {ev["name"].split(":")[0] for ev in evs}
+    assert "prefill" in phases and "decode" in phases

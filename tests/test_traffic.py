@@ -422,7 +422,8 @@ def test_tenant_blind_requests_still_summarize():
         r.state = RequestState.DONE
         r.prefill_start = r.arrival_time
         r.first_token_time = r.arrival_time + 0.1
-        r.token_times = [r.arrival_time + 0.1, r.arrival_time + 0.2]
+        r.second_token_time = r.arrival_time + 0.2
+        r.last_token_time = r.arrival_time + 0.2
         r.generated = 2
         r.finish_time = r.arrival_time + 0.2
     s = summarize(wl)
