@@ -32,6 +32,7 @@ MODULES = [
     ("roofline", "benchmarks.roofline"),
     ("kernels", "benchmarks.kernels_microbench"),
     ("sim_throughput", "benchmarks.sim_throughput"),
+    ("predictive_sched", "benchmarks.predictive_sched"),
 ]
 
 

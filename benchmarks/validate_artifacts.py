@@ -25,7 +25,15 @@ Checks (per row):
     ``hit_rate`` finite in [0, 1], ``flops_saved`` and
     ``remote_fetch_bytes`` finite and >= 0 — and a row that claims reuse
     (``hit_rate`` > 0) must carry ``flops_saved`` > 0 (a hit that saved
-    nothing means the admission path stopped charging the cost model).
+    nothing means the admission path stopped charging the cost model);
+  * prediction telemetry (v9) is honest wherever a row carries a
+    ``prediction`` section: every MAPE (online + fit-time, latency +
+    length) finite in [0, 5]; the length model observed exactly the
+    COMPLETED requests (``length.n == completed`` — a gap means the
+    serving loop stopped feeding the sketches, or fed them rejects);
+    and every predictive_sched tiered_burst predictive row records a
+    ``meets_acceptance`` verdict (the acceptance bar may not silently
+    disappear from the artifact).
 
     python -m benchmarks.validate_artifacts bench-out/BENCH_*.json
 """
@@ -97,6 +105,43 @@ def check_row(row: dict, where: str) -> list:
             errors.append(f"{where}: hit_rate {hr} > 0 but flops_saved "
                           f"= {d.get('flops_saved')!r} — reuse claimed "
                           "without recompute savings")
+    if isinstance(d.get("prediction"), dict):
+        errors.extend(_check_prediction(d, where))
+    if ".tiered_burst.predictive" in str(row.get("name", "")) \
+            and "meets_acceptance" not in d:
+        errors.append(f"{where}: predictive tiered_burst row without a "
+                      "meets_acceptance verdict")
+    return errors
+
+
+def _check_prediction(d: dict, where: str) -> list:
+    """Honesty checks for the v9 ``prediction`` telemetry section."""
+    errors = []
+    pred = d["prediction"]
+
+    def mape_ok(stats, label):
+        m = stats.get("mape")
+        if not _finite(m) or not 0.0 <= m <= 5.0:
+            errors.append(f"{where}: {label} mape = {m!r} "
+                          "(must be finite in [0, 5])")
+
+    lat = pred.get("latency")
+    if isinstance(lat, dict):
+        if lat.get("n", 0) > 0:
+            mape_ok(lat, "latency online")
+        for phase, cal in (lat.get("fit") or {}).items():
+            mape_ok(cal, f"latency fit[{phase}]")
+    lng = pred.get("length")
+    if isinstance(lng, dict):
+        if lng.get("n", 0) > 0:
+            mape_ok(lng, "length online")
+        # the serving loop observes one length per COMPLETED request —
+        # nothing more (rejects carry no realized length), nothing less
+        if "completed" in d and lng.get("n", -1) != d["completed"]:
+            errors.append(
+                f"{where}: length.n = {lng.get('n')!r} != completed = "
+                f"{d['completed']} — length observations out of step "
+                "with completions")
     return errors
 
 

@@ -30,7 +30,7 @@ from repro.analysis.lint import FileContext, Finding
 
 RULE = "layering"
 
-RANKS = {"core": 0, "transport": 1, "serving": 2,
+RANKS = {"core": 0, "transport": 1, "predict": 1, "serving": 2,
          "sched": 3, "cache": 3, "traffic": 3}
 
 BANNED_MODULES = {
@@ -48,6 +48,12 @@ BANNED_FROM_IMPORTS = {
     ("repro.serving.simulator", "LinkModel"): "repro.transport",
     ("repro.serving.simulator", "Topology"): "repro.transport",
     ("repro.serving.simulator", "LinkDriver"): "repro.transport.drivers",
+    # v5->v6 two-argument route_prefill adapter, removed in v9: call
+    # policy.route_prefill(req, pool, ctx) directly
+    ("repro.sched", "dispatch_route_prefill"):
+        "nowhere — call policy.route_prefill(req, pool, ctx) directly",
+    ("repro.sched.cluster", "dispatch_route_prefill"):
+        "nowhere — call policy.route_prefill(req, pool, ctx) directly",
 }
 
 BANNED_ATTRS = {

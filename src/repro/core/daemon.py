@@ -553,7 +553,13 @@ class FlexDaemon:
         phase = self.policy.select(ctx)
         if phase is None or not ready[phase]:
             return None
-        op = ready[phase][0]
+        view = ready[phase]
+        # v9: ordering-aware policies pick WHICH ready op of the phase
+        # dispatches (predicted-SJF).  Any ready op is its own stream's
+        # head, so the stream-pending popleft below stays valid.  The
+        # single-op path skips the hook call — the dominant case.
+        op = view[0] if len(view.ready) == 1 \
+            else self.policy.choose(view.ready, ctx)
         self.queues[op.phase].remove(op)
         self._stream_pending[op.vstream].popleft()
         self._stream_inflight[op.vstream] = \

@@ -146,7 +146,8 @@ class Timeline:
             "args": {"op_id": op.op_id, "vstream": op.vstream,
                      "queue_delay_us": max(op.queue_delay, 0.0) * 1e6},
         }
-        for k in ("tokens", "bytes", "flops", "instance", "req_id"):
+        for k in ("tokens", "bytes", "flops", "instance", "req_id",
+                  "ctx", "chunk"):
             if k in op.meta:
                 ev["args"][k] = op.meta[k]
         with self._lk:

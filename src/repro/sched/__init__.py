@@ -15,15 +15,17 @@
 # select convention) was removed after its one-release window — see the
 # migration table in docs/api.md.
 from repro.sched.admission import (AdmissionPolicy, GatedAdmission,
-                                   SloAwareAdmission, UngatedAdmission)
-from repro.sched.cluster import (ClusterPolicy, LeastContendedPolicy,
+                                   PredictiveAdmission, SloAwareAdmission,
+                                   UngatedAdmission)
+from repro.sched.cluster import (INTERACTIVE_PRIORITY, ClusterPolicy,
+                                 JBSQPolicy, LeastContendedPolicy,
                                  LeastLoadedPolicy, PrefixAffinityPolicy,
-                                 RoleSwitchConfig, RoleSwitchPolicy,
-                                 dispatch_route_prefill)
+                                 RoleSwitchConfig, RoleSwitchPolicy)
 from repro.sched.context import AdmissionView, PolicyContext, RouteContext
 from repro.sched.dispatch import (SCHEDULABLE, DispatchPolicy,
                                   DynamicPDConfig, DynamicPDPolicy,
-                                  FIFOPolicy, StaticTimeSlicePolicy)
+                                  FIFOPolicy, PredictedSJFPolicy,
+                                  StaticTimeSlicePolicy)
 from repro.sched.registry import (list_policies, make_policy, policy_kind,
                                   register_policy)
 
@@ -32,13 +34,14 @@ from repro.sched.registry import (list_policies, make_policy, policy_kind,
 SchedulerPolicy = DispatchPolicy
 
 __all__ = [
-    "AdmissionPolicy", "GatedAdmission", "SloAwareAdmission",
-    "UngatedAdmission",
-    "ClusterPolicy", "LeastContendedPolicy", "LeastLoadedPolicy",
-    "PrefixAffinityPolicy", "RoleSwitchConfig", "dispatch_route_prefill",
+    "AdmissionPolicy", "GatedAdmission", "PredictiveAdmission",
+    "SloAwareAdmission", "UngatedAdmission",
+    "ClusterPolicy", "INTERACTIVE_PRIORITY", "JBSQPolicy",
+    "LeastContendedPolicy", "LeastLoadedPolicy",
+    "PrefixAffinityPolicy", "RoleSwitchConfig",
     "RoleSwitchPolicy", "AdmissionView", "PolicyContext", "RouteContext",
     "SCHEDULABLE",
     "DispatchPolicy", "DynamicPDConfig", "DynamicPDPolicy", "FIFOPolicy",
-    "StaticTimeSlicePolicy", "SchedulerPolicy", "list_policies",
-    "make_policy", "policy_kind", "register_policy",
+    "PredictedSJFPolicy", "StaticTimeSlicePolicy", "SchedulerPolicy",
+    "list_policies", "make_policy", "policy_kind", "register_policy",
 ]

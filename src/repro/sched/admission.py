@@ -20,6 +20,11 @@ Policies (registry names in parentheses):
     priority level, plus load shedding of doomed low-priority requests.
     Shedding is HONEST — every shed request ends ``REJECTED`` and is
     counted in telemetry, never silently dropped.
+  * ``PredictiveAdmission`` (``predictive``) — v9: admission order is
+    strict priority then shortest-PREDICTED-service, and a request is
+    shed only when the latency model says its TTFT SLO miss is real —
+    queue age plus predicted work ahead of it already exceeds the SLO —
+    rather than on a blind wait-factor heuristic.
 
 Beyond the yes/no ``admit`` gate, the base class exposes two ordering
 hooks callers drive the waiting queue with (FIFO defaults, so v3/v4
@@ -92,8 +97,14 @@ class GatedAdmission(AdmissionPolicy):
             + (view.prefilling if self.count_prefilling else 0)
         if claimed >= view.max_num_seqs:
             return False
-        if view.kv_free is not None and view.kv_free < view.next_prompt_len:
-            return False
+        if view.kv_free is not None:
+            # prefix-aware (v9): the cached prefix is already resident, so
+            # the gate only needs room for the uncached remainder.  With no
+            # cache configured ``next_cached_tokens`` is 0 and this is the
+            # historical whole-prompt check, bit for bit.
+            need = view.next_prompt_len - view.next_cached_tokens
+            if view.kv_free < need:
+                return False
         return True
 
 
@@ -185,3 +196,135 @@ class SloAwareAdmission(AdmissionPolicy):
         for t, p in self._pass.items():
             out[f"pass_{t or 'untenanted'}"] = round(p, 6)
         return out
+
+
+class PredictiveAdmission(AdmissionPolicy):
+    """Prediction-driven admission (v9 predictive scheduling).
+
+    ``slo_aware`` sheds on a proxy — "waited 2x its TTFT SLO" — which
+    fires late (the request already burned queue time) and blindly (a
+    short request at 2.1x might still finish inside a loose SLO).  With a
+    bound :class:`repro.predict.LatencyModel` this policy answers the
+    question directly: *given the predicted service time of everything
+    ordered ahead of it, can this request still meet its TTFT SLO?*  Only
+    a predicted-real miss is shed, and only below ``shed_below_priority``
+    (protected tiers queue forever rather than reject).
+
+    Ordering is strict priority, then shortest-predicted-service within
+    the top level (the admission-queue analog of ``predicted_sjf``),
+    starvation-bounded by ``max_wait_s``.  Without a bound model the
+    policy degrades safely: prompt length stands in as the service proxy
+    for ordering and NOTHING is shed — no prediction, no verdict, no
+    rejection.
+
+    The admit gate itself stays ungated (dynamic PD: dispatch arbitrates
+    device time) except for an optional TPOT guard: when the caller
+    reports the decode batch's ``avg_context`` and the candidate carries
+    a TPOT SLO, admission defers while the PREDICTED next-step decode
+    latency at batch+1 already breaks that SLO — adding the sequence
+    would push the whole co-located batch over.
+
+    Stateful (counters, clock memo): one instance per serving instance,
+    like the other admission policies."""
+
+    def __init__(self, slack_factor: float = 1.0,
+                 shed_below_priority: int = 2, max_wait_s: float = 0.5):
+        self.slack_factor = float(slack_factor)
+        self.shed_below_priority = int(shed_below_priority)
+        self.max_wait_s = float(max_wait_s)
+        self.latency = None
+        self.length = None
+        self.shed_requests = 0
+        self.reordered = 0
+        self.starvation_picks = 0
+        self.tpot_deferrals = 0
+        self._now = 0.0          # shed() sees the clock; pick_next reuses it
+
+    def bind_predictor(self, latency=None, length=None) -> None:
+        self.latency = latency
+        self.length = length
+
+    def _service(self, req) -> float:
+        """Predicted prefill service time (seconds), or a prompt-length
+        proxy when no model is bound (ordering still works; shedding
+        requires the real thing).  Memoized per request: pick_next and
+        shed re-score the whole waiting queue every admission cycle."""
+        v = getattr(req, "_adm_svc", None)
+        if v is not None:
+            return v
+        if self.latency is not None:
+            p = self.latency.predict("prefill", float(req.prompt_len),
+                                     float(req.prompt_len))
+            if p is not None:
+                req._adm_svc = p
+                return p
+        v = req.prompt_len * 1e-6
+        req._adm_svc = v
+        return v
+
+    def admit(self, view: AdmissionView) -> bool:
+        if view.waiting <= 0:
+            return False
+        if (self.latency is not None and view.avg_context > 0
+                and view.active > 0):
+            # TPOT guard: would admitting one more sequence push the
+            # co-located decode batch past the candidate's TPOT SLO?
+            # (The candidate's SLO was memoized by pick_next, which runs
+            # immediately before this gate in both drivers.)
+            step = self.latency.predict("decode", float(view.active + 1),
+                                        float(view.avg_context))
+            slo = getattr(self, "_next_tpot_slo", 0.0)
+            if step is not None and slo and step > slo:
+                self.tpot_deferrals += 1
+                return False
+        return True
+
+    def pick_next(self, waiting: List) -> int:
+        if len(waiting) <= 1:
+            self._memo_slo(waiting[0] if waiting else None)
+            return 0
+        top = max(r.priority for r in waiting)
+        idxs = [i for i, r in enumerate(waiting) if r.priority == top]
+        oldest = min(idxs, key=lambda i: waiting[i].arrival_time)
+        if self._now - waiting[oldest].arrival_time > self.max_wait_s:
+            self.starvation_picks += 1
+            self._memo_slo(waiting[oldest])
+            return oldest
+        best = min(idxs, key=lambda i: self._service(waiting[i]))
+        if best != idxs[0]:
+            self.reordered += 1
+        self._memo_slo(waiting[best])
+        return best
+
+    def _memo_slo(self, req) -> None:
+        slo = getattr(req, "slo", None) if req is not None else None
+        self._next_tpot_slo = float(slo.tpot_s) if slo is not None else 0.0
+
+    def shed(self, waiting: List, now: float) -> List:
+        self._now = now
+        if self.latency is None or not waiting:
+            return []
+        # predicted work ahead of each request under this policy's own
+        # ordering: higher priority first, shorter predicted service first
+        order = sorted(range(len(waiting)),
+                       key=lambda i: (-waiting[i].priority,
+                                      self._service(waiting[i]),
+                                      waiting[i].arrival_time))
+        doomed, ahead = [], 0.0
+        for i in order:
+            r = waiting[i]
+            svc = self._service(r)
+            if (r.priority < self.shed_below_priority and r.slo is not None
+                    and now - r.arrival_time + ahead + svc
+                    > self.slack_factor * r.slo.ttft_s):
+                doomed.append(r)     # predicted-real miss: free its FLOPs
+            else:
+                ahead += svc         # shed work never reaches the device
+        self.shed_requests += len(doomed)
+        return doomed
+
+    def debug_state(self) -> Dict[str, float]:
+        return {"shed_requests": float(self.shed_requests),
+                "adm_reordered": float(self.reordered),
+                "adm_starvation_picks": float(self.starvation_picks),
+                "tpot_deferrals": float(self.tpot_deferrals)}

@@ -22,6 +22,15 @@ Policies (registry names in parentheses):
     instance under prefill backlog flips role to prefill — draining its
     in-flight decode KV through the copy-engine path — and flips back when
     TTFT pressure subsides (or decode pressure returns).
+  * ``JBSQPolicy`` (``jbsq``) — v9 predictive routing: bounded
+    join-the-shortest-PREDICTED-queue.  Prefills join the instance with
+    the least predicted queued work (latency model over every queued
+    prompt), subject to a per-instance depth bound; decode placement
+    minimizes predicted outstanding tokens (length model).
+
+Routing hooks take ``(req, pool, ctx)`` directly; the one-release v5
+two-argument adapter (``dispatch_route_prefill``) was removed in v9 and
+is on the layering ban-list so it cannot quietly return.
 
 The module is duck-typed against ``repro.serving.simulator`` objects
 (instances expose ``failed / ewma_step / load() / active / decode_pending /
@@ -32,49 +41,28 @@ multi-replica RealEngine front end.
 from __future__ import annotations
 
 import dataclasses
-import inspect
-import warnings
 from typing import Dict, List, Optional
 
 from repro.core.api import Phase
 from repro.sched.context import RouteContext
 
+# priority at or above which a request counts as interactive-tier for
+# tier-aware routing tiebreaks (matches ``default_tiers``: interactive=2)
+INTERACTIVE_PRIORITY = 2
 
-def dispatch_route_prefill(policy, req, pool: List,
-                           ctx: Optional[RouteContext] = None):
-    """Call ``policy.route_prefill`` through the v5 -> v6 adapter.
 
-    v6 redesigned the hook to ``route_prefill(req, pool, ctx)`` with a
-    :class:`RouteContext` carrying per-instance prefix-match lengths and
-    loads.  External policies written against the v5 two-argument
-    signature keep working for one release: the adapter inspects the
-    bound method once per policy object, caches the verdict, and calls
-    legacy policies without the context — with a ``DeprecationWarning``
-    naming the migration (mirroring the v3 PolicyContext one)."""
-    fn = policy.route_prefill
-    takes_ctx = getattr(policy, "_route_prefill_takes_ctx", None)
-    if takes_ctx is None:
-        try:
-            params = inspect.signature(fn).parameters
-            takes_ctx = len(params) >= 3 or "ctx" in params or any(
-                p.kind is inspect.Parameter.VAR_KEYWORD
-                for p in params.values())
-        except (TypeError, ValueError):
-            takes_ctx = True
-        try:
-            policy._route_prefill_takes_ctx = takes_ctx
-        except AttributeError:
-            pass
-        if not takes_ctx:
-            warnings.warn(
-                f"{type(policy).__name__}.route_prefill(req, pool) uses "
-                "the v5 two-argument signature; migrate to "
-                "route_prefill(req, pool, ctx) — the adapter will be "
-                "removed next release (docs/api.md, v6 migration table)",
-                DeprecationWarning, stacklevel=3)
-    if takes_ctx:
-        return fn(req, pool, ctx)
-    return fn(req, pool)
+def _tier_penalty(ctx: Optional[RouteContext], name: str) -> float:
+    """Tier-isolation tiebreak (v9): interactive requests pack onto
+    instances already serving interactive work (negative penalty for a
+    high count), everything else avoids them — so under contention the
+    interactive tier concentrates on a subset of instances instead of
+    every instance carrying a little batch churn.  0 when the cluster did
+    not populate tier context (policy didn't ask, or tenant-blind
+    traffic)."""
+    if ctx is None or not ctx.tier_active:
+        return 0.0
+    n = float(ctx.tier_active.get(name, 0))
+    return -n if ctx.priority >= INTERACTIVE_PRIORITY else n
 
 
 class ClusterPolicy:
@@ -107,10 +95,9 @@ class ClusterPolicy:
                       ctx: Optional[RouteContext] = None):
         """Pick the instance that prefills ``req`` (None = no capacity).
 
-        ``ctx`` (v6) carries per-instance prefix-match lengths and loads;
-        load-only policies may ignore it.  Legacy two-argument overrides
-        are honored through :func:`dispatch_route_prefill` for one
-        release."""
+        ``ctx`` (v6) carries per-instance prefix-match lengths and loads
+        (plus tenant-tier counts for ``wants_tier_ctx`` policies, v9);
+        load-only policies may ignore it."""
         raise NotImplementedError
 
     def route_decode(self, req, src, pool: List):
@@ -154,10 +141,22 @@ class LeastContendedPolicy(LeastLoadedPolicy):
     — a slow-moving tiebreak that learns persistently hot planes).  Ties
     fall back to instance load, so with an idle fabric this degrades to
     least-loaded routing.  Bound clusters without a topology (or unit
-    tests routing bare pools) also degrade to least-loaded."""
+    tests routing bare pools) also degrade to least-loaded.
+
+    v9: prefill routing stays least-loaded but breaks LOAD ties toward
+    interactive-tier isolation (see :func:`_tier_penalty`) — the policy
+    sets ``wants_tier_ctx`` so the cluster populates per-instance
+    interactive counts in the route context."""
 
     # one live flow on a segment outweighs any accumulated-delay tiebreak
     _LIVE_FLOW_WEIGHT = 1e3
+    wants_tier_ctx = True
+
+    def route_prefill(self, req, pool, ctx=None):
+        ok = self.healthy(pool)
+        if not ok:
+            return None
+        return min(ok, key=lambda i: (i.load(), _tier_penalty(ctx, i.name)))
 
     def route_decode(self, req, src, pool):
         ok = self.healthy(pool)
@@ -291,9 +290,12 @@ class PrefixAffinityPolicy(LeastContendedPolicy):
     covers at least ``min_match_pages`` index pages — recomputing less
     than a page is cheaper than any affinity imbalance.  Ties break by
     instance load.  With no usable match (cold cache, tokenless
-    requests, or a v5 caller passing no context) the policy degrades to
+    requests, or a caller passing no context) the policy degrades to
     :class:`LeastContendedPolicy` — load-based prefill routing plus its
-    topology-aware decode routing, which this class inherits unchanged."""
+    topology-aware decode routing, which this class inherits unchanged.
+
+    v9: load ties (among tied-best-match candidates AND on the fallback
+    path) break toward interactive-tier isolation, like the parent."""
 
     def __init__(self, min_match_pages: int = 1):
         self.min_match_pages = max(1, int(min_match_pages))
@@ -311,10 +313,113 @@ class PrefixAffinityPolicy(LeastContendedPolicy):
                 cands = [i for i in ok
                          if ctx.match_tokens.get(i.name, 0) == best]
                 self.affinity_routes += 1
-                return min(cands, key=lambda i: i.load())
+                return min(cands, key=lambda i: (i.load(),
+                                                 _tier_penalty(ctx, i.name)))
         self.fallback_routes += 1
-        return min(ok, key=lambda i: i.load())
+        return min(ok, key=lambda i: (i.load(), _tier_penalty(ctx, i.name)))
 
     def debug_state(self):
         return {"affinity_routes": self.affinity_routes,
                 "fallback_routes": self.fallback_routes}
+
+
+class JBSQPolicy(LeastLoadedPolicy):
+    """Bounded join-the-shortest-predicted-queue routing (v9).
+
+    JBSQ(k) from the predictive-serving literature: an arriving prefill
+    joins the instance whose queue holds the least PREDICTED work —
+    seconds of modeled prefill service summed over every queued prompt,
+    not a request count, so one 8k-token monster counts for what it
+    costs — among instances with fewer than ``bound`` queued prefills.
+    When every instance is at the bound, the depth filter drops
+    (work-conserving: routing never refuses a request for the bound; the
+    overflow is counted in ``debug_state`` instead).
+
+    Decode placement uses the length model the same way: join the
+    instance with the least predicted OUTSTANDING generation (predicted
+    final length minus tokens already generated, summed over its decode
+    sets).  Without bound predictors both paths degrade to least-loaded.
+
+    Tier tiebreaks: predicted-work ties (idle fleet) break by load, then
+    toward interactive-tier isolation like the other v9 routers."""
+
+    wants_tier_ctx = True
+
+    def __init__(self, bound: int = 4):
+        self.bound = max(1, int(bound))
+        self.latency = None
+        self.length = None
+        self.bound_exceeded = 0
+        self.predicted_routes = 0
+        self.fallback_routes = 0
+
+    def bind_predictor(self, latency=None, length=None) -> None:
+        self.latency = latency
+        self.length = length
+
+    def _prefill_work(self, inst) -> float:
+        """Predicted seconds of prefill service queued on one instance."""
+        total = 0.0
+        for r in list(inst.prefill_waiting) + list(inst.prefilling.values()):
+            left = max(r.prompt_len - getattr(r, "cached_tokens", 0), 1)
+            # memo per (request, remaining-tokens): one queued request is
+            # re-scored on every arrival, and this scan runs inside the
+            # routing path the threaded drive times for real
+            memo = getattr(r, "_jbsq_svc", None)
+            if memo is not None and memo[0] == left:
+                total += memo[1]
+                continue
+            p = self.latency.predict("prefill", float(left), float(left))
+            v = p if p is not None else left * 1e-6
+            r._jbsq_svc = (left, v)
+            total += v
+        return total
+
+    def route_prefill(self, req, pool, ctx=None):
+        ok = self.healthy(pool)
+        if not ok:
+            return None
+
+        def depth(i) -> int:
+            return len(i.prefill_waiting) + len(i.prefilling)
+
+        under = [i for i in ok if depth(i) < self.bound]
+        if not under:
+            self.bound_exceeded += 1
+            under = ok
+        if self.latency is not None and self.latency.fitted:
+            self.predicted_routes += 1
+            return min(under, key=lambda i: (self._prefill_work(i), i.load(),
+                                             _tier_penalty(ctx, i.name)))
+        self.fallback_routes += 1
+        return min(under, key=lambda i: (i.load(),
+                                         _tier_penalty(ctx, i.name)))
+
+    def route_decode(self, req, src, pool):
+        ok = self.healthy(pool)
+        if not ok:
+            return None
+        if self.length is None:
+            return min(ok, key=lambda i: i.load())
+
+        def outstanding(i) -> float:
+            total = 0.0
+            for r in list(i.active) + list(i.decode_pending):
+                # freeze the length prediction at the first scoring of
+                # each request (the sketch keeps learning for LATER
+                # requests; re-querying it per scan buys nothing but a
+                # per-route O(batch) quantile walk)
+                pred = getattr(r, "_len_pred", None)
+                if pred is None:
+                    pred = self.length.predict_for(r)
+                    r._len_pred = pred
+                total += max(pred - getattr(r, "generated", 0), 1.0)
+            return total
+
+        return min(ok, key=lambda i: (outstanding(i), i.load()))
+
+    def debug_state(self):
+        return {"jbsq_bound": float(self.bound),
+                "jbsq_bound_exceeded": float(self.bound_exceeded),
+                "jbsq_predicted_routes": float(self.predicted_routes),
+                "jbsq_fallback_routes": float(self.fallback_routes)}

@@ -102,8 +102,14 @@ class RouteContext:
     and reports per-instance longest-match lengths alongside the load
     signal.  ``prefix_affinity`` routes on ``match_tokens``; load-only
     policies ignore the context entirely (it defaults to ``None`` on the
-    base signature, and 2-argument v5 policies are still called through
-    a one-release adapter — see ``dispatch_route_prefill``)."""
+    base signature).  The one-release v5 two-argument adapter
+    (``dispatch_route_prefill``) was removed in v9 — policies take
+    ``(req, instances, ctx)`` directly.
+
+    v9 adds tenant-tier fields for tier-aware tiebreaks.  Populating
+    ``tier_active`` costs a scan over every instance's in-flight sets, so
+    the cluster fills it only for policies that declare
+    ``wants_tier_ctx = True`` — load-only routing stays O(instances)."""
 
     now: float = 0.0
     # instance name -> longest indexed prefix match for THIS request, in
@@ -114,6 +120,13 @@ class RouteContext:
     # prefix-index block granularity (0 = no cache tier configured)
     page_tokens: int = 0
     cluster: Any = None
+    # multi-tenancy (v9): the routed request's tenant/priority, and per-
+    # instance counts of in-flight interactive-tier requests (priority >=
+    # INTERACTIVE_PRIORITY).  Empty unless the policy sets
+    # ``wants_tier_ctx``.
+    tenant: str = ""
+    priority: int = 0
+    tier_active: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def best_match(self) -> int:
         return max(self.match_tokens.values(), default=0)
@@ -140,3 +153,10 @@ class AdmissionView:
     # priority-aware ones.
     next_tenant: str = ""
     next_priority: int = 0
+    # prefix-cache-aware admission (v9): tokens of the candidate's prompt
+    # already resident in the instance's prefix cache — the KV gate only
+    # needs room for the UNCACHED remainder.  0 when no cache runs.
+    next_cached_tokens: int = 0
+    # predictive admission (v9): mean context length of the decode batch,
+    # for TPOT-impact prediction.  0 when the caller does not report it.
+    avg_context: int = 0

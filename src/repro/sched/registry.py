@@ -28,13 +28,14 @@ import dataclasses
 from typing import Callable, List
 
 from repro.registry import Registry
-from repro.sched.admission import (GatedAdmission, SloAwareAdmission,
-                                   UngatedAdmission)
-from repro.sched.cluster import (LeastContendedPolicy, LeastLoadedPolicy,
-                                 PrefixAffinityPolicy, RoleSwitchConfig,
-                                 RoleSwitchPolicy)
+from repro.sched.admission import (GatedAdmission, PredictiveAdmission,
+                                   SloAwareAdmission, UngatedAdmission)
+from repro.sched.cluster import (JBSQPolicy, LeastContendedPolicy,
+                                 LeastLoadedPolicy, PrefixAffinityPolicy,
+                                 RoleSwitchConfig, RoleSwitchPolicy)
 from repro.sched.dispatch import (DynamicPDConfig, DynamicPDPolicy,
-                                  FIFOPolicy, StaticTimeSlicePolicy)
+                                  FIFOPolicy, PredictedSJFPolicy,
+                                  StaticTimeSlicePolicy)
 
 _REG = Registry("policy")
 
@@ -79,6 +80,8 @@ register_policy("static_slice", "dispatch", StaticTimeSlicePolicy,
                 knobs=("decode_share",))
 register_policy("dynamic_pd", "dispatch", _dynamic_pd,
                 knobs=("decode_share",) + _cfg_knobs(DynamicPDConfig))
+register_policy("predicted_sjf", "dispatch", PredictedSJFPolicy,
+                knobs=("max_wait_s",))
 # --- admission -------------------------------------------------------------
 register_policy("ungated", "admission", UngatedAdmission)
 register_policy("gated", "admission", GatedAdmission,
@@ -86,6 +89,8 @@ register_policy("gated", "admission", GatedAdmission,
 register_policy("slo_aware", "admission", SloAwareAdmission,
                 knobs=("shed_wait_factor", "shed_below_priority",
                        "max_queue_depth"))
+register_policy("predictive", "admission", PredictiveAdmission,
+                knobs=("slack_factor", "shed_below_priority", "max_wait_s"))
 # --- cluster ---------------------------------------------------------------
 register_policy("least_loaded", "cluster", LeastLoadedPolicy)
 register_policy("least_contended", "cluster", LeastContendedPolicy)
@@ -93,3 +98,4 @@ register_policy("prefix_affinity", "cluster", PrefixAffinityPolicy,
                 knobs=("min_match_pages",))
 register_policy("role_switch", "cluster", _role_switch,
                 knobs=_cfg_knobs(RoleSwitchConfig))
+register_policy("jbsq", "cluster", JBSQPolicy, knobs=("bound",))

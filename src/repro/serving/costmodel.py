@@ -235,6 +235,9 @@ class CostModel:
                       + batch * self.kv_bytes_total(avg_context) / spec.chips),
             "flops": 2.0 * self.n_active * batch / spec.chips,
             "tokens": batch,
+            # v9 predictors featurize on (tokens, ctx); for decode the
+            # context is the batch's mean sequence length
+            "ctx": avg_context,
         }
 
     def prefill_meta(self, spec: InstanceSpec, tokens: int) -> Dict:

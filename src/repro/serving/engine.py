@@ -62,7 +62,7 @@ from repro.core.session import connect
 from repro.sched import (AdmissionPolicy, AdmissionView, ClusterPolicy,
                          DynamicPDConfig, DynamicPDPolicy, FIFOPolicy,
                          GatedAdmission, RouteContext, UngatedAdmission,
-                         dispatch_route_prefill, make_policy, policy_kind)
+                         make_policy, policy_kind)
 from repro.models.model import Model
 from repro.serving.request import Request, RequestState, summarize
 
@@ -336,11 +336,11 @@ class RealEngine:
             # the TARGET replica's occupancy — one admission
             # implementation for any replica count
             i = self.admission.pick_next(self.waiting_admission)
-            # v6 routing signature: context-carrying dispatch through the
-            # signature adapter (the real engine has no prefix caches yet,
-            # so the context only carries the clock and per-replica loads)
-            rep = dispatch_route_prefill(
-                self.router, self.waiting_admission[i], self.replicas,
+            # v6+ routing signature, called directly (the v5 two-argument
+            # adapter was removed in v9; the real engine has no prefix
+            # caches yet, so the context only carries clock and loads)
+            rep = self.router.route_prefill(
+                self.waiting_admission[i], self.replicas,
                 RouteContext(now=time.monotonic(),
                              loads={r.name: r.load()
                                     for r in self.replicas}))

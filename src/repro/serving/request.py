@@ -55,6 +55,10 @@ class Request:
     # ``summarize`` breaks attainment down per tier
     tenant: str = ""
     slo: Optional[SLO] = None
+    # traffic class that generated this request ("" when hand-built) —
+    # the v9 output-length predictor keys its quantile sketches on
+    # (prompt_class, tenant)
+    prompt_class: str = ""
     # real-mode payload (None in simulation)
     prompt_tokens: Optional[object] = None
     output_tokens: List[int] = dataclasses.field(default_factory=list)

@@ -58,11 +58,12 @@ from repro.configs.base import ModelConfig
 from repro.core.api import OpDescriptor, OpType, Phase
 from repro.core.queues import flops_key
 from repro.core.session import connect
+from repro.predict import ChunkAdapter, cost_model_samples, make_predictor
 # flexlint: ignore[layering] -- serving -> sched policy-plane use is the API
-from repro.sched import (AdmissionPolicy, AdmissionView, ClusterPolicy,
-                         DynamicPDConfig, DynamicPDPolicy, FIFOPolicy,
-                         GatedAdmission, RouteContext, UngatedAdmission,
-                         dispatch_route_prefill, make_policy, policy_kind)
+from repro.sched import (INTERACTIVE_PRIORITY, AdmissionPolicy, AdmissionView,
+                         ClusterPolicy, DynamicPDConfig, DynamicPDPolicy,
+                         FIFOPolicy, GatedAdmission, RouteContext,
+                         UngatedAdmission, make_policy, policy_kind)
 from repro.serving.costmodel import CostModel, InstanceSpec
 from repro.serving.request import TERMINAL_STATES, Request, RequestState
 # KV transport subsystem: topology-resolved multi-hop paths, the path-aware
@@ -349,6 +350,14 @@ class SimInstance:
         # rejection telemetry (v5): requests the admission policy shed on
         # this instance — honest accounting's per-instance counter
         self.rejected = 0                           # guarded-by: _lock
+        # predictive scheduling (v9, both set by the Cluster when the
+        # deployment configures predictors; None = pre-v9 behavior):
+        #   chunk_adapter  — retunes chunk_prefill_tokens per enqueue from
+        #                    predicted decode-slack (repro.predict.adapt)
+        #   predict_observe(phase, tokens, ctx, dur) — latency-model
+        #                    honesty hook, called per realized compute op
+        self.chunk_adapter = None                   # guarded-by: _lock
+        self.predict_observe: Optional[Callable] = None
         self.on_request_done: Optional[Callable] = None
         self.on_request_rejected: Optional[Callable] = None
         self.on_prefill_done: Optional[Callable] = None
@@ -401,16 +410,22 @@ class SimInstance:
     def _admission_view(self, idx: int = 0) -> AdmissionView:  # holds: _lock
         cand = self.prefill_waiting[idx] \
             if idx < len(self.prefill_waiting) else None
+        b = len(self.active)
         return AdmissionView(
             waiting=len(self.prefill_waiting),
             next_prompt_len=cand.prompt_len if cand else 0,
-            active=len(self.active),
+            active=b,
             decode_pending=len(self.decode_pending),
             prefilling=len(self.prefilling),
             max_num_seqs=self.sim_cfg.max_num_seqs,
             kv_free=self.kv_free(),
             next_tenant=cand.tenant if cand else "",
-            next_priority=cand.priority if cand else 0)
+            next_priority=cand.priority if cand else 0,
+            # prefix-aware gate (v9): pure probe of THIS instance's cache
+            # for the candidate — 0 with the cache off ("none"), keeping
+            # the historical whole-prompt KV check bit-identical
+            next_cached_tokens=self.cache.match_tokens(cand) if cand else 0,
+            avg_context=(self._active_tokens // b) if b else 0)
 
     def _drain_admission(self) -> None:  # holds: _lock
         """Admit waiting requests per the AdmissionPolicy.  The policy
@@ -446,12 +461,23 @@ class SimInstance:
         if self.on_request_rejected is not None:
             self.on_request_rejected(self, req)
 
-    def _prefill_chunks(self, prompt_len: int) -> List[tuple]:
+    def _tightest_tpot(self) -> float:  # holds: _lock
+        """Tightest TPOT SLO among the decoding requests (0 = none carries
+        one) — the budget the chunk adapter protects."""
+        slos = [r.slo.tpot_s for r in self.active
+                if r.slo is not None and r.slo.tpot_s > 0]
+        return min(slos) if slos else 0.0
+
+    def _prefill_chunks(self, prompt_len: int,
+                        chunk_tokens: Optional[int] = None) -> List[tuple]:
         """(tokens, context_offset) per micro-batch chunk: the prompt split
         into at most ``chunk_prefill_tokens``-token launches (one chunk
         when 0).  Chunks of one request ride one prefill stream, so they
-        dispatch FIFO within their queue class."""
-        c = self.sim_cfg.chunk_prefill_tokens
+        dispatch FIFO within their queue class.  ``chunk_tokens``
+        overrides the static config knob (the v9 chunk adapter's per-
+        enqueue decision)."""
+        c = self.sim_cfg.chunk_prefill_tokens \
+            if chunk_tokens is None else chunk_tokens
         if c <= 0 or prompt_len <= c:
             return [(prompt_len, 0)]
         out, off = [], 0
@@ -489,7 +515,15 @@ class SimInstance:
         # stream so program order holds without event edges
         stream = self.streams_p[self._rr_prefill % len(self.streams_p)]
         self._rr_prefill += 1
-        chunks = self._prefill_chunks(req.prompt_len - cached)
+        adapted = None
+        if self.chunk_adapter is not None:
+            # v9 adaptive chunking: size this prompt's chunks to the
+            # predicted decode-slack of the CURRENT co-located batch
+            b = len(self.active)
+            _, avg_ctx = self._decode_ctx()
+            adapted = self.chunk_adapter.chunk_tokens(
+                b, avg_ctx, self._tightest_tpot())
+        chunks = self._prefill_chunks(req.prompt_len - cached, adapted)
         # one vectorized cost-model pass prices every chunk of the prompt
         # (bit-identical to per-chunk prefill_time calls — see
         # CostModel.prefill_times)
@@ -677,6 +711,12 @@ class SimInstance:
                 # compute pipeline doesn't slow the DMA engine
                 return float(op.meta.get("est_duration", 0.0))
             dur *= self.slow_factor
+            if self.predict_observe is not None:
+                # v9 honesty loop: grade the latency model on the REALIZED
+                # duration (straggler slowdown included) of every compute op
+                t = float(op.meta.get("tokens", 1))
+                self.predict_observe(op.phase.value, t,
+                                     float(op.meta.get("ctx", t)), dur)
             self.ewma_step = 0.8 * self.ewma_step + 0.2 * dur \
                 if self.ewma_step else dur
             return dur
@@ -915,6 +955,20 @@ class DeploymentSpec:
     # cluster constructs a fresh instance per SimInstance.
     admission_policy: str = ""
     admission_knobs: Dict = dataclasses.field(default_factory=dict)
+    # predictive scheduling (v9): learned models from the repro.predict
+    # registry, strictly opt-in — both empty ("") leaves every code path
+    # bit-identical to v8.  The latency predictor is bootstrap-fitted from
+    # the deployment's own cost model at build time unless its ``trace``
+    # knob already fitted it from a profile artifact; the length predictor
+    # learns online from completions.  ``adaptive_chunking`` retunes
+    # ``chunk_prefill_tokens`` per prefill from predicted decode-slack and
+    # requires a latency predictor.
+    latency_predictor: str = ""
+    latency_knobs: Dict = dataclasses.field(default_factory=dict)
+    length_predictor: str = ""
+    length_knobs: Dict = dataclasses.field(default_factory=dict)
+    adaptive_chunking: bool = False
+    chunk_knobs: Dict = dataclasses.field(default_factory=dict)
 
     @property
     def total_chips(self) -> int:
@@ -1036,6 +1090,20 @@ class Cluster:
         self.policy: ClusterPolicy = make_policy(
             deploy.cluster_policy or "least_loaded", **deploy.cluster_knobs)
         self.policy.bind(self)
+        # predictive scheduling (v9): cluster-owned learned models, built
+        # by registry name and shared by every plane that can use them
+        # (bound in _build; instances feed realized durations back through
+        # predict_observe).  Strictly opt-in: both None by default.
+        self.latency_model = make_predictor(
+            deploy.latency_predictor, **deploy.latency_knobs) \
+            if deploy.latency_predictor else None
+        self.length_model = make_predictor(
+            deploy.length_predictor, **deploy.length_knobs) \
+            if deploy.length_predictor else None
+        if deploy.adaptive_chunking and self.latency_model is None:
+            raise ValueError(
+                "adaptive_chunking requires a latency_predictor "
+                "(the chunk adapter inverts its prefill model)")
         self.role_flips = 0                         # guarded-by: _lock
         self._tick_armed = False                    # guarded-by: _lock
         # transfer-id -> {"req", "src", "dst", "tokens", "remaining",
@@ -1091,6 +1159,24 @@ class Cluster:
                 plan.append((f"C{i}", InstanceSpec(f"C{i}", d.colocated_chips),
                              self._dispatch_policy(), sim_cfg, "both"))
         policies = [p for _, _, p, _, _ in plan]
+        # v9 bootstrap fit: a configured-but-unfitted latency model (no
+        # ``trace`` knob) trains on the deployment's own analytic roofline
+        # — a synthetic grid priced by the cost model per distinct
+        # instance geometry.  Deterministic, and honest: the calibration
+        # report still measures the LINEAR model against the full
+        # (nonlinear) roofline surface.
+        if self.latency_model is not None and not self.latency_model.fitted:
+            phase_map = {"prefill": ("prefill",), "decode": ("decode",),
+                         "both": ("prefill", "decode")}
+            samples, seen = [], set()
+            for _, spec, _, _, role in plan:
+                key = (spec.chips, role)
+                if key not in seen:
+                    seen.add(key)
+                    samples += cost_model_samples(self.cost, spec,
+                                                  phase_map[role])
+            self.latency_model.fit(samples)
+        self._bind_predictors(self.policy)
         queue_spec = {"compute": max(1, self.sim_cfg.compute_queues),
                       "copy": max(1, self.sim_cfg.copy_queues)}
         if self.drive == "stepped":
@@ -1121,6 +1207,17 @@ class Cluster:
                                lock=self._lock, drive=self.drive)
             # dispatch policies see link-queueing pressure (PolicyContext)
             self.session.daemon(i).link_stats_fn = self.link_model.stats
+            # v9: predictor-aware planes get the cluster's models; the
+            # instance grades the latency model on every realized op and
+            # sizes prefill chunks from predicted decode-slack
+            self._bind_predictors(policies[i], inst.admission)
+            if self.latency_model is not None:
+                inst.predict_observe = self.latency_model.observe
+                if d.adaptive_chunking:
+                    inst.chunk_adapter = ChunkAdapter(
+                        self.latency_model,
+                        base_tokens=sim_cfg.chunk_prefill_tokens,
+                        **d.chunk_knobs)
             inst.link_driver = self.link_driver
             inst.compute_driver = self.compute_driver
             # terminal-transition hooks (v5): completions and rejections
@@ -1146,6 +1243,17 @@ class Cluster:
         else:
             self.prefill_pool = self.decode_pool = self.instances
 
+    def _bind_predictors(self, *policies) -> None:
+        """Hand the cluster's learned models to any policy that takes them
+        (duck-typed ``bind_predictor(latency=..., length=...)``) — no-op
+        when no predictor is configured or the policy has no hook."""
+        if self.latency_model is None and self.length_model is None:
+            return
+        for p in policies:
+            fn = getattr(p, "bind_predictor", None)
+            if fn is not None:
+                fn(latency=self.latency_model, length=self.length_model)
+
     # ------------------------------------------------------------ routing
     def _healthy(self, pool: List[SimInstance]) -> List[SimInstance]:
         return self.policy.healthy(pool)
@@ -1162,6 +1270,20 @@ class Cluster:
                 for i in self.prefill_pool:
                     if not i.failed and i.cache.enabled:
                         matches[i.name] = i.cache.match_chain(hashes)
+        tier: Dict[str, int] = {}
+        if getattr(self.policy, "wants_tier_ctx", False):
+            # tier-aware tiebreaks (v9): per-instance count of in-flight
+            # interactive-tier requests.  Opt-in per policy class — the
+            # scan is O(in-flight requests) per routing decision, so
+            # load-only policies keep the O(instances) hot path.
+            for i in self.prefill_pool:
+                if i.failed:
+                    continue
+                tier[i.name] = sum(
+                    1 for r in itertools.chain(
+                        i.prefill_waiting, i.prefilling.values(),
+                        i.active, i.decode_pending)
+                    if r.priority >= INTERACTIVE_PRIORITY)
         return RouteContext(
             now=self.loop.clock.t,
             match_tokens=matches,
@@ -1169,14 +1291,17 @@ class Cluster:
                    if not i.failed},
             page_tokens=self.sim_cfg.prefix_page_tokens
             if self._prefix_on else 0,
-            cluster=self)
+            cluster=self,
+            tenant=req.tenant,
+            priority=req.priority,
+            tier_active=tier)
 
     def _route_prefill(self, req) -> Optional[SimInstance]:  # holds: _lock
         """All cluster prefill routing funnels through here: builds the
-        RouteContext and dispatches through the v5->v6 signature adapter
-        (legacy 2-arg policies keep working, with a DeprecationWarning)."""
-        return dispatch_route_prefill(self.policy, req, self.prefill_pool,
-                                      self._route_ctx(req))
+        RouteContext and calls the policy's v6+ three-argument hook
+        directly (the v5 two-argument adapter was removed in v9)."""
+        return self.policy.route_prefill(req, self.prefill_pool,
+                                         self._route_ctx(req))
 
     def submit(self, req: Request) -> None:
         with self._lock:
@@ -1202,6 +1327,11 @@ class Cluster:
         self._notify_sources(req)
 
     def _request_done(self, inst, req: Request) -> None:  # holds: _lock
+        if self.length_model is not None:
+            # v9 online learning: every completion scores the current
+            # length prediction, then sharpens the (class, tenant) sketch
+            self.length_model.observe(req.prompt_class, req.tenant,
+                                      req.generated)
         self._notify_sources(req)
 
     def _request_rejected(self, inst, req: Request) -> None:  # holds: _lock
@@ -1720,8 +1850,45 @@ class Cluster:
                 out["calibration"] = self._backend.calibration()
             if self._prefix_on:
                 out["prefix_cache"] = self.prefix_cache_telemetry()
+            if self.latency_model is not None \
+                    or self.length_model is not None:
+                out["prediction"] = self.prediction_telemetry()
             out["policy"] = self.policy_telemetry()
             return out
+
+    def prediction_telemetry(self) -> Dict:  # holds: _lock
+        """Honest v9 prediction accounting: per-model calibration + online
+        error (MAPE, p90, over/under counts) and the scheduling decisions
+        the models actually drove — including the ones the learned model
+        OVERTURNED relative to the analytic estimate, the misprediction
+        cost a reader should weigh against the p95 win."""
+        out: Dict = {}
+        if self.latency_model is not None:
+            out["latency"] = self.latency_model.report()
+        if self.length_model is not None:
+            out["length"] = self.length_model.report()
+        decisions: Dict[str, float] = {}
+        polled = [self.policy] + [i.admission for i in self.instances] \
+            + [i.daemon.policy for i in self.instances]
+        seen = set()
+        for p in polled:
+            if id(p) in seen:
+                continue
+            seen.add(id(p))
+            for k in ("reordered", "starvation_picks", "overturned",
+                      "bound_exceeded", "tpot_deferrals"):
+                v = getattr(p, k, None)
+                if v is not None:
+                    decisions[k] = decisions.get(k, 0.0) + float(v)
+        adapters = [i.chunk_adapter for i in self.instances
+                    if i.chunk_adapter is not None]
+        for a in adapters:
+            for k, v in a.debug_state().items():
+                if k in ("chunk_decisions", "chunk_adapted"):
+                    decisions[k] = decisions.get(k, 0.0) + float(v)
+        if decisions:
+            out["decisions"] = decisions
+        return out
 
     def prefix_cache_telemetry(self) -> Dict:  # holds: _lock
         """Prefix-reuse observability (v6): aggregate hit rate, recompute

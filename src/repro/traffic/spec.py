@@ -122,7 +122,8 @@ class TrafficSpec:
                 prompt_len=int(ins[i]), max_new_tokens=int(outs[i]),
                 arrival_time=float(arrivals[i]),
                 tenant=ten.name if ten else "",
-                slo=ten.slo if ten else None))
+                slo=ten.slo if ten else None,
+                prompt_class=self.classes[cls_idx[i]].name))
         return reqs
 
     def sample_one(self, rng) -> Request:
@@ -141,4 +142,5 @@ class TrafficSpec:
                                             c.output_len,
                                             **c.output_knobs)[0]),
             tenant=ten.name if ten else "",
-            slo=ten.slo if ten else None)
+            slo=ten.slo if ten else None,
+            prompt_class=c.name)

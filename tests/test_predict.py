@@ -1,0 +1,175 @@
+"""Predictive-scheduling model layer (v9): fits, sketches, registry.
+
+What is pinned down here:
+  * LatencyModel fits are DETERMINISTIC (same samples -> same weights,
+    bit for bit) and every fit attaches a finite calibration report.
+  * tau turns the ridge fit into a quantile predictor whose training
+    over-prediction rate actually tracks tau.
+  * invert_tokens is the real inverse of predict at fixed context.
+  * QuantileSketch quantiles are MONOTONE in q under streaming updates —
+    any prefix of any stream (the property the chunk adapter and JBSQ
+    rely on when they compare predictions).
+  * LengthPredictor sharpens per-(class, tenant) and never predicts 0.
+  * make_predictor follows the unified registry contract: the same
+    UnknownNameError / strict-knob TypeError shapes as make_policy.
+  * to_dict/from_dict round-trips a fitted model exactly.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.predict import (LatencyModel, LengthPredictor, OpSample,
+                           QuantileSketch, list_predictors, make_predictor,
+                           samples_from_events)
+from repro.registry import UnknownNameError
+
+
+def _samples(n=200, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        t = float(rng.integers(32, 4096))
+        c = t * float(rng.uniform(1.0, 3.0))
+        # linear-ish ground truth + mild noise: what a roofline looks like
+        dur = 1e-4 + 2e-6 * t + 3e-8 * t * c / 1e3 + rng.uniform(0, 1e-5)
+        out.append(OpSample("prefill", t, c, dur))
+        b = float(rng.integers(1, 64))
+        out.append(OpSample("decode", b, c, 5e-4 + 1e-5 * b))
+    return out
+
+
+# ------------------------------------------------------------ latency fits
+def test_latency_fit_deterministic_and_calibrated():
+    s = _samples()
+    m1, m2 = LatencyModel(), LatencyModel()
+    m1.fit(s)
+    m2.fit(s)
+    for phase in ("prefill", "decode"):
+        assert np.array_equal(m1._w[phase], m2._w[phase])
+        cal = m1.calibration[phase]
+        assert cal["n"] > 0
+        assert np.isfinite(cal["mape"]) and 0.0 <= cal["mape"] < 5.0
+        assert np.isfinite(cal["p90_err"])
+    assert "overall" in m1.calibration
+    # near-linear ground truth: the interaction-feature fit is tight
+    assert m1.calibration["overall"]["mape"] < 0.1
+    p = m1.predict("prefill", 1024, 1024)
+    assert p is not None and p > 0
+    assert m1.predict("no_such_phase", 1, 1) is None
+
+
+def test_latency_quantile_shift_overpredicts():
+    s = _samples()
+    hi = LatencyModel(tau=0.9)
+    hi.fit(s)
+    y = np.array([x.duration_s for x in s if x.phase == "prefill"])
+    pred = np.array([hi.predict("prefill", x.tokens, x.ctx)
+                     for x in s if x.phase == "prefill"])
+    # tau=0.9: ~90% of training ops run no slower than predicted
+    assert (pred >= y).mean() >= 0.85
+    with pytest.raises(ValueError, match="tau"):
+        LatencyModel(tau=1.5)
+
+
+def test_invert_tokens_inverts_predict():
+    m = LatencyModel()
+    m.fit(_samples())
+    ctx = 2048.0
+    target = m.predict("prefill", 777.0, ctx)
+    toks = m.invert_tokens("prefill", target, ctx)
+    assert toks is not None
+    assert m.predict("prefill", toks, ctx) == pytest.approx(target, rel=1e-6)
+    assert m.invert_tokens("unfitted_phase", 0.1, ctx) is None
+
+
+def test_online_observe_tracks_errors():
+    m = LatencyModel()
+    m.fit(_samples())
+    r0 = m.report()
+    assert r0["n"] == 0 and "fit" in r0
+    m.observe("prefill", 512, 512, 10.0)   # gross under-prediction
+    m.observe("prefill", 512, 512, 1e-6)   # gross over-prediction
+    r = m.report()
+    assert r["n"] == 2 and r["over"] == 1 and r["under"] == 1
+    assert np.isfinite(r["mape"]) and np.isfinite(r["p90_err"])
+
+
+def test_serialization_round_trip():
+    m = LatencyModel(tau=0.5)
+    m.fit(_samples())
+    m2 = LatencyModel.from_dict(m.to_dict())
+    for t, c in ((64, 64), (1024, 2048), (4096, 8192)):
+        assert m2.predict("prefill", t, c) == m.predict("prefill", t, c)
+        assert m2.predict("decode", t, c) == m.predict("decode", t, c)
+    assert m2.calibration == m.calibration
+
+
+def test_fit_from_trace_events():
+    events = [
+        {"ph": "X", "name": "prefill:op", "dur": 1000.0,
+         "args": {"tokens": 256, "ctx": 256}},
+        {"ph": "X", "name": "prefill:op", "dur": 2000.0,
+         "args": {"tokens": 512, "ctx": 512}},
+        {"ph": "M", "name": "meta"},                      # ignored
+        {"ph": "X", "name": "decode:op", "dur": 500.0,
+         "args": {"tokens": 8, "ctx": 1024}},
+        {"ph": "X", "name": "prefill:op", "dur": 0.0,     # ignored (dur<=0)
+         "args": {"tokens": 64}},
+    ]
+    got = samples_from_events(events)
+    assert [s.phase for s in got] == ["prefill", "prefill", "decode"]
+    assert got[0].duration_s == pytest.approx(1e-3)   # us -> s
+    with pytest.raises(ValueError, match="no training samples"):
+        LatencyModel().fit([])
+
+
+# -------------------------------------------------------------- the sketch
+def test_quantile_sketch_monotone_under_streaming():
+    rng = np.random.default_rng(7)
+    sk = QuantileSketch(lo=1.0, hi=4096.0, bins=32)
+    stream = rng.lognormal(4.0, 1.0, size=500)
+    qs = np.linspace(0.05, 1.0, 20)
+    for i, x in enumerate(stream):
+        sk.update(float(x))
+        if i % 50 == 0:    # any prefix of the stream: monotone in q
+            vals = [sk.quantile(q) for q in qs]
+            assert all(a <= b for a, b in zip(vals, vals[1:]))
+    # conservative: never under-reports by more than one log-bin
+    assert sk.quantile(1.0) >= float(stream.max()) * 0.99
+    assert QuantileSketch().quantile(0.5) == 0.0   # empty
+
+
+def test_length_predictor_sharpens_per_key():
+    lp = LengthPredictor(min_count=4, default_len=100)
+    assert lp.predict("chat", "t0") == 100.0      # cold start
+    for _ in range(10):
+        lp.observe("chat", "t0", 32)
+        lp.observe("summarize", "t1", 2000)
+    short = lp.predict("chat", "t0")
+    long = lp.predict("summarize", "t1")
+    assert short < long
+    assert short >= 32                            # upper-edge conservative
+    # unseen key falls back to the global sketch, never 0
+    assert lp.predict("rag", "t9") > 0
+    r = lp.report()
+    assert r["n"] == 20 and r["keys"] == 2
+    lp.observe("chat", "t0", 0)                   # ignored
+    assert lp.report()["n"] == 20
+    with pytest.raises(ValueError, match="q must be"):
+        LengthPredictor(q=0.0)
+
+
+# -------------------------------------------------------------- registry
+def test_make_predictor_registry_contract():
+    names = list_predictors()
+    assert {"ridge_latency", "quantile_latency",
+            "length_quantile"} <= set(names)
+    with pytest.raises(ValueError, match="unknown predictor") as ei:
+        make_predictor("definitely_not_registered")
+    assert isinstance(ei.value, UnknownNameError)
+    assert "registered:" in str(ei.value)
+    with pytest.raises(TypeError, match="accepts knobs"):
+        make_predictor("ridge_latency", bogus_knob=1)
+    assert make_predictor("quantile_latency").tau == 0.9
+    assert make_predictor("length_quantile", q=0.9).q == 0.9

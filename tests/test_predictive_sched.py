@@ -1,0 +1,348 @@
+"""Predictive scheduling (v9): policies, wiring, and opt-in invariants.
+
+The contract under test, policy by policy:
+  * ``choose`` on the dispatch base class returns the FIFO head — the
+    hook exists for predictive policies, and NOT overriding it is
+    bit-identical to v8 dispatch by construction.
+  * ``predicted_sjf`` reorders ready prefills by predicted service,
+    bounded by ``max_wait_s`` starvation picks, and counts when the
+    learned model overturns the analytic estimate's choice.
+  * ``jbsq`` joins the shortest PREDICTED queue among instances under
+    the depth bound, stays work-conserving at the bound, and degrades
+    to least-loaded without predictors.
+  * ``predictive`` admission orders by priority-then-predicted-service,
+    sheds only predicted-real TTFT misses below the protected tier, and
+    defers admission on a predicted TPOT break.
+  * Prefix-aware KV gate: cached tokens shrink the admission KV need;
+    with no cache the check is the historical one, bit for bit.
+  * Tier tiebreaks only fire for policies that opt in via
+    ``wants_tier_ctx``; the defaults never see tier state.
+  * Cluster wiring is STRICTLY opt-in: a default deployment emits no
+    prediction telemetry and runs deterministically; adaptive chunking
+    without a latency predictor is a config error; the full stack
+    end-to-end learns (finite MAPE), decides (live counters), and
+    conserves KV — both drive modes.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.api import OpDescriptor, OpType, Phase
+from repro.predict import LatencyModel, LengthPredictor, OpSample
+from repro.sched import (AdmissionView, GatedAdmission, JBSQPolicy,
+                         PredictedSJFPolicy, PredictiveAdmission,
+                         RouteContext, make_policy)
+from repro.serving.request import SLO, Request
+
+from conftest import drive_modes
+
+
+def _fitted_latency(prefill_per_token=1e-5, decode_per_seq=1e-4):
+    """A latency model fitted on exactly-linear synthetic timings, so unit
+    tests can reason about which op/instance SHOULD win."""
+    samples = []
+    for t in (64, 128, 256, 512, 1024, 2048, 4096):
+        samples.append(OpSample("prefill", t, t, prefill_per_token * t))
+    for b in (1, 2, 4, 8, 16, 32, 64):
+        samples.append(OpSample("decode", b, 1024, decode_per_seq * b))
+    m = LatencyModel()
+    m.fit(samples)
+    return m
+
+
+def _op(tokens, enq=0.0, phase=Phase.PREFILL, est=None):
+    meta = {"tokens": tokens, "ctx": tokens}
+    if est is not None:
+        meta["est_duration"] = est
+    return OpDescriptor(op=OpType.LAUNCH, phase=phase, meta=meta,
+                        enqueue_time=enq)
+
+
+class FakeInst:
+    def __init__(self, name, load=0.0, waiting=(), prefilling=(),
+                 active=(), decode_pending=()):
+        self.name = name
+        self._load = load
+        self.failed = False
+        self.ewma_step = 0.0
+        self.prefill_waiting = list(waiting)
+        self.prefilling = {i: r for i, r in enumerate(prefilling)}
+        self.active = list(active)
+        self.decode_pending = list(decode_pending)
+
+    def load(self):
+        return self._load
+
+
+# =====================================================================
+# Dispatch: the choose() hook and predicted-SJF
+# =====================================================================
+
+def test_choose_default_is_fifo_head():
+    from repro.sched import DispatchPolicy, FIFOPolicy
+    ops = [_op(4096), _op(64)]
+    for pol in (FIFOPolicy(), make_policy("fifo"),
+                make_policy("dynamic_pd")):
+        assert isinstance(pol, DispatchPolicy)
+        assert pol.choose(ops, None) is ops[0]
+
+
+def test_predicted_sjf_reorders_and_bounds_starvation():
+    p = make_policy("predicted_sjf", max_wait_s=0.25)
+    assert isinstance(p, PredictedSJFPolicy)
+    p.bind_predictor(latency=_fitted_latency())
+    import types
+    ctx = types.SimpleNamespace(now=0.1)
+    big, small = _op(4096, enq=0.0), _op(64, enq=0.05)
+    assert p.choose([big, small], ctx) is small       # SJF pick
+    assert p.reordered == 1
+    assert p.choose([small, big], ctx) is small       # already shortest
+    assert p.reordered == 1
+    # decode ops are never reordered (phase selection is the daemon's)
+    d = _op(8, phase=Phase.DECODE)
+    assert p.choose([d, _op(1, phase=Phase.DECODE)], ctx) is d
+    # starvation bound: the big op has now waited past max_wait_s
+    ctx.now = 0.3
+    assert p.choose([big, small], ctx) is big
+    assert p.starvation_picks == 1
+    st = p.debug_state()
+    assert st["sjf_reordered"] == 1 and st["sjf_starvation_picks"] == 1
+
+
+def test_predicted_sjf_counts_overturned_estimates():
+    # model says op A is cheap; the analytic estimate says B is — every
+    # disagreement is visible in the counter
+    p = PredictedSJFPolicy()
+    p.bind_predictor(latency=_fitted_latency())
+    import types
+    ctx = types.SimpleNamespace(now=0.0)
+    a, b = _op(64, est=9.0), _op(4096, est=1e-9)
+    assert p.choose([a, b], ctx) is a
+    assert p.overturned == 1
+    # unbound: falls back to the estimates themselves (perfect-model SJF)
+    q = PredictedSJFPolicy()
+    assert q.choose([a, b], ctx) is b
+    assert q.overturned == 0
+
+
+# =====================================================================
+# Cluster routing: JBSQ and tier tiebreaks
+# =====================================================================
+
+def test_jbsq_joins_shortest_predicted_queue():
+    p = make_policy("jbsq", bound=3)
+    assert isinstance(p, JBSQPolicy)
+    p.bind_predictor(latency=_fitted_latency(), length=None)
+    # A queues one monster prompt, B queues three small ones: request
+    # counting picks A's depth-1 queue; predicted work picks B
+    mk = lambda n: Request(prompt_len=n, max_new_tokens=8)
+    a = FakeInst("A", load=1.0, waiting=[mk(8192)])
+    b = FakeInst("B", load=3.0, waiting=[mk(64), mk(64)],
+                 prefilling=[mk(64)])
+    # B sits AT the bound (depth 3): only A qualifies
+    assert p.route_prefill(mk(128), [a, b]) is a
+    # raise the bound: predicted work now dominates and B wins despite
+    # deeper queue and higher load
+    p2 = JBSQPolicy(bound=8)
+    p2.bind_predictor(latency=_fitted_latency())
+    assert p2.route_prefill(mk(128), [a, b]) is b
+    assert p2.debug_state()["jbsq_predicted_routes"] == 1
+    # every instance at the bound: work-conserving, not a rejection
+    p3 = JBSQPolicy(bound=1)
+    p3.bind_predictor(latency=_fitted_latency())
+    assert p3.route_prefill(mk(128), [a, b]) is not None
+    assert p3.bound_exceeded == 1
+    # unbound model: least-loaded fallback
+    p4 = JBSQPolicy()
+    assert p4.route_prefill(mk(128), [a, b]) is a
+    assert p4.debug_state()["jbsq_fallback_routes"] == 1
+
+
+def test_jbsq_decode_joins_least_predicted_outstanding():
+    lp = LengthPredictor(min_count=1, default_len=64)
+    for _ in range(4):
+        lp.observe("chat", "", 16)
+        lp.observe("summarize", "", 2048)
+    p = JBSQPolicy()
+    p.bind_predictor(length=lp)
+    chat = Request(prompt_len=64, max_new_tokens=4096, prompt_class="chat")
+    summ = Request(prompt_len=64, max_new_tokens=4096,
+                   prompt_class="summarize")
+    # A holds two near-done summarize jobs? No — two fresh ones: huge
+    # predicted outstanding.  B holds four chats: tiny outstanding.
+    a = FakeInst("A", load=2.0, active=[summ, summ])
+    b = FakeInst("B", load=4.0, active=[chat, chat, chat, chat])
+    assert p.route_decode(chat, None, [a, b]) is b
+    # without a length model: load decides and A wins
+    p2 = JBSQPolicy()
+    assert p2.route_decode(chat, None, [a, b]) is a
+
+
+def test_tier_tiebreak_only_for_opted_in_policies():
+    from repro.sched.cluster import (INTERACTIVE_PRIORITY, LeastLoadedPolicy,
+                                     _tier_penalty)
+    a, b = FakeInst("A", load=1.0), FakeInst("B", load=1.0)
+    tiers = RouteContext(tier_active={"A": 3, "B": 0},
+                         priority=INTERACTIVE_PRIORITY)
+    # interactive request: pack toward the interactive instance
+    assert _tier_penalty(tiers, "A") < _tier_penalty(tiers, "B")
+    lc = make_policy("least_contended")
+    assert lc.wants_tier_ctx
+    assert lc.route_prefill(None, [a, b], tiers) is a
+    # batch request: avoid the interactive instance
+    batch = RouteContext(tier_active={"A": 3, "B": 0}, priority=0)
+    assert lc.route_prefill(None, [a, b], batch) is b
+    # prefix_affinity breaks its load ties the same way
+    pa = make_policy("prefix_affinity")
+    assert pa.wants_tier_ctx
+    assert pa.route_prefill(None, [a, b], tiers) is a
+    # the default router never opted in — and a missing/empty context is
+    # a no-op penalty, so untouched callers are bit-identical
+    assert not getattr(LeastLoadedPolicy, "wants_tier_ctx", False)
+    assert _tier_penalty(None, "A") == 0.0
+    assert _tier_penalty(RouteContext(), "A") == 0.0
+
+
+# =====================================================================
+# Admission: prefix-aware gate and the predictive policy
+# =====================================================================
+
+def _view(**kw):
+    base = dict(waiting=1, next_prompt_len=1024, active=0, decode_pending=0,
+                prefilling=0, max_num_seqs=8, kv_free=None)
+    base.update(kw)
+    return AdmissionView(**base)
+
+
+def test_gated_admission_prefix_aware_kv_gate():
+    g = GatedAdmission()
+    # historical check, bit for bit, when nothing is cached
+    assert not g.admit(_view(kv_free=1000))
+    assert g.admit(_view(kv_free=1024))
+    # cached prefix: only the remainder needs room
+    assert g.admit(_view(kv_free=1000, next_cached_tokens=64))
+    assert not g.admit(_view(kv_free=63, next_cached_tokens=960))
+
+
+def test_predictive_admission_orders_sheds_and_defers():
+    m = _fitted_latency(prefill_per_token=1e-3, decode_per_seq=1e-2)
+    p = make_policy("predictive", slack_factor=1.0, max_wait_s=10.0)
+    assert isinstance(p, PredictiveAdmission)
+    p.bind_predictor(latency=m, length=LengthPredictor())
+
+    def req(n, prio=0, ttft=np.inf, tpot=np.inf, at=0.0):
+        return Request(prompt_len=n, max_new_tokens=8, arrival_time=at,
+                       slo=SLO(ttft_s=ttft, tpot_s=tpot, priority=prio))
+
+    # strict priority first: the long priority-2 request beats short ones
+    # (Request.priority is the tier's SLO priority, read-only)
+    waiting = [req(4096, prio=2), req(64), req(32)]
+    assert p.pick_next(waiting) == 0
+    # within one level: shortest predicted service
+    waiting = [req(4096), req(64), req(512)]
+    assert p.pick_next(waiting) == 1
+    assert p.reordered == 1
+
+    # shed: ~4.1s of predicted priority-2 work is ordered ahead of a
+    # priority-0 request whose TTFT SLO is 1s -> predicted-real miss,
+    # doomed at admission time instead of after burning queue time
+    lng, doomed = req(4096, prio=2), req(512, ttft=1.0)
+    out = p.shed([lng, doomed], now=0.0)
+    assert out == [doomed] and p.shed_requests == 1
+    # protected tier never sheds
+    vip = req(512, prio=2, ttft=1e-6)
+    assert p.shed([lng, vip], now=0.0) == []
+    # no model bound -> no verdict, no shedding
+    blind = PredictiveAdmission()
+    assert blind.shed([lng, doomed], now=0.0) == []
+
+    # TPOT guard: decode step at batch 5 is ~50ms; a 10ms-TPOT candidate
+    # defers, a loose one admits
+    tight = req(64, tpot=0.010)
+    p.pick_next([tight])
+    assert not p.admit(_view(active=4, avg_context=1024))
+    assert p.tpot_deferrals == 1
+    loose = req(64, tpot=1.0)
+    p.pick_next([loose])
+    assert p.admit(_view(active=4, avg_context=1024))
+
+
+# =====================================================================
+# Cluster wiring: strict opt-in, config errors, end-to-end learning
+# =====================================================================
+
+def _deploy(**kw):
+    from repro.serving import deployment_dynamic
+    d = deployment_dynamic(total=96, instances=2)
+    for k, v in kw.items():
+        setattr(d, k, v)
+    return d
+
+
+def _workload(n=40):
+    from repro.traffic import make_traffic
+    return make_traffic("multi_turn", n=n, rate=80.0, conversations=4,
+                        seed=11)
+
+
+def test_default_config_has_no_prediction_surface():
+    from repro.configs import get_config
+    from repro.serving import Cluster, SimConfig
+    runs = []
+    for _ in range(2):
+        cl = Cluster(get_config("mixtral-8x7b"), _deploy(),
+                     sim_cfg=SimConfig(), drive="stepped", time_scale=0.01)
+        assert cl.latency_model is None and cl.length_model is None
+        for inst in cl.instances:
+            assert inst.chunk_adapter is None
+            assert inst.predict_observe is None
+        out = cl.run(_workload())
+        assert "prediction" not in out
+        runs.append((out["completed"],
+                     round(out["duration_s"], 12),
+                     round(out["ttft_p95_s"], 12),
+                     round(out["output_tokens_per_s"], 9)))
+    # deterministic: the opt-out path has no hidden state
+    assert runs[0] == runs[1]
+
+
+def test_adaptive_chunking_requires_latency_predictor():
+    from repro.configs import get_config
+    from repro.serving import Cluster
+    with pytest.raises(ValueError, match="adaptive_chunking"):
+        Cluster(get_config("mixtral-8x7b"), _deploy(adaptive_chunking=True))
+
+
+@pytest.mark.parametrize("drive", drive_modes())
+def test_predictive_stack_end_to_end(drive):
+    """Full v9 stack on real traffic: the bootstrap fit happens, online
+    observations accumulate with finite error, the length sketches key on
+    (class, tenant), decision counters are live, and KV conservation
+    holds."""
+    from repro.configs import get_config
+    from repro.serving import Cluster, SimConfig
+    cl = Cluster(
+        get_config("mixtral-8x7b"),
+        _deploy(dispatch_policy="predicted_sjf", cluster_policy="jbsq",
+                admission_policy="predictive",
+                latency_predictor="ridge_latency",
+                length_predictor="length_quantile",
+                adaptive_chunking=True),
+        sim_cfg=SimConfig(prefill_window=4),
+        drive=drive, time_scale=0.01)
+    assert cl.latency_model is not None and cl.latency_model.fitted
+    out = cl.run(_workload(n=40))
+    cl.check_kv_conservation()
+    assert out["completed"] + out["rejected"] == 40
+    pred = out["prediction"]
+    lat, lng = pred["latency"], pred["length"]
+    assert lat["n"] > 0 and np.isfinite(lat["mape"])
+    assert 0.0 <= lat["fit"]["overall"]["mape"] < 5.0
+    assert lng["n"] == out["completed"]
+    assert lng["keys"] >= 1
+    dec = pred["decisions"]
+    assert dec["chunk_decisions"] > 0
+    assert all(k in dec for k in ("reordered", "starvation_picks",
+                                  "overturned", "bound_exceeded",
+                                  "tpot_deferrals"))

@@ -288,32 +288,23 @@ def test_registries_unified_error_contract(kind, factory):
 
 
 # =====================================================================
-# route_prefill v5 -> v6 (tentpole API redesign)
+# route_prefill v5 -> v6 adapter: REMOVED in v9 (one-release window over)
 # =====================================================================
 
-def test_legacy_two_arg_route_prefill_adapter():
-    from repro.sched import RouteContext, dispatch_route_prefill
-
-    class LegacyPolicy:
-        def route_prefill(self, req, pool):       # v5 signature
-            return pool[0]
-
-    class ModernPolicy:
-        def route_prefill(self, req, pool, ctx=None):
-            return (pool[0], ctx)
-
-    pool = ["i0"]
-    ctx = RouteContext(now=1.0)
-    legacy = LegacyPolicy()
-    with pytest.warns(DeprecationWarning, match="two-argument signature"):
-        assert dispatch_route_prefill(legacy, None, pool, ctx) == "i0"
-    # verdict is cached: no second warning
-    import warnings as _w
-    with _w.catch_warnings():
-        _w.simplefilter("error")
-        assert dispatch_route_prefill(legacy, None, pool, ctx) == "i0"
-        got = dispatch_route_prefill(ModernPolicy(), None, pool, ctx)
-    assert got == ("i0", ctx)
+def test_two_arg_route_prefill_adapter_removed():
+    """The v5 two-argument compatibility adapter is gone: neither the
+    package nor the defining module exports ``dispatch_route_prefill``
+    anymore, and the layering linter bans re-importing it (the ban-list
+    is what keeps an expired shim from quietly returning)."""
+    import repro.sched
+    import repro.sched.cluster
+    assert not hasattr(repro.sched, "dispatch_route_prefill")
+    assert not hasattr(repro.sched.cluster, "dispatch_route_prefill")
+    assert "dispatch_route_prefill" not in repro.sched.__all__
+    from repro.analysis.layering import BANNED_FROM_IMPORTS
+    assert ("repro.sched", "dispatch_route_prefill") in BANNED_FROM_IMPORTS
+    assert ("repro.sched.cluster",
+            "dispatch_route_prefill") in BANNED_FROM_IMPORTS
 
 
 def test_prefix_affinity_policy_unit():
